@@ -1,0 +1,43 @@
+"""E7 — checkpoint storm: writer-lane hotspot with static hash vs MIDAS
+power-of-d lane scheduling (and real end-to-end save/restore timing)."""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.ckpt import CheckpointManager, WriterPool
+
+
+def run() -> None:
+    # scheduling-only storm (nothing drains): worst-lane backlog
+    probe = WriterPool(4, policy="hash")
+    first = probe.assign("giant0", 0)
+    twin = next(f"giant{i}" for i in range(1, 64)
+                if probe.assign(f"giant{i}", 0) == first)
+    GIANT = 200 << 20
+    worst = {}
+    for policy in ("round_robin", "hash", "midas"):
+        pool = WriterPool(4, policy=policy)
+        pool.assign("giant0", GIANT)
+        pool.assign(twin, GIANT)
+        for i in range(64):
+            pool.assign(f"leaf{i}", 4 << 20)
+        worst[policy] = max(pool._backlog) / (1 << 20)
+    emit("ckpt/storm_worst_lane_mb", 0.0,
+         ";".join(f"{p}={v:.0f}" for p, v in worst.items())
+         + f";midas_vs_hash=-{(1 - worst['midas'] / worst['hash']) * 100:.0f}%")
+
+    # real end-to-end save + restore
+    rng = np.random.default_rng(0)
+    tree = {f"layer{i}": {"w": rng.normal(size=(256, 256)).astype(np.float32)}
+            for i in range(24)}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, lanes=4)
+        _, us_save = timed(cm.save, 1, tree)
+        _, us_restore = timed(cm.restore, 1, tree)
+        nbytes = 24 * 256 * 256 * 4
+        emit("ckpt/save", us_save,
+             f"{nbytes / max(us_save, 1):.0f}MB_per_s_x1e-0")
+        emit("ckpt/restore", us_restore, "crc32-verified")

@@ -1,0 +1,23 @@
+"""Benchmark harness helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    """Run fn, return (result, us_per_call) — first call includes compile,
+    so time the SECOND call when repeat > 1."""
+    out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks (CPU jnp paths; Pallas timings are TPU-only —
+the interpret-mode run here is a correctness-costed proxy, noted as such)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.kernels.midas_route import ref as mr_ref
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, KV, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, KV, D), jnp.bfloat16)
+    mha = jax.jit(lambda q, k, v: fa_ref.mha(q, k, v))
+    _, us = timed(lambda: jax.block_until_ready(mha(q, k, v)), repeat=3)
+    flops = 4 * B * S * S * H * D
+    emit("kernel/attention_ref_cpu", us, f"gflops={flops / us / 1e3:.1f}")
+
+    Bt, S2, DI, ST = 2, 1024, 256, 16
+    x = jax.random.normal(key, (Bt, S2, DI))
+    dt = jax.nn.softplus(jax.random.normal(key, (Bt, S2, DI)))
+    A = -jnp.exp(jax.random.normal(key, (DI, ST)) * 0.5)
+    Bm = jax.random.normal(key, (Bt, S2, ST))
+    Cm = jax.random.normal(key, (Bt, S2, ST))
+    Dm = jnp.ones((DI,))
+    for impl in ("jnp_chunked", "parallel"):
+        f = jax.jit(lambda *a: ssm_ops.selective_scan(*a, chunk=128,
+                                                      impl=impl))
+        _, us = timed(lambda: jax.block_until_ready(
+            f(x, dt, A, Bm, Cm, Dm)[0]), repeat=3)
+        emit(f"kernel/ssm_{impl}", us, f"S={S2};DI={DI}")
+
+    T, E, kk = 4096, 128, 8
+    logits = jax.random.normal(key, (T, E))
+    load = jnp.abs(jax.random.normal(key, (E,))) * 3
+    f = jax.jit(lambda l, ld: mr_ref.midas_dispatch(l, ld, kk, 4,
+                                                    f_max=1.0))
+    _, us = timed(lambda: jax.block_until_ready(f(logits, load)[0]),
+                  repeat=3)
+    emit("kernel/midas_route_ref", us, f"T={T};E={E};k={kk}")

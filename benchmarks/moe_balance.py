@@ -1,0 +1,54 @@
+"""E6 — MIDAS at the MoE layer: token drop rate and expert-load dispersion,
+vanilla top-k vs MIDAS power-of-d dispatch, under skewed gate logits
+(the metadata-hotspot analogue)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.midas_route import ref as route
+
+
+def _skewed_logits(key, T, E, hot=4, bias=2.0):
+    base = jax.random.normal(key, (T, E))
+    return base.at[:, :hot].add(bias)    # a few 'hot directory' experts
+
+
+def run() -> None:
+    T, E, k = 8192, 64, 8
+    key = jax.random.PRNGKey(0)
+    logits = _skewed_logits(key, T, E)
+
+    (e_van, _), us_v = timed(route.topk_dispatch, logits, k, repeat=3)
+    load_v = route.expert_load(e_van, E)
+    cv_v = float(jnp.std(load_v) / jnp.mean(load_v))
+
+    # EWMA telemetry converges over steps; emulate 5 steps
+    load = jnp.ones((E,))
+    for i in range(5):
+        e_mid, _, steered = route.midas_dispatch(
+            _skewed_logits(jax.random.fold_in(key, i), T, E), load, k, d=4,
+            delta_l=2.0, f_max=0.25)
+        load = 0.8 * load + 0.2 * route.expert_load(e_mid, E)
+    (e_mid, _, steered), us_m = timed(
+        route.midas_dispatch, logits, load, k, 4, delta_l=2.0, f_max=0.25,
+        repeat=3)
+    load_m = route.expert_load(e_mid, E)
+    cv_m = float(jnp.std(load_m) / jnp.mean(load_m))
+
+    def drop_rate(experts, cf=1.25):
+        C = int(np.ceil(k * T / E * cf))
+        flat = np.asarray(experts).reshape(-1)
+        counts = np.bincount(flat, minlength=E)
+        return float(np.maximum(counts - C, 0).sum() / flat.size)
+
+    emit("moe/topk", us_v,
+         f"load_cv={cv_v:.3f};drop_rate={drop_rate(e_van):.4f}")
+    emit("moe/midas", us_m,
+         f"load_cv={cv_m:.3f};drop_rate={drop_rate(e_mid):.4f};"
+         f"steer_rate={float(steered.mean()):.3f}")
+    emit("moe/improvement", 0.0,
+         f"load_cv -{(1 - cv_m / max(cv_v, 1e-9)) * 100:.0f}%;"
+         f"drops -{(1 - drop_rate(e_mid) / max(drop_rate(e_van), 1e-9)) * 100:.0f}%")

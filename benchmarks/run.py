@@ -1,0 +1,46 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes artifacts
+under experiments/.  E-numbers refer to DESIGN.md §6.
+
+  PYTHONPATH=src python -m benchmarks.run [--only paper,theory,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SECTIONS = {
+    "paper": "benchmarks.paper_claims",        # E1+E2 (Fig 3/4 + §VI table)
+    "theory": "benchmarks.theory",             # E3
+    "control": "benchmarks.control_stability",  # E4
+    "cache": "benchmarks.cache",               # E5
+    "moe": "benchmarks.moe_balance",           # E6
+    "ckpt": "benchmarks.ckpt_storm",           # E7
+    "serving": "benchmarks.serving",
+    "kernels": "benchmarks.kernels_bench",
+    "ablations": "benchmarks.ablations",       # §IV-E stability guards
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SECTIONS))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in names:
+        mod = __import__(SECTIONS[name], fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:   # pragma: no cover
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+    print(f"# total {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

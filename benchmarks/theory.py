@@ -1,0 +1,19 @@
+"""E3 — §V theory: balls-into-bins max-load gaps and M/M/1 latency."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import theory
+
+
+def run() -> None:
+    m = 256
+    for d in (1, 2, 4):
+        (gap, std), us = timed(theory.maxload_gap_empirical,
+                               n_balls=m, m=m, d=d, trials=30)
+        pred = (theory.uniform_maxload_gap_theory(m) if d == 1
+                else theory.power_of_d_maxload_gap_theory(m, d))
+        emit(f"theory/maxload_d{d}", us,
+             f"gap={gap:.2f};theory={pred:.2f}")
+    emit("theory/mm1", 0.0,
+         f"E[T](lam=5,mu=10)={theory.mm1_latency(5, 10):.3f}s"
+         f";E[T](9,10)={theory.mm1_latency(9, 10):.3f}s")

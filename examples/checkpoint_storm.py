@@ -1,0 +1,44 @@
+"""Checkpoint-storm demo: a real multi-GB-scale (scaled down for CPU)
+model state is dumped through 4 writer lanes; MIDAS lane scheduling vs
+static hash shows the paper's hotspot mitigation end-to-end, including
+restart from the produced checkpoint.
+
+  PYTHONPATH=src python examples/checkpoint_storm.py
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.config import RunConfig, get_smoke_arch
+from repro.train.step import init_train_state
+
+
+def main() -> None:
+    cfg = get_smoke_arch("dbrx-132b")     # MoE: skewed leaf sizes
+    run = RunConfig(arch="dbrx-132b")
+    state = init_train_state(cfg, run, jax.random.PRNGKey(0))
+
+    for policy in ("hash", "midas"):
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d, lanes=4, policy=policy)
+            t0 = time.monotonic()
+            cm.save(1, state)
+            dt = time.monotonic() - t0
+            import json
+            manifest = json.loads(
+                (cm.root / "step_00000001" / "manifest.json").read_text())
+            lanes = np.asarray(manifest["lane_bytes"], np.float64)
+            print(f"{policy:6s}: save {dt * 1e3:6.0f} ms  "
+                  f"lane_bytes={np.round(lanes / 1e6, 2)}MB  "
+                  f"cv={lanes.std() / lanes.mean():.3f}")
+            # restart path: restore + checksum verify
+            step, restored = cm.restore_latest(state)
+            assert step == 1
+            print(f"        restored step {step} OK (crc32 verified)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end training driver: data pipeline -> jit train step ->
+async MIDAS-scheduled checkpoints -> kill/resume, on any assigned arch.
+
+Default: a ~100M-parameter llama-family model (SmolLM-360M at reduced
+depth) for a few hundred steps on CPU.  Use --arch/--full-config to select
+any of the 10 assigned architectures (full configs want the production
+mesh; reduced configs run anywhere).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+  PYTHONPATH=src python examples/train_lm.py --arch dbrx-132b --steps 50
+"""
+import argparse
+import dataclasses
+
+from repro.config import RunConfig, get_arch, get_smoke_arch
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--hundred-m", action="store_true",
+                    help="scale the smoke config up to ~100M params")
+    ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    if args.full_config:
+        cfg = get_arch(args.arch)
+    else:
+        cfg = get_smoke_arch(args.arch)
+        if args.hundred_m:
+            # ~100M llama-family: 12 x 768 with the arch's own flavor
+            cfg = dataclasses.replace(
+                cfg, num_layers=12, d_model=768, num_heads=12,
+                num_kv_heads=4, d_ff=2048, head_dim=64, vocab_size=32000)
+    n = cfg.n_params()
+    print(f"arch={cfg.name} params={n / 1e6:.1f}M steps={args.steps}")
+    run = RunConfig(arch=args.arch)
+    tc = TrainerConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                       log_every=10)
+    state = Trainer(cfg, run, tc).train()
+    print(f"finished at step {int(state.step)}; checkpoints in "
+          f"{args.ckpt_dir} (re-run to resume)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+from repro.config import RunConfig, MeshConfig
+from repro.launch.dryrun import run_cell
+
+which = sys.argv[1]
+mesh = MeshConfig(multi_pod=False)
+
+def show(r, label):
+    rf = r["roofline"]
+    print(f"{label}: comp={rf['compute_s']:.3f}s mem={rf['memory_s']:.3f}s "
+          f"coll={rf['collective_s']:.3f}s dom={rf['dominant']} "
+          f"useful={rf['useful_flops_ratio']*100:.1f}% "
+          f"state={r['state_bytes_per_device']/1e9:.2f}GB", flush=True)
+
+if which == "hc1a":  # qwen3 + shard_map MoE dispatch (default path now)
+    r = run_cell("qwen3-moe-235b-a22b", "train_4k", False, force=True,
+                 tag="hc1a_shardmap")
+    show(r, "hc1a qwen3 train shard_map")
+elif which == "hc1b":  # + expert-resident (no FSDP on expert weights)
+    run = RunConfig(arch="qwen3-moe-235b-a22b", shape="train_4k", mesh=mesh,
+                    sharding_rules="train_ep_resident")
+    r = run_cell("qwen3-moe-235b-a22b", "train_4k", False, force=True,
+                 run=run, tag="hc1b_epresident")
+    show(r, "hc1b qwen3 train shard_map+ep_resident")
+elif which == "hc2a":  # smollm prefill with head_dim TP
+    run = RunConfig(arch="smollm-360m", shape="prefill_32k", mesh=mesh,
+                    sharding_rules="serve_hd")
+    r = run_cell("smollm-360m", "prefill_32k", False, force=True,
+                 run=run, tag="hc2a_hd")
+    show(r, "hc2a smollm prefill head_dim TP")
+elif which == "hc3a":  # dbrx decode with cache_seq over model
+    run = RunConfig(arch="dbrx-132b", shape="decode_32k", mesh=mesh,
+                    sharding_rules="serve_kvseq")
+    r = run_cell("dbrx-132b", "decode_32k", False, force=True,
+                 run=run, tag="hc3a_kvseq")
+    show(r, "hc3a dbrx decode kvseq")
+if which == "hc2b":  # smollm prefill with context parallelism
+    run = RunConfig(arch="smollm-360m", shape="prefill_32k", mesh=mesh,
+                    sharding_rules="serve_seq")
+    r = run_cell("smollm-360m", "prefill_32k", False, force=True,
+                 run=run, tag="hc2b_seq")
+    show(r, "hc2b smollm prefill context-parallel")
+if which == "hc1c":  # shard_map + no remat (recompute re-runs collectives)
+    run = RunConfig(arch="qwen3-moe-235b-a22b", shape="train_4k", mesh=mesh,
+                    remat_policy="none")
+    r = run_cell("qwen3-moe-235b-a22b", "train_4k", False, force=True,
+                 run=run, tag="hc1c_noremat")
+    show(r, "hc1c qwen3 train shard_map+noremat")
+if which == "hc3b":  # weight-stationary MoE decode
+    run = RunConfig(arch="dbrx-132b", shape="decode_32k", mesh=mesh,
+                    sharding_rules="serve_decode_moe")
+    r = run_cell("dbrx-132b", "decode_32k", False, force=True,
+                 run=run, tag="hc3b_fres")
+    show(r, "hc3b dbrx decode weight-stationary moe")

@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import CheckpointManager  # noqa: F401
+from repro.ckpt.midas_writer import WriterPool  # noqa: F401

@@ -1,0 +1,154 @@
+"""Sharded, fault-tolerant checkpointing (no external deps).
+
+Layout:  <root>/step_<N>/
+           manifest.json     — leaf paths, shapes, dtypes, crc32, lane
+           lane<k>/<idx>.npy — tensor payloads, one file per leaf
+
+Properties needed at 1000-node scale, all implemented here:
+  * atomicity      — writes go to step_<N>.tmp, fsync'd, then renamed;
+                     a crashed save can never be mistaken for a complete
+                     checkpoint (restore only trusts manifests).
+  * integrity      — per-leaf crc32 verified on load.
+  * async          — save returns a future; writer lanes run in threads
+                     (the GIL is released inside np.save's IO).
+  * elasticity     — restore is topology-agnostic: leaves are loaded by
+                     name and re-placed under ANY mesh/sharding, so a job
+                     can restart on a different pod count.
+  * storm control  — leaf→lane assignment uses the MIDAS power-of-d
+                     policy on live lane backlog (see midas_writer.py);
+                     checkpoint storms are the paper's headline scenario.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from concurrent.futures import Future, ThreadPoolExecutor
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.ckpt.midas_writer import WriterPool
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, lanes: int = 4, keep: int = 3,
+                 policy: str = "midas"):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.lanes = lanes
+        self.keep = keep
+        self.policy = policy
+        self._exec = ThreadPoolExecutor(max_workers=1)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, blocking: bool = True
+             ) -> Optional[Future]:
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        if blocking:
+            self._save(step, host_tree)
+            return None
+        return self._exec.submit(self._save, step, host_tree)
+
+    def _save(self, step: int, host_tree) -> None:
+        final = self.root / f"step_{step:08d}"
+        tmp = self.root / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+
+        leaves = _flatten(host_tree)
+        pool = WriterPool(self.lanes, policy=self.policy)
+        manifest: Dict[str, Any] = {"step": step, "leaves": {}}
+        for idx, (name, arr) in enumerate(leaves):
+            lane = pool.assign(name, int(arr.nbytes))
+            lane_dir = tmp / f"lane{lane}"
+            lane_dir.mkdir(exist_ok=True)
+            fname = f"lane{lane}/{idx}.npy"
+            manifest["leaves"][name] = {
+                "file": fname,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+                "lane": lane,
+            }
+            pool.submit(lane, tmp / fname, arr)
+        pool.join()
+        manifest["lane_bytes"] = pool.lane_bytes()
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        with open(tmp / "manifest.json", "rb") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for p in self.root.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "manifest.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree):
+        """Restore into the STRUCTURE of target_tree (shapes verified,
+        checksums checked).  Device placement / sharding is the caller's
+        choice — re-shard freely on a different topology."""
+        d = self.root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        names = dict(_flatten(target_tree))
+        out = {}
+        for name, meta in manifest["leaves"].items():
+            arr = np.load(d / meta["file"])
+            if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != \
+                    meta["crc32"]:
+                raise IOError(f"checksum mismatch for {name}")
+            if name in names and tuple(arr.shape) != tuple(
+                    np.shape(names[name])):
+                raise ValueError(
+                    f"shape mismatch for {name}: ckpt {arr.shape} vs "
+                    f"target {np.shape(names[name])}")
+            out[name] = arr
+        missing = set(n for n, _ in _flatten(target_tree)) - set(out)
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {sorted(missing)}")
+
+        leaves_meta, treedef = jax.tree_util.tree_flatten_with_path(
+            target_tree)
+        vals = []
+        for path, _ in leaves_meta:
+            name = "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            vals.append(out[name])
+        return jax.tree_util.tree_unflatten(treedef, vals)
+
+    def restore_latest(self, target_tree):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target_tree)

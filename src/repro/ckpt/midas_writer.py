@@ -1,0 +1,95 @@
+"""MIDAS-scheduled checkpoint writer lanes.
+
+Checkpoint storms are the paper's motivating scenario: thousands of ranks
+dump state at once and a few I/O paths melt.  Here every tensor write is a
+"request", writer lanes are the "servers", and lane assignment uses the
+paper's policy: consistent-hash primary (stable leaf→lane affinity across
+checkpoints => file locality) refined by power-of-d on live lane backlog
+with the Δ_L margin (in bytes) — identical structure to core/routing.py,
+applied host-side.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import zlib
+from pathlib import Path
+from typing import List
+
+import numpy as np
+
+from repro.core.hashring import hash2
+
+DELTA_L_BYTES = 1 << 20       # steer only when >= 1 MiB lighter
+
+
+class WriterPool:
+    def __init__(self, lanes: int, policy: str = "midas", d: int = 3):
+        assert policy in ("midas", "round_robin", "hash")
+        self.n = lanes
+        self.policy = policy
+        self.d = max(1, min(d, 4))    # paper's d range
+        self._backlog = [0] * lanes          # queued bytes per lane
+        self._written = [0] * lanes
+        self._rr = 0
+        self._queues: List[queue.Queue] = [queue.Queue() for _ in range(lanes)]
+        self._threads = [threading.Thread(target=self._worker, args=(i,),
+                                          daemon=True)
+                         for i in range(lanes)]
+        self._lock = threading.Lock()
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------ scheduling
+    def assign(self, name: str, nbytes: int) -> int:
+        if self.policy == "round_robin":
+            lane = self._rr % self.n
+            self._rr += 1
+        else:
+            key = zlib.crc32(name.encode())      # deterministic across runs
+            primary = int(hash2(np.uint32(key), np.uint32(13))) % self.n
+            lane = primary
+            if self.policy == "midas" and self.n > 1:
+                # power-of-d: sample d-1 alternates, steer on byte margin
+                with self._lock:
+                    alts = [int(hash2(np.uint32((key + i + 1)
+                                                & 0xFFFFFFFF),
+                                      np.uint32(29))) % self.n
+                            for i in range(self.d - 1)]
+                    best = min(alts, key=lambda a: self._backlog[a])
+                    if (self._backlog[primary] - self._backlog[best]
+                            >= DELTA_L_BYTES):
+                        lane = best
+        with self._lock:
+            self._backlog[lane] += nbytes
+        return lane
+
+    # --------------------------------------------------------------- writing
+    def submit(self, lane: int, path: Path, arr: np.ndarray) -> None:
+        self._queues[lane].put((path, arr))
+
+    def _worker(self, lane: int) -> None:
+        q = self._queues[lane]
+        while True:
+            item = q.get()
+            if item is None:
+                return
+            path, arr = item
+            np.save(path, arr)
+            with self._lock:
+                self._backlog[lane] -= arr.nbytes
+                self._written[lane] += arr.nbytes
+            q.task_done()
+
+    def join(self) -> None:
+        for q in self._queues:
+            q.join()
+
+    def lane_bytes(self) -> List[int]:
+        return list(self._written)
+
+    def dispersion(self) -> float:
+        w = np.asarray(self._written, np.float64)
+        if w.mean() <= 0:
+            return 0.0
+        return float(w.std() / w.mean())

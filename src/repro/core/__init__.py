@@ -1,0 +1,8 @@
+# The paper's primary contribution: adaptive proxy middleware for metadata
+# hotspot mitigation — namespace-aware power-of-d routing over consistent
+# hashing, cooperative caching with leases/adaptive TTLs, and a
+# self-stabilizing control loop.  All components are pure-JAX and reused by
+# the framework layers (MoE dispatch, checkpoint writers, serving router).
+from repro.core import cache, control, hashring, routing, sim, telemetry, theory, workloads  # noqa: F401
+from repro.core.sim import SimConfig, SimResult, simulate  # noqa: F401
+from repro.core.workloads import WORKLOADS, make_workload  # noqa: F401

@@ -1,0 +1,120 @@
+"""The MIDAS self-stabilizing control plane (paper §IV-E, Algorithm 1).
+
+Fast loop (every T_fast=250 ms): ingest telemetry, smooth with EWMA α=0.2,
+compute imbalance B and pressure
+    P = w1·[B − B_tgt]₊ + w2·[p̃99 − P99_tgt]₊,
+and under hysteresis (H↓=0.02 < H↑=0.10, K↑=3, K↓=8) move knobs in single
+bounded steps:  d ∈ {1..4},  Δ_L ∈ [Δ_L^min=2, Δ_L^max=8].
+
+Slow loop (every T_slow=30 s): retune per-class cache TTLs from the
+invalidation-hazard estimate (see cache.py).
+
+Targets come from a low-utilization warmup (§III-B):
+    B_tgt   = median_t B(t) + 0.05
+    P99_tgt = max(1.25 · p99_warm, RTT + 2 ms)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Paper defaults (Algorithm 1 lines 1–20)
+T_FAST_MS = 250.0
+T_SLOW_MS = 30_000.0
+D_INIT, D_MIN, D_MAX = 2, 1, 4
+DELTA_L_INIT, DELTA_L_MIN, DELTA_L_MAX = 4.0, 2.0, 8.0
+H_DOWN, H_UP = 0.02, 0.10
+K_UP, K_DOWN = 3, 8
+F_CAP = 0.10
+W_WINDOW_MS = 1000.0
+PIN_C_MS = 300.0
+W1, W2 = 1.0, 1.0
+EPS = 1e-6
+ALPHA_FAST = 0.2
+BETA_SLOW = 0.1
+
+
+class ControlState(NamedTuple):
+    d: jnp.ndarray            # () int32 in {1..4}
+    delta_l: jnp.ndarray      # () float32 in [2, 8]
+    delta_t: jnp.ndarray      # () float32 ms latency margin
+    f_max: jnp.ndarray        # () float32 steering cap
+    above_cnt: jnp.ndarray    # () int32 consecutive P > H_up
+    below_cnt: jnp.ndarray    # () int32 consecutive P < H_down
+    b_tgt: jnp.ndarray        # () float32
+    p99_tgt: jnp.ndarray      # () float32 ms
+    pressure: jnp.ndarray     # () float32 (last computed, for logging)
+
+
+def init_control(rtt_ms: float, b_tgt: float = 0.15,
+                 p99_tgt: float = 500.0) -> ControlState:
+    return ControlState(
+        d=jnp.asarray(D_INIT, jnp.int32),
+        delta_l=jnp.asarray(DELTA_L_INIT, jnp.float32),
+        delta_t=jnp.asarray(rtt_ms, jnp.float32),
+        f_max=jnp.asarray(F_CAP, jnp.float32),
+        above_cnt=jnp.zeros((), jnp.int32),
+        below_cnt=jnp.zeros((), jnp.int32),
+        b_tgt=jnp.asarray(b_tgt, jnp.float32),
+        p99_tgt=jnp.asarray(p99_tgt, jnp.float32),
+        pressure=jnp.zeros((), jnp.float32),
+    )
+
+
+def warmup_targets(B_series: jnp.ndarray, p99_warm: jnp.ndarray,
+                   rtt_ms: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """§III-B target selection from the warmup window."""
+    b_tgt = jnp.median(B_series) + 0.05
+    p99_tgt = jnp.maximum(p99_warm * 1.25, rtt_ms + 2.0)
+    return b_tgt, p99_tgt
+
+
+def pressure_score(B: jnp.ndarray, p99: jnp.ndarray,
+                   ctrl: ControlState) -> jnp.ndarray:
+    relu = lambda z: jnp.maximum(z, 0.0)
+    # p99 pressure normalized by target so both terms are O(1)
+    return (W1 * relu(B - ctrl.b_tgt)
+            + W2 * relu((p99 - ctrl.p99_tgt) / jnp.maximum(ctrl.p99_tgt, EPS)))
+
+
+def fast_update(ctrl: ControlState, B: jnp.ndarray, p99: jnp.ndarray,
+                rtt_ms: float, jitter: jnp.ndarray) -> ControlState:
+    """One fast-loop knob update (Alg. 1 lines 26–35).
+
+    ``jitter`` is uniform in [-1, 1]; applied as ±0.1·RTT on Δ_t to avoid
+    lockstep moves across proxies.
+    """
+    P = pressure_score(B, p99, ctrl)
+    above = jnp.where(P > H_UP, ctrl.above_cnt + 1, 0)
+    below = jnp.where(P < H_DOWN, ctrl.below_cnt + 1, 0)
+
+    go_up = above >= K_UP
+    go_down = below >= K_DOWN
+
+    d = jnp.where(go_up, jnp.minimum(ctrl.d + 1, D_MAX),
+                  jnp.where(go_down, jnp.maximum(ctrl.d - 1, D_MIN), ctrl.d))
+    delta_l = jnp.where(
+        go_up, jnp.maximum(ctrl.delta_l - 1.0, DELTA_L_MIN),
+        jnp.where(go_down, jnp.minimum(ctrl.delta_l + 1.0, DELTA_L_MAX),
+                  ctrl.delta_l))
+    # reset the counter that fired
+    above = jnp.where(go_up, 0, above)
+    below = jnp.where(go_down, 0, below)
+
+    delta_t = jnp.asarray(rtt_ms, jnp.float32) + 0.1 * rtt_ms * jitter
+
+    return ctrl._replace(d=d, delta_l=delta_l, delta_t=delta_t,
+                         above_cnt=above, below_cnt=below, pressure=P)
+
+
+def lyapunov_delta_v(L: jnp.ndarray, p: jnp.ndarray,
+                     j: jnp.ndarray) -> jnp.ndarray:
+    """ΔV for moving one request p→j:  2(L̂_j − L̂_p) + 2  (paper eq. 2)."""
+    return 2.0 * (L[j] - L[p]) + 2.0
+
+
+def lyapunov_potential(L: jnp.ndarray) -> jnp.ndarray:
+    """V(L̂) = Σ_i (L̂_i − L̄)²."""
+    return jnp.sum((L - jnp.mean(L)) ** 2)

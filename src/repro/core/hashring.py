@@ -1,0 +1,98 @@
+"""Consistent hashing with virtual nodes, fully vectorized in JAX.
+
+The middleware "consults the hash table already maintained by the MDS" —
+modeled as a consistent-hash ring with V virtual nodes per server.  The ring
+gives (i) a stable primary placement per key and (ii) the namespace-feasible
+set F(r): the next ``d_max`` *distinct* servers clockwise of the key's
+position (the standard replica-successor set, which is what keeps steering
+consistent with namespace locality).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer — deterministic uint32 mixing."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash2(a: jnp.ndarray, b) -> jnp.ndarray:
+    """Hash a pair of uint32s."""
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    return mix32(a ^ (mix32(b) + _GOLDEN + (a << 6) + (a >> 2)))
+
+
+class Ring(NamedTuple):
+    positions: jnp.ndarray   # (m*V,) uint32, sorted ring positions
+    owners: jnp.ndarray      # (m*V,) int32, owning server per position
+    m: int                   # number of servers
+    V: int                   # virtual nodes per server
+
+
+def make_ring(m: int, V: int = 64, salt: int = 0) -> Ring:
+    servers = jnp.repeat(jnp.arange(m, dtype=jnp.uint32), V)
+    replicas = jnp.tile(jnp.arange(V, dtype=jnp.uint32), m)
+    pos = hash2(servers * jnp.uint32(0x10001) + replicas,
+                jnp.uint32(salt + 1))
+    order = jnp.argsort(pos)
+    return Ring(positions=pos[order], owners=servers[order].astype(jnp.int32),
+                m=m, V=V)
+
+
+def key_position(keys: jnp.ndarray, salt: int = 0) -> jnp.ndarray:
+    return hash2(keys.astype(jnp.uint32), jnp.uint32(salt + 7919))
+
+
+def primary(ring: Ring, keys: jnp.ndarray) -> jnp.ndarray:
+    """Primary server for each key (first owner clockwise)."""
+    pos = key_position(keys)
+    idx = jnp.searchsorted(ring.positions, pos) % ring.positions.shape[0]
+    return ring.owners[idx]
+
+
+def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
+                 scan_width: int = 16) -> jnp.ndarray:
+    """F(r): the first ``d_max`` distinct servers clockwise of each key.
+
+    Returns (..., d_max) int32; entry 0 is the primary.  Scans
+    ``scan_width`` consecutive ring slots, keeps first occurrences, and (in
+    the degenerate case of fewer distinct owners than d_max within the
+    window) pads deterministically with (primary + i) mod m.
+    """
+    n = ring.positions.shape[0]
+    pos = key_position(keys)
+    base = jnp.searchsorted(ring.positions, pos) % n
+    offs = jnp.arange(scan_width, dtype=jnp.int32)
+    idx = (base[..., None] + offs) % n
+    cand = ring.owners[idx]                                   # (..., W)
+    # first-occurrence mask: cand[j] not among cand[:j]
+    eq = cand[..., None, :] == cand[..., :, None]             # (..., W, W)
+    lower = jnp.tril(jnp.ones((scan_width, scan_width), bool), k=-1)
+    seen_before = jnp.any(eq & lower, axis=-1)                # (..., W)
+    fresh = ~seen_before
+    # rank among fresh entries
+    rank = jnp.cumsum(fresh.astype(jnp.int32), axis=-1) - 1
+    rank = jnp.where(fresh, rank, scan_width)
+    out = jnp.full(keys.shape + (d_max,), -1, dtype=jnp.int32)
+    # scatter fresh candidates into their rank slot
+    take = jnp.where(rank[..., None] == jnp.arange(d_max), 1, 0)
+    out = jnp.max(jnp.where(take.astype(bool),
+                            cand[..., :, None],
+                            jnp.int32(-1)), axis=-2)
+    # pad any remaining -1 deterministically
+    pad = (out[..., :1] + jnp.arange(d_max, dtype=jnp.int32)) % ring.m
+    out = jnp.where(out < 0, pad, out)
+    return out

@@ -1,0 +1,351 @@
+"""Queue-network simulator for the MIDAS evaluation (paper §VI).
+
+m metadata servers, each a FIFO queue with constant 100 ms service time
+(the paper's stress bound).  Time advances in dt_ms ticks under
+``jax.lax.scan``; each tick routes a padded batch of requests with one of
+the policies in routing.py, applies service, refreshes (delayed) telemetry,
+and runs the fast/slow control loops on their paper cadences.
+
+Within a tick, requests are processed in ``n_groups`` sequential waves:
+every wave sees the stale EWMA telemetry *plus* the proxies' own
+assignments from earlier waves (a proxy knows what it already sent), which
+is the honest middle ground between full per-request sequencing and pure
+batch routing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+from repro.core import control as ctl
+from repro.core import hashring, routing, telemetry
+from repro.core.workloads import Workload
+
+POLICIES = ("round_robin", "rr_request", "uniform", "hash", "power_of_d",
+            "midas")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    m: int = 8                     # metadata servers
+    P: int = 8                     # independent proxies (RR phases)
+    N: int = 4096                  # namespace size (keys)
+    dt_ms: float = 50.0
+    service_ms: float = 100.0      # paper: constant 100 ms per RPC
+    policy: str = "midas"
+    d_max: int = 4
+    V: int = 64                    # virtual nodes per server
+    rtt_ms: float = 2.0
+    n_groups: int = 8              # routing waves per tick
+    cache_enabled: bool = False    # cooperative cache in front of routing
+    cache_mode: str = "lease"      # lease | ttl_aggregate | ttl_per_key
+    lease_ms: float = 5000.0
+    p_star: float = 1e-4
+    fixed_d: int = 2               # d for power_of_d policy
+    ablate: str = ""               # "no_margin" | "no_pin" | "no_bucket"
+    seed: int = 0
+
+    @property
+    def t_fast_ticks(self) -> int:
+        return max(int(round(ctl.T_FAST_MS / self.dt_ms)), 1)
+
+    @property
+    def t_slow_ticks(self) -> int:
+        return max(int(round(ctl.T_SLOW_MS / self.dt_ms)), 1)
+
+    @property
+    def w_ticks(self) -> int:
+        return max(int(round(ctl.W_WINDOW_MS / self.dt_ms)), 1)
+
+    @property
+    def serve_per_tick(self) -> float:
+        return self.dt_ms / self.service_ms
+
+
+class SimState(NamedTuple):
+    tick: jnp.ndarray            # () int32
+    L: jnp.ndarray               # (m,) float32 queue length
+    L_hat: jnp.ndarray           # (m,) float32 EWMA of observed L
+    p50_hat: jnp.ndarray         # (m,) float32 EWMA p50 (ms)
+    p99_hat: jnp.ndarray         # (m,) float32 EWMA p99 (ms)
+    sketch: telemetry.LatencySketch
+    router: routing.RouterState
+    ctrl: ctl.ControlState
+    cache: cache_lib.CacheState
+    rng: jnp.ndarray
+
+
+class TickOut(NamedTuple):
+    L: jnp.ndarray               # (m,) queue snapshot after tick
+    arrivals: jnp.ndarray        # (m,) arrivals routed this tick
+    lat_pred: jnp.ndarray        # (m,) predicted latency of a new arrival (ms)
+    d: jnp.ndarray               # () int32 control knob
+    delta_l: jnp.ndarray         # ()
+    pressure: jnp.ndarray        # ()
+    steered: jnp.ndarray         # ()
+    eligible: jnp.ndarray        # ()
+    cache_hits: jnp.ndarray      # ()
+    dV: jnp.ndarray              # () potential change from steering this tick
+
+
+class SimResult(NamedTuple):
+    queue_timeline: np.ndarray   # (T, m)
+    arrivals: np.ndarray         # (T, m)
+    lat_pred: np.ndarray         # (T, m)
+    d_timeline: np.ndarray       # (T,)
+    delta_l_timeline: np.ndarray
+    pressure: np.ndarray         # (T,)
+    steered: np.ndarray          # (T,)
+    eligible: np.ndarray         # (T,)
+    cache_hits: np.ndarray       # (T,)
+    final_cache: Optional[cache_lib.CacheState]
+    config: SimConfig
+
+    # ---- paper metrics -------------------------------------------------
+    def mean_queue(self) -> float:
+        return float(self.queue_timeline.mean())
+
+    def max_queue(self) -> float:
+        return float(self.queue_timeline.max())
+
+    def worst_case_queue(self, q: float = 99.9) -> float:
+        return float(np.percentile(self.queue_timeline, q))
+
+    def dispersion(self) -> float:
+        """CV of per-server time-averaged queue length (paper §VI-C)."""
+        per_server = self.queue_timeline.mean(axis=0)
+        mu = per_server.mean()
+        if mu < 1e-9:
+            return 0.0
+        return float(per_server.std() / mu)
+
+    def dispersion_t(self) -> float:
+        """Time-average of instantaneous CV across servers."""
+        mu = self.queue_timeline.mean(axis=1)
+        sd = self.queue_timeline.std(axis=1)
+        ok = mu > 1e-9
+        if not ok.any():
+            return 0.0
+        return float((sd[ok] / mu[ok]).mean())
+
+    def latency_quantiles(self, qs=(50, 99)) -> Tuple[float, ...]:
+        """Arrival-weighted request latency quantiles (ms)."""
+        lat = self.lat_pred.reshape(-1)
+        w = self.arrivals.reshape(-1)
+        if w.sum() <= 0:
+            return tuple(0.0 for _ in qs)
+        order = np.argsort(lat)
+        lat, w = lat[order], w[order]
+        cum = np.cumsum(w) / w.sum()
+        return tuple(float(lat[np.searchsorted(cum, q / 100.0)])
+                     for q in qs)
+
+
+def _route_group(cfg: SimConfig, ring: hashring.Ring, state: SimState,
+                 L_view, keys, mask, rng, now_ms):
+    """Dispatch one wave of requests under the configured policy."""
+    if cfg.policy == "round_robin":
+        return state, routing.route_round_robin(keys, mask, cfg.m), None
+    if cfg.policy == "rr_request":
+        proxy = jax.random.randint(jax.random.fold_in(rng, 11), keys.shape,
+                                   0, cfg.P, dtype=jnp.int32)
+        router, assign = routing.route_rr_per_request(state.router, proxy,
+                                                      mask, cfg.m)
+        return state._replace(router=router), assign, None
+    if cfg.policy == "uniform":
+        return state, routing.route_uniform(rng, mask, cfg.m), None
+    if cfg.policy == "hash":
+        return state, routing.route_hash(ring, keys, mask), None
+    feas = hashring.feasible_set(ring, keys, cfg.d_max)
+    if cfg.policy == "power_of_d":
+        assign = routing.route_power_of_d(rng, feas, L_view, mask,
+                                          cfg.fixed_d)
+        return state, assign, None
+    if cfg.policy == "midas":
+        # stability-mechanism ablations (benchmarks/ablations.py)
+        delta_l = (jnp.zeros(()) if "no_margin" in cfg.ablate
+                   else state.ctrl.delta_l)
+        delta_t = (jnp.zeros(()) - 1e9 if "no_margin" in cfg.ablate
+                   else state.ctrl.delta_t)
+        f_max = (jnp.ones(()) if "no_bucket" in cfg.ablate
+                 else state.ctrl.f_max)
+        pin_ms = 0.0 if "no_pin" in cfg.ablate else ctl.PIN_C_MS
+        router, assign, stats = routing.route_midas(
+            state.router, rng, keys, feas, L_view, state.p50_hat, mask,
+            state.ctrl.d, delta_l, delta_t, f_max, now_ms, pin_ms,
+            cfg.w_ticks)
+        return state._replace(router=router), assign, stats
+    raise ValueError(f"unknown policy {cfg.policy!r}")
+
+
+def _tick(cfg: SimConfig, ring: hashring.Ring, state: SimState,
+          inputs) -> Tuple[SimState, TickOut]:
+    keys, mask, is_write = inputs
+    now_ms = state.tick.astype(jnp.float32) * cfg.dt_ms
+    rng, r_cache, r_route = jax.random.split(state.rng, 3)
+    state = state._replace(rng=rng)
+
+    cache_hits = jnp.zeros((), jnp.float32)
+    if cfg.cache_enabled:
+        new_cache, hit = cache_lib.lookup_batch(
+            state.cache, keys, mask, is_write, now_ms,
+            mode=cfg.cache_mode, lease_ms=cfg.lease_ms, rtt_ms=cfg.rtt_ms,
+            p_star=cfg.p_star)
+        state = state._replace(cache=new_cache)
+        mask = mask & ~hit                      # hits never reach the servers
+        cache_hits = jnp.sum(hit).astype(jnp.float32)
+
+    # --- route in waves; later waves see earlier waves' own assignments ---
+    R = keys.shape[0]
+    G = cfg.n_groups
+    pad = (-R) % G
+    keysg = jnp.pad(keys, (0, pad)).reshape(G, -1)
+    maskg = jnp.pad(mask, (0, pad)).reshape(G, -1)
+
+    L_self = jnp.zeros((cfg.m,), jnp.float32)   # own sends this tick
+    arrivals = jnp.zeros((cfg.m,), jnp.float32)
+    steered = jnp.zeros((), jnp.float32)
+    eligible = jnp.zeros((), jnp.float32)
+    dV = jnp.zeros((), jnp.float32)
+    for g in range(G):
+        rg = jax.random.fold_in(r_route, g)
+        L_view = state.L_hat + L_self
+        state, assign, stats = _route_group(cfg, ring, state, L_view,
+                                            keysg[g], maskg[g], rg, now_ms)
+        counts = jnp.zeros((cfg.m,), jnp.float32).at[
+            jnp.where(maskg[g], assign, 0)].add(
+            jnp.where(maskg[g], 1.0, 0.0))
+        # Lyapunov bookkeeping: ΔV contribution of steering away from primary
+        if cfg.policy in ("power_of_d", "midas"):
+            prim = hashring.primary(ring, keysg[g])
+            moved = maskg[g] & (assign != prim) & (assign >= 0)
+            dV = dV + jnp.sum(jnp.where(
+                moved, 2.0 * (L_view[assign] - L_view[prim]) + 2.0, 0.0))
+        L_self = L_self + counts
+        arrivals = arrivals + counts
+        if stats is not None:
+            steered = steered + stats.steered
+            eligible = eligible + stats.eligible
+
+    # --- queue dynamics: constant-rate servers, work-conserving ----------
+    L = state.L + arrivals
+    served = jnp.minimum(L, cfg.serve_per_tick)
+    L = L - served
+    lat_pred = (state.L + arrivals) * cfg.service_ms  # wait of a new arrival
+
+    state = state._replace(L=L, tick=state.tick + 1)
+
+    # --- telemetry ingest + fast control (every T_fast) ------------------
+    is_fast = (state.tick % cfg.t_fast_ticks) == 0
+    sketch = telemetry.sketch_add(state.sketch, lat_pred)
+    p50_o, p99_o = telemetry.sketch_quantiles(sketch)
+
+    def ingest(s: SimState) -> SimState:
+        L_hat = telemetry.ewma(s.L_hat, s.L, ctl.ALPHA_FAST)
+        p50 = telemetry.ewma(s.p50_hat, p50_o, ctl.ALPHA_FAST)
+        p99 = telemetry.ewma(s.p99_hat, p99_o, ctl.ALPHA_FAST)
+        B = telemetry.imbalance(L_hat)
+        jit = jax.random.uniform(jax.random.fold_in(s.rng, 3), (),
+                                 minval=-1.0, maxval=1.0)
+        ctrl = ctl.fast_update(s.ctrl, B, jnp.max(p99), cfg.rtt_ms, jit)
+        return s._replace(L_hat=L_hat, p50_hat=p50, p99_hat=p99, ctrl=ctrl)
+
+    state = state._replace(sketch=sketch)
+    state = jax.lax.cond(is_fast, ingest, lambda s: s, state)
+
+    if cfg.cache_enabled:
+        is_slow = (state.tick % cfg.t_slow_ticks) == 0
+        lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
+
+        def slow(s: SimState) -> SimState:
+            return s._replace(cache=cache_lib.slow_update(
+                s.cache, ctl.T_SLOW_MS, cfg.rtt_ms, lease, cfg.p_star))
+
+        state = jax.lax.cond(is_slow, slow, lambda s: s, state)
+
+    out = TickOut(L=L, arrivals=arrivals, lat_pred=lat_pred,
+                  d=state.ctrl.d, delta_l=state.ctrl.delta_l,
+                  pressure=state.ctrl.pressure, steered=steered,
+                  eligible=eligible, cache_hits=cache_hits, dV=dV)
+    return state, out
+
+
+def init_state(cfg: SimConfig, b_tgt: float = 0.15,
+               p99_tgt: float = 500.0) -> SimState:
+    return SimState(
+        tick=jnp.zeros((), jnp.int32),
+        L=jnp.zeros((cfg.m,), jnp.float32),
+        L_hat=jnp.zeros((cfg.m,), jnp.float32),
+        p50_hat=jnp.zeros((cfg.m,), jnp.float32),
+        p99_hat=jnp.zeros((cfg.m,), jnp.float32),
+        sketch=telemetry.make_sketch(cfg.m),
+        router=routing.init_router(cfg.P, cfg.N, cfg.w_ticks, cfg.seed),
+        ctrl=ctl.init_control(cfg.rtt_ms, b_tgt, p99_tgt),
+        cache=cache_lib.init_cache(cfg.N),
+        rng=jax.random.PRNGKey(cfg.seed))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
+    ring = hashring.make_ring(cfg.m, cfg.V)
+    step = functools.partial(_tick, cfg, ring)
+    return jax.lax.scan(step, state, (keys, mask, is_write))
+
+
+def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
+           ) -> Tuple[float, float]:
+    """§III-B: run at ≤30% utilization with no middleware, derive targets."""
+    from repro.core.workloads import make_workload
+    wl = make_workload("light", T=T, m=cfg.m, seed=seed, dt_ms=cfg.dt_ms,
+                       service_ms=cfg.service_ms, N=cfg.N)
+    warm_cfg = dataclasses.replace(cfg, policy="hash", cache_enabled=False)
+    st = init_state(warm_cfg)
+    _, outs = _run_scan(warm_cfg, st, wl.keys, wl.mask, wl.is_write)
+    L = np.asarray(outs.L)
+    # EWMA'd imbalance series, same smoothing as the controller
+    L_hat = np.zeros_like(L)
+    acc = np.zeros(L.shape[1])
+    for t in range(L.shape[0]):
+        acc = (1 - ctl.ALPHA_FAST) * acc + ctl.ALPHA_FAST * L[t]
+        L_hat[t] = acc
+    B = L_hat.std(axis=1) / (L_hat.mean(axis=1) + ctl.EPS)
+    lat = np.asarray(outs.lat_pred)
+    w = np.asarray(outs.arrivals)
+    flat, fw = lat.reshape(-1), w.reshape(-1)
+    if fw.sum() > 0:
+        order = np.argsort(flat)
+        cum = np.cumsum(fw[order]) / fw.sum()
+        p99_warm = float(flat[order][np.searchsorted(cum, 0.99)])
+    else:
+        p99_warm = cfg.service_ms
+    b_tgt = float(np.median(B) + 0.05)
+    p99_tgt = float(max(1.25 * p99_warm, cfg.rtt_ms + 2.0))
+    return b_tgt, p99_tgt
+
+
+def simulate(cfg: SimConfig, wl: Workload,
+             do_warmup: bool = True) -> SimResult:
+    if do_warmup and cfg.policy == "midas":
+        b_tgt, p99_tgt = warmup(cfg)
+    else:
+        b_tgt, p99_tgt = 0.15, 5.0 * cfg.service_ms
+    state = init_state(cfg, b_tgt, p99_tgt)
+    final, outs = _run_scan(cfg, state, wl.keys, wl.mask, wl.is_write)
+    return SimResult(
+        queue_timeline=np.asarray(outs.L),
+        arrivals=np.asarray(outs.arrivals),
+        lat_pred=np.asarray(outs.lat_pred),
+        d_timeline=np.asarray(outs.d),
+        delta_l_timeline=np.asarray(outs.delta_l),
+        pressure=np.asarray(outs.pressure),
+        steered=np.asarray(outs.steered),
+        eligible=np.asarray(outs.eligible),
+        cache_hits=np.asarray(outs.cache_hits),
+        final_cache=jax.device_get(final.cache) if cfg.cache_enabled else None,
+        config=cfg)

@@ -1,0 +1,65 @@
+"""Telemetry: EWMA smoothing and windowed latency sketches (p50/p99).
+
+Proxies observe *server-reported* telemetry — in-flight queue length and
+recent latency quantiles — with at most one fast-interval of delay (paper
+§IV-E assumption 1).  The sketch is a per-server ring buffer of recent
+latency observations; quantiles are computed over the valid window.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ewma(prev: jnp.ndarray, x: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """x̂_t = (1-α)·x̂_{t-1} + α·x_t   (paper eq., α=0.2 fast loop)."""
+    return (1.0 - alpha) * prev + alpha * x
+
+
+class LatencySketch(NamedTuple):
+    buf: jnp.ndarray    # (m, K) float32 latency observations (ms)
+    idx: jnp.ndarray    # () int32 next write slot (shared across servers)
+    count: jnp.ndarray  # () int32 total observations so far
+
+
+def make_sketch(m: int, K: int = 64) -> LatencySketch:
+    return LatencySketch(buf=jnp.zeros((m, K), jnp.float32),
+                         idx=jnp.zeros((), jnp.int32),
+                         count=jnp.zeros((), jnp.int32))
+
+
+def sketch_add(sk: LatencySketch, obs: jnp.ndarray) -> LatencySketch:
+    """Add one observation per server (obs: (m,) ms)."""
+    K = sk.buf.shape[1]
+    buf = sk.buf.at[:, sk.idx % K].set(obs)
+    return LatencySketch(buf=buf, idx=sk.idx + 1, count=sk.count + 1)
+
+
+def sketch_quantiles(sk: LatencySketch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(p50, p99) per server over the valid window; zeros when empty."""
+    K = sk.buf.shape[1]
+    n = jnp.minimum(sk.count, K)
+    # mask invalid slots with +inf then take sorted-order quantiles over n
+    valid = jnp.arange(K) < n
+    big = jnp.where(valid[None, :], sk.buf, jnp.inf)
+    srt = jnp.sort(big, axis=1)
+    nn = jnp.maximum(n, 1)
+    i50 = jnp.clip((nn - 1) / 2, 0, K - 1)
+    i99 = jnp.clip(jnp.ceil(0.99 * (nn.astype(jnp.float32) - 1)), 0, K - 1)
+
+    def take(frac_idx):
+        lo = jnp.floor(frac_idx).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, nn - 1).astype(jnp.int32)
+        w = frac_idx - lo
+        return (1 - w) * srt[:, lo] + w * srt[:, hi]
+
+    p50 = jnp.where(n > 0, take(i50.astype(jnp.float32)), 0.0)
+    p99 = jnp.where(n > 0, take(i99.astype(jnp.float32)), 0.0)
+    return p50, p99
+
+
+def imbalance(L_hat: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """B(t) = std(L̂)/(mean(L̂)+ε)  — the paper's smoothed imbalance."""
+    return jnp.std(L_hat) / (jnp.mean(L_hat) + eps)

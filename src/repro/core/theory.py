@@ -1,0 +1,58 @@
+"""Closed-form results the paper leans on (§V) + fast simulators to verify.
+
+* Balls-into-bins: uniform placement has expected max load
+  ~ m/n·(1 + ln M/ln ln M)-style gap; power-of-d gives ln ln M / ln d + O(1)
+  above the mean (Azar et al.; Mitzenmacher).
+* M/M/1: E[T] = 1/(μ − λ) for λ < μ.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def uniform_maxload_gap_theory(m: int) -> float:
+    """Expected max-above-mean for n=m balls, uniform: ≈ ln m / ln ln m."""
+    lm = math.log(m)
+    return lm / math.log(lm) if lm > 1 else 1.0
+
+
+def power_of_d_maxload_gap_theory(m: int, d: int) -> float:
+    """≈ ln ln m / ln d + O(1)."""
+    lm = math.log(max(m, 3))
+    return math.log(max(lm, math.e)) / math.log(d)
+
+
+def mm1_latency(lam: float, mu: float) -> float:
+    """E[T] = 1/(μ−λ), λ<μ (paper §V-B)."""
+    if lam >= mu:
+        return float("inf")
+    return 1.0 / (mu - lam)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2, 3))
+def balls_into_bins(key: jnp.ndarray, n_balls: int, m: int,
+                    d: int) -> jnp.ndarray:
+    """Sequential balls-into-bins with d choices; returns final loads (m,)."""
+    def place(loads, k):
+        cand = jax.random.randint(k, (d,), 0, m)
+        tie = jax.random.uniform(jax.random.fold_in(k, 1), (d,)) * 1e-3
+        j = cand[jnp.argmin(loads[cand] + tie)]
+        return loads.at[j].add(1.0), None
+
+    keys = jax.random.split(key, n_balls)
+    loads, _ = jax.lax.scan(place, jnp.zeros((m,), jnp.float32), keys)
+    return loads
+
+
+def maxload_gap_empirical(n_balls: int, m: int, d: int, trials: int = 20,
+                          seed: int = 0) -> Tuple[float, float]:
+    """(mean gap above average load, std) across trials."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), trials)
+    loads = jax.vmap(lambda k: balls_into_bins(k, n_balls, m, d))(keys)
+    gaps = jnp.max(loads, axis=1) - n_balls / m
+    return float(jnp.mean(gaps)), float(jnp.std(gaps))

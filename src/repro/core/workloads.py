@@ -1,0 +1,145 @@
+"""Traffic generators reproducing the paper's Fig. 2 workload patterns.
+
+Each generator emits a (T, R) grid of request keys with a validity mask:
+tick t carries ``counts[t] <= R`` real requests.  Keys index a namespace of
+``N`` objects (directories/inodes); the key→server map comes from the
+consistent-hash ring, so key skew creates server hotspots exactly as in the
+paper's motivation (job start-ups / checkpoint storms hammer few dirs).
+
+Rates are expressed as a fraction of aggregate service capacity
+``cap = m * dt_ms / service_ms`` requests per tick.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+WORKLOADS = ("light", "uniform_heavy", "bursty", "periodic", "diurnal",
+             "skewed", "storm")
+
+
+class Workload(NamedTuple):
+    keys: jnp.ndarray     # (T, R) int32 in [0, N)
+    mask: jnp.ndarray     # (T, R) bool
+    is_write: jnp.ndarray  # (T, R) bool (metadata-mutating ops)
+    name: str
+    N: int
+
+
+def _zipf_cdf(N: int, alpha: float) -> jnp.ndarray:
+    ranks = jnp.arange(1, N + 1, dtype=jnp.float32)
+    w = ranks ** (-alpha)
+    return jnp.cumsum(w) / jnp.sum(w)
+
+
+def _sample_keys(key, shape, N: int, alpha: float, perm_salt: int = 3):
+    """Zipf(alpha) keys (alpha=0 → uniform), rank→id decorrelated by hashing."""
+    if alpha <= 0.0:
+        return jax.random.randint(key, shape, 0, N, dtype=jnp.int32)
+    cdf = _zipf_cdf(N, alpha)
+    u = jax.random.uniform(key, shape)
+    ranks = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    # permute ranks over the namespace so hot keys land on "random" servers
+    from repro.core.hashring import hash2
+    return (hash2(ranks.astype(jnp.uint32), jnp.uint32(perm_salt))
+            % jnp.uint32(N)).astype(jnp.int32)
+
+
+def _hot_subset_keys(key, shape, epoch_idx: jnp.ndarray, N: int, *,
+                     subset: int, alpha: float, salt: int) -> jnp.ndarray:
+    """Zipf(alpha) keys over a small hot subset that rotates per epoch
+    (each burst/storm is a different job hitting different directories)."""
+    from repro.core.hashring import hash2
+    cdf = _zipf_cdf(subset, alpha)
+    u = jax.random.uniform(key, shape)
+    ranks = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    mixed = hash2(ranks.astype(jnp.uint32)
+                  + jnp.uint32(subset) * epoch_idx[:, None].astype(jnp.uint32),
+                  jnp.uint32(salt))
+    return (mixed % jnp.uint32(N)).astype(jnp.int32)
+
+
+def _assemble(key, rate_per_tick: jnp.ndarray, R: int, N: int,
+              alpha: float, write_frac: float, name: str,
+              hot_subset: int = 0) -> Workload:
+    """Poisson arrivals at rate_per_tick; keys zipf(alpha) (optionally over a
+    hot subset of the namespace, modeling one hot directory)."""
+    T = rate_per_tick.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    counts = jax.random.poisson(k1, rate_per_tick).astype(jnp.int32)
+    counts = jnp.minimum(counts, R)
+    mask = jnp.arange(R)[None, :] < counts[:, None]
+    keys = _sample_keys(k2, (T, R), hot_subset or N, alpha)
+    is_write = jax.random.uniform(k3, (T, R)) < write_frac
+    return Workload(keys=keys, mask=mask, is_write=is_write & mask,
+                    name=name, N=N)
+
+
+def make_workload(name: str, *, T: int, m: int, seed: int = 0,
+                  dt_ms: float = 50.0, service_ms: float = 100.0,
+                  N: int = 4096, R: int = 0,
+                  write_frac: float = 0.05) -> Workload:
+    cap = m * dt_ms / service_ms          # requests/tick the cluster can serve
+    R = R or int(4 * cap) + 8
+    key = jax.random.PRNGKey(seed)
+    t = jnp.arange(T, dtype=jnp.float32)
+    sec = t * dt_ms / 1000.0
+
+    if name == "light":
+        rate = jnp.full((T,), 0.40 * cap)
+        return _assemble(key, rate, R, N, 0.0, write_frac, name)
+
+    if name == "uniform_heavy":
+        rate = jnp.full((T,), 0.85 * cap)
+        return _assemble(key, rate, R, N, 0.0, write_frac, name)
+
+    if name == "bursty":
+        # background 30% + job-startup bursts: every ~20 s, 2 s at 3x
+        # capacity, keys concentrated on a small hot directory set.  Each
+        # burst is a *different* job => different hot directories.
+        k1, k2, k3 = jax.random.split(key, 3)
+        base = jnp.full((T,), 0.30 * cap)
+        period_s, dur_s = 20.0, 2.0
+        phase = jax.random.uniform(k3, ()) * period_s
+        in_burst = ((sec + phase) % period_s) < dur_s
+        burst_idx = ((sec + phase) // period_s).astype(jnp.int32)
+        rate = base + jnp.where(in_burst, 3.0 * cap, 0.0)
+        wl = _assemble(k1, rate, R, N, 0.0, write_frac, name)
+        hot = _hot_subset_keys(k2, wl.keys.shape, burst_idx, N,
+                               subset=32, alpha=1.1, salt=11)
+        keys = jnp.where(in_burst[:, None], hot, wl.keys)
+        return wl._replace(keys=keys)
+
+    if name == "periodic":
+        # sinusoid peaking slightly above capacity (checkpoint cadence)
+        rate = cap * jnp.clip(0.55 + 0.55 * jnp.sin(2 * jnp.pi * sec / 30.0),
+                              0.0, None)
+        return _assemble(key, rate, R, N, 0.6, write_frac, name)
+
+    if name == "diurnal":
+        horizon = jnp.maximum(sec[-1], 1.0)
+        rate = cap * jnp.clip(
+            0.5 + 0.45 * jnp.sin(2 * jnp.pi * sec / horizon)
+            + 0.08 * jnp.sin(2 * jnp.pi * sec / 13.0), 0.0, None)
+        return _assemble(key, rate, R, N, 0.5, write_frac, name)
+
+    if name == "skewed":
+        rate = jnp.full((T,), 0.70 * cap)
+        return _assemble(key, rate, R, N, 0.9, write_frac, name)
+
+    if name == "storm":
+        # checkpoint storm: near-idle then all ranks write at once (5 s);
+        # each storm targets that job's checkpoint directories.
+        k1, k2 = jax.random.split(key)
+        storm = (sec % 60.0) < 5.0
+        storm_idx = (sec // 60.0).astype(jnp.int32)
+        rate = jnp.where(storm, 4.0 * cap, 0.05 * cap)
+        wl = _assemble(k1, rate, R, N, 0.0, 0.5, name)
+        hot = _hot_subset_keys(k2, wl.keys.shape, storm_idx, N,
+                               subset=16, alpha=1.0, salt=17)
+        keys = jnp.where(storm[:, None], hot, wl.keys)
+        return wl._replace(keys=keys)
+
+    raise ValueError(f"unknown workload {name!r}; known: {WORKLOADS}")

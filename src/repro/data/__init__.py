@@ -1,0 +1,2 @@
+from repro.data.balance import assign_shards, host_load_cv  # noqa: F401
+from repro.data.pipeline import Prefetcher, SyntheticLM  # noqa: F401

@@ -1,0 +1,91 @@
+"""Deterministic, seekable, sharded data pipeline.
+
+Restart-exactness is the fault-tolerance contract: ``batch_at(step)`` is a
+pure function of (seed, step, host), so resuming from a checkpoint at step
+N replays the identical stream with zero coordination — the property that
+makes 1000-node restarts cheap.  A background prefetch thread hides
+generation latency; MIDAS balancing assigns heterogeneous file shards to
+hosts (see balance.py).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.config import ArchConfig
+
+
+class SyntheticLM:
+    """Deterministic synthetic token stream (hash-based, O(1) seek)."""
+
+    def __init__(self, cfg: ArchConfig, batch: int, seq: int, *,
+                 seed: int = 0, host: int = 0, num_hosts: int = 1):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.host = host
+        self.num_hosts = num_hosts
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step) * 65_537 + self.host)
+        cfg = self.cfg
+        if cfg.frontend == "audio_frames":
+            return {
+                "frames": rng.normal(0, 0.02, (self.batch, self.seq,
+                                               cfg.d_model)
+                                     ).astype(np.float32),
+                "labels": rng.integers(0, cfg.vocab_size,
+                                       (self.batch, self.seq)
+                                       ).astype(np.int32),
+            }
+        if cfg.frontend == "vlm_patches":
+            P = cfg.frontend_tokens
+            return {
+                "tokens": rng.integers(0, cfg.vocab_size,
+                                       (self.batch, self.seq - P)
+                                       ).astype(np.int32),
+                "patches": rng.normal(0, 0.02, (self.batch, P, cfg.d_model)
+                                      ).astype(np.float32),
+            }
+        # mildly zipfian token stream so losses actually move
+        z = rng.zipf(1.3, (self.batch, self.seq))
+        return {"tokens": (z % cfg.vocab_size).astype(np.int32)}
+
+
+class Prefetcher:
+    """Background prefetch with bounded queue; restart-exact via start_step."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0,
+                 depth: int = 2):
+        self._source = source
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+
+    def _run(self) -> None:
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._source.batch_at(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()

@@ -1,0 +1,1 @@
+from repro.ft.failures import FailureDetector, elastic_plan  # noqa: F401

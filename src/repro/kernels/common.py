@@ -1,0 +1,23 @@
+"""Kernel dispatch helpers: Pallas on TPU, pure-jnp reference elsewhere.
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU in interpret mode by the test suite.  Model code goes
+through ops.py wrappers, which pick the implementation per platform so the
+whole framework runs end-to-end on CPU unchanged.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def default_impl() -> str:
+    forced = os.environ.get("REPRO_KERNEL_IMPL")
+    if forced:
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,103 @@
+"""Pallas TPU decode attention: one query token against a long KV cache.
+
+This op is memory-bound (the whole KV cache streams HBM->VMEM once), so the
+kernel's job is to keep the streaming dense and fuse the online softmax.
+Grid: (batch, kv_heads, k_blocks); the G = H/KV query heads of a kv group
+are processed together as a (G, D) tile — G·D is MXU-aligned for all
+assigned archs.  The position bound arrives via scalar prefetch (SMEM) so
+block masking needs no HBM traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _body(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+          scale: float, window: int, softcap: float, bk: int, G: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+    b = pl.program_id(0)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+    q = q_ref[0, 0, :, :].astype(jnp.float32)           # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+    mask = kpos <= pos
+    if window > 0:
+        mask &= kpos > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+                     softcap: float = 0.0, block_k: int = 1024,
+                     interpret: bool = False):
+    """q: (B, H, D); caches: (B, S, KV, D); pos: (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(block_k, S)
+    assert S % bk == 0, (S, bk)
+    qg = q.reshape(B, KV, G, D)
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(_body, scale=scale, window=window,
+                               softcap=softcap, bk=bk, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik, pos: (b, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ik, pos: (b, ik, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ik, pos: (b, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ik, pos: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, D)

@@ -1,0 +1,26 @@
+"""Public wrapper for MIDAS MoE dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.midas_route import ref
+
+topk_dispatch = ref.topk_dispatch
+expert_load = ref.expert_load
+
+
+def midas_dispatch(gate_logits: jnp.ndarray, load: jnp.ndarray, k: int,
+                   d: int, *, delta_l: float = 2.0, gate_slack: float = 1.0,
+                   f_max: float = 0.25, impl: str | None = None):
+    impl = impl or common.default_impl()
+    # the Pallas kernel implements the margin-governed variant; global
+    # quantile caps (f_max < 1) need a cross-tile reduction and stay on the
+    # reference path (see kernel.py docstring)
+    if impl == "ref" or f_max < 1.0:
+        return ref.midas_dispatch(gate_logits, load, k, d, delta_l=delta_l,
+                                  gate_slack=gate_slack, f_max=f_max)
+    from repro.kernels.midas_route import kernel
+    return kernel.midas_dispatch(gate_logits, load, k, d, delta_l=delta_l,
+                                 gate_slack=gate_slack, f_max=f_max,
+                                 interpret=common.interpret_mode())

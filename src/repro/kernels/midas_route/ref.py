@@ -1,0 +1,110 @@
+"""MIDAS expert dispatch — the paper's routing algorithm adapted to MoE.
+
+Mapping (paper -> MoE):
+  * servers            -> experts
+  * request            -> (token, slot) assignment, slot in 0..k-1
+  * consistent-hash primary -> gate-ranked expert for that slot
+  * feasible set F(r)  -> top-(k+d) experts by gate logit (quality
+                          constraint = namespace constraint)
+  * queue telemetry L̂  -> EWMA of per-expert token load from previous
+                          steps (stale telemetry, exactly like the paper's
+                          one-fast-interval-delayed view)
+  * Δ_L margin         -> load margin in units of mean tokens/expert;
+                          Δ_L >= 2 keeps the Lyapunov argument: moving one
+                          token from expert p to expert j with
+                          L̂_p − L̂_j >= 2 strictly decreases
+                          V = Σ(L̂_i − L̄)²
+  * Δ_t latency margin -> gate-logit slack (don't steer to a much worse
+                          expert)
+  * f_max leaky bucket -> at most f_max of tokens steered per slot,
+                          benefit-ranked
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_dispatch(gate_logits: jnp.ndarray, k: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vanilla top-k routing: experts (T, k), weights = softmax over the
+    chosen logits."""
+    vals, experts = jax.lax.top_k(gate_logits, k)
+    weights = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return experts.astype(jnp.int32), weights
+
+
+def midas_dispatch(gate_logits: jnp.ndarray, load: jnp.ndarray, k: int,
+                   d: int, *, delta_l: float = 2.0, gate_slack: float = 1.0,
+                   f_max: float = 0.25
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Power-of-d steering over the top-(k+d) gate candidates.
+
+    gate_logits: (T, E) fp32; load: (E,) EWMA token share per expert,
+    normalized so a balanced system has load == 1 for every expert.
+    Returns (experts (T,k) int32, weights (T,k) f32, steered (T,k) bool).
+    """
+    T, E = gate_logits.shape
+    d_eff = min(d, E - k)
+    if d_eff <= 0:
+        e, w = topk_dispatch(gate_logits, k)
+        return e, w, jnp.zeros_like(e, dtype=bool)
+
+    vals, cand = jax.lax.top_k(gate_logits, k + d_eff)   # (T, k+d)
+    cand = cand.astype(jnp.int32)
+    loadf = load.astype(jnp.float32)
+
+    chosen = []
+    chosen_vals = []
+    steered_flags = []
+    alt_used = jnp.zeros((T, d_eff), bool)
+    alt_ids = cand[:, k:]                                # (T, d)
+    alt_vals = vals[:, k:]
+    for i in range(k):
+        prim = cand[:, i]
+        prim_val = vals[:, i]
+        ok = (~alt_used
+              & (loadf[alt_ids] <= loadf[prim][:, None] - delta_l)
+              & (alt_vals >= prim_val[:, None] - gate_slack))
+        alt_load = jnp.where(ok, loadf[alt_ids], jnp.inf)
+        best = jnp.argmin(alt_load, axis=-1)             # (T,)
+        has = jnp.any(ok, axis=-1)
+        benefit = jnp.where(
+            has, loadf[prim] - jnp.min(alt_load, axis=-1), -jnp.inf)
+        # f_max cap per slot: steer only the most-beneficial fraction
+        if f_max >= 1.0:
+            steer = has & (benefit >= delta_l)
+        elif f_max <= 0.0:
+            steer = jnp.zeros_like(has)
+        else:
+            q = jnp.quantile(jnp.where(jnp.isfinite(benefit), benefit,
+                                       -1e9), 1.0 - f_max)
+            steer = has & (benefit > jnp.maximum(q, delta_l - 1e-9))
+        e_i = jnp.where(steer,
+                        jnp.take_along_axis(alt_ids, best[:, None],
+                                            axis=1)[:, 0],
+                        prim)
+        v_i = jnp.where(steer,
+                        jnp.take_along_axis(alt_vals, best[:, None],
+                                            axis=1)[:, 0],
+                        prim_val)
+        alt_used = alt_used | (steer[:, None]
+                               & (jnp.arange(d_eff)[None] == best[:, None]))
+        chosen.append(e_i)
+        chosen_vals.append(v_i)
+        steered_flags.append(steer)
+
+    experts = jnp.stack(chosen, axis=1)
+    weights = jax.nn.softmax(jnp.stack(chosen_vals, 1).astype(jnp.float32),
+                             axis=-1)
+    steered = jnp.stack(steered_flags, axis=1)
+    return experts, weights, steered
+
+
+def expert_load(experts: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Per-expert token share, normalized to mean 1 (balanced == ones)."""
+    T, k = experts.shape
+    counts = jnp.zeros((E,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    return counts * E / (T * k)

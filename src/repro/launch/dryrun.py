@@ -1,0 +1,416 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Placeholder devices exist ONLY for the dry-run.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell, prove it fits (memory_analysis) and extract roofline terms
+(cost_analysis + collective bytes parsed from the partitioned HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse   # noqa: E402
+import dataclasses  # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.config import (MeshConfig, RunConfig, get_arch, get_shape,  # noqa: E402
+                          applicable_cells)
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.sharding import rules as R  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# TPU v5e-class constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_SHAPE_RE = re.compile(r"(f8e4m3fn|f8e5m2|bf16|f16|f32|f64|s8|u8|s16|u16|"
+                       r"s32|u32|s64|u64|pred|c64|c128)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+          "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+          "f32": 4, "s32": 4, "u32": 4, "c64": 8,
+          "f64": 8, "s64": 8, "u64": 8, "c128": 16}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in the partitioned
+    (per-device) HLO, bucketed by op kind."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in COLLECTIVES:
+            # matches "%name = <shape> all-gather(...)" incl. -start variants
+            if f" {kind}(" in ls or f" {kind}-start(" in ls:
+                lhs = ls.split(f" {kind}")[0]
+                out[kind] += _shape_bytes(lhs)
+                counts[kind] += 1
+                break
+    return out, counts
+
+
+def pick_rule_set(arch: str, shape_name: str) -> str:
+    shape = get_shape(shape_name)
+    cfg = get_arch(arch)
+    if shape.kind == "train":
+        return "train"
+    if shape_name == "long_500k":
+        return "long"
+    # big models need 2D weight sharding to fit serving on 16 GB chips
+    if cfg.n_params() * 2 / 16 > 12e9:
+        return "serve_2d"
+    return "serve"
+
+
+def _named(mesh, spec_tree):
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+               run: RunConfig | None = None):
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    run = run or RunConfig(arch=arch, shape=shape_name, mesh=mesh_cfg)
+    mesh = make_mesh(mesh_cfg)
+    rule_set = run.sharding_rules if run.sharding_rules != "default" \
+        else pick_rule_set(arch, shape_name)
+    rules = R.make_rules(rule_set, mesh)
+
+    with mesh, R.use_rules(rules):
+        if shape.kind == "train":
+            from repro.train.step import make_train_step, train_state_shapes
+            step = make_train_step(cfg, run)
+            state_shapes = train_state_shapes(cfg, run)
+            state_spec = S.train_state_pspec(cfg, run, rules, state_shapes)
+            batch = S.input_specs(cfg, shape)
+            batch_spec = S.batch_pspec(cfg, shape, rules)
+            lowered = jax.jit(
+                step,
+                in_shardings=(_named(mesh, state_spec),
+                              _named(mesh, batch_spec)),
+                out_shardings=(_named(mesh, state_spec), None),
+                donate_argnums=(0,),
+            ).lower(state_shapes, batch)
+        elif shape.kind == "prefill":
+            from repro.serve.step import make_prefill_step
+            step = make_prefill_step(cfg, run)
+            from repro import models
+            params = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                models.param_shapes(cfg))
+            p_spec = S.params_pspec(cfg, rules)
+            batch = S.input_specs(cfg, shape)
+            batch_spec = S.batch_pspec(cfg, shape, rules)
+            lowered = jax.jit(
+                step,
+                in_shardings=(_named(mesh, p_spec),
+                              _named(mesh, batch_spec)),
+            ).lower(params, batch)
+        else:  # decode
+            from repro import models
+            from repro.serve.step import make_serve_step
+            step = make_serve_step(cfg, run)
+            params = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                models.param_shapes(cfg))
+            p_spec = S.params_pspec(cfg, rules)
+            tokens, pos, cache = S.decode_input_specs(cfg, shape)
+            c_spec = S.cache_pspec(cfg, shape, rules)
+            lowered = jax.jit(
+                step,
+                in_shardings=(_named(mesh, p_spec), _named(mesh, c_spec),
+                              _named(mesh, P()), _named(mesh, P())),
+                out_shardings=(_named(mesh, P()), _named(mesh, c_spec)),
+                donate_argnums=(1,),
+            ).lower(params, cache, tokens, pos)
+    return lowered, dict(rule_set=rule_set, kind=shape.kind)
+
+
+def analyse(lowered, compiled, mesh_cfg: MeshConfig, cfg, shape):
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = dict(
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            peak_bytes=int(getattr(mem, "temp_size_in_bytes", 0))
+            + int(getattr(mem, "argument_size_in_bytes", 0)),
+        )
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+    hlo = compiled.as_text()
+    coll, coll_counts = collective_bytes(hlo)
+    coll_total = sum(coll.values())
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+
+    # useful model flops: 6·N_active·D for train (fwd+bwd), 2·N_active·D fwd
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops_total = mult * n_active * tokens
+    model_flops_per_dev = model_flops_total / mesh_cfg.num_devices
+    useful_ratio = model_flops_per_dev / flops if flops else 0.0
+
+    return dict(
+        flops_per_device=flops,
+        bytes_per_device=bytes_accessed,
+        collective_bytes_per_device=coll,
+        collective_counts=coll_counts,
+        collective_total_bytes=coll_total,
+        memory=mem_info,
+        roofline=dict(**terms, dominant=dominant,
+                      model_flops_per_device=model_flops_per_dev,
+                      useful_flops_ratio=useful_ratio),
+    )
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll, counts = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll, counts)
+
+
+def _cost_extrapolated(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+                       run: RunConfig | None):
+    """XLA cost_analysis counts while-loop bodies ONCE (verified: a scan of
+    10 matmuls reports 1 matmul of flops), so scanned-layer models are
+    undercounted.  Fix: compile 1-block and 2-block depth variants and
+    extrapolate  cost(n) = c1 + (n-1)·(c2 - c1)  — scan bodies are
+    identical across iterations.  The Mamba inner chunk-scan is switched
+    to the fully-parallel formulation (REPRO_SSM_PARALLEL) during these
+    cost compiles so its flops are visible too."""
+    import repro.config as C
+    from repro.models.model import block_pattern
+    cfg = get_arch(arch)
+    blen = len(block_pattern(cfg))
+    n = cfg.num_layers // blen
+    # pin the rule set chosen for the FULL config (pick_rule_set depends on
+    # n_params, which shrinks in the shallow variants)
+    run = dataclasses.replace(
+        run or RunConfig(arch=arch, shape=shape_name, mesh=mesh_cfg),
+        sharding_rules=pick_rule_set(arch, shape_name)
+        if (run is None or run.sharding_rules == "default") else
+        run.sharding_rules)
+
+    os.environ["REPRO_SSM_PARALLEL"] = "1"
+    os.environ["REPRO_SCAN_FULL_UNROLL"] = "1"
+    try:
+        outs = []
+        for k in (1, 2):
+            cfg_k = dataclasses.replace(cfg, num_layers=k * blen)
+            C.ARCH_REGISTRY[cfg_k.name] = cfg_k  # shadow temporarily
+            try:
+                lo, _ = lower_cell(cfg_k.name, shape_name, mesh_cfg, run)
+                outs.append(_costs(lo.compile()))
+            finally:
+                C.ARCH_REGISTRY[cfg_k.name] = cfg
+    finally:
+        os.environ.pop("REPRO_SSM_PARALLEL", None)
+        os.environ.pop("REPRO_SCAN_FULL_UNROLL", None)
+
+    (f1, b1, c1, _), (f2, b2, c2, _) = outs
+    flops = f1 + (n - 1) * (f2 - f1)
+    byts = b1 + (n - 1) * (b2 - b1)
+    coll = {k: c1[k] + (n - 1) * (c2[k] - c1[k]) for k in c1}
+    return flops, byts, coll
+
+
+def _state_bytes_per_device(arch, shape_name, mesh_cfg, run, rule_set):
+    """Exact persistent-state (params/opt/cache) bytes per device from the
+    shardings — the 'does it fit' number (CPU memory_analysis lacks TPU
+    buffer reuse, so temp_bytes there is only an upper bound)."""
+    from repro import models
+    from repro.train.step import train_state_shapes
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = make_mesh(MeshConfig(multi_pod=mesh_cfg.multi_pod))
+    rules = R.make_rules(rule_set, mesh)
+
+    def shard_bytes(tree, spec_tree):
+        total = 0
+        specs = jax.tree_util.tree_leaves(
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+        for leaf, spec in zip(jax.tree_util.tree_leaves(tree), specs):
+            n = 1
+            for ax in spec:
+                if ax is None:
+                    continue
+                for a in ((ax,) if isinstance(ax, str) else ax):
+                    n *= mesh.shape[a]
+            total += leaf.size * leaf.dtype.itemsize // n
+        return total
+
+    if shape.kind == "train":
+        run = run or RunConfig(arch=arch, shape=shape_name, mesh=mesh_cfg)
+        ss = train_state_shapes(cfg, run)
+        spec = S.train_state_pspec(cfg, run, rules, ss)
+        return shard_bytes(ss, spec)
+    params = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+        models.param_shapes(cfg))
+    total = shard_bytes(params, S.params_pspec(cfg, rules))
+    if shape.kind == "decode":
+        _, _, cache = S.decode_input_specs(cfg, shape)
+        total += shard_bytes(cache, S.cache_pspec(cfg, shape, rules))
+    return total
+
+
+def model_memory_bytes(arch: str, shape_name: str, mesh_cfg: MeshConfig,
+                       kind: str) -> float:
+    """Analytic HBM traffic per device per step, assuming TPU-grade fusion
+    (flash attention => no S² materialization).  The HLO 'bytes accessed'
+    from the CPU backend counts pre-fusion operand bytes and overestimates
+    HBM traffic by >100x, so the dominant-term decision uses this model;
+    both numbers are reported."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh = (2, 16, 16) if mesh_cfg.multi_pod else (16, 16)
+    tp = 16
+    dp = mesh_cfg.num_devices // tp
+    N = cfg.n_params()
+    L = cfg.num_layers
+    d = cfg.d_model
+    B_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+    if kind == "train":
+        weights = 3 * (2 * N / tp)            # fwd + remat'd bwd re-gather
+        opt = 28 * N / (tp * dp)              # grad write + adam m/v rw fp32
+        acts = 2 * 6 * L * B_loc * S * d * 2  # ckpt save + reload (bf16)
+        return weights + opt + acts
+    if kind == "prefill":
+        weights = 2 * N / tp
+        acts = 6 * L * B_loc * S * d * 2
+        cache = (2 * sum(1 for i in range(L) if cfg.layer_kind(i)[0] ==
+                         "attn") * B_loc * S * cfg.num_kv_heads
+                 * cfg.resolved_head_dim * 2)
+        return weights + acts + cache
+    # decode: stream the TP weight shard + read the KV cache shard
+    weights = 2 * cfg.n_active_params() / tp
+    n_attn = sum(1 for i in range(L) if cfg.layer_kind(i)[0] == "attn")
+    cache = 2 * n_attn * (shape.global_batch / dp) * S \
+        * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+    return weights + cache
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, run: RunConfig | None = None,
+             tag: str = "") -> dict:
+    mesh_cfg = MeshConfig(multi_pod=multi_pod)
+    name = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if tag:
+        name += f"__{tag}"
+    out_path = OUT_DIR / f"{name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, mesh_cfg, run)
+    t1 = time.time()
+    compiled = lowered.compile()   # full-depth: proves the cell compiles
+    t2 = time.time()
+    result = dict(arch=arch, shape=shape_name, multi_pod=multi_pod,
+                  devices=mesh_cfg.num_devices, **meta,
+                  lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1),
+                  **analyse(lowered, compiled, mesh_cfg, cfg, shape))
+    # scan-corrected costs (see _cost_extrapolated)
+    flops, byts, coll = _cost_extrapolated(arch, shape_name, mesh_cfg, run)
+    result["flops_per_device"] = flops
+    result["bytes_per_device"] = byts
+    result["collective_bytes_per_device"] = coll
+    result["collective_total_bytes"] = sum(coll.values())
+    rf = result["roofline"]
+    rf["compute_s"] = flops / PEAK_FLOPS
+    rf["memory_s_hlo"] = byts / HBM_BW          # spec formula (CPU caveat)
+    mem_model = model_memory_bytes(arch, shape_name, mesh_cfg, shape.kind)
+    rf["memory_bytes_model"] = mem_model
+    rf["memory_s"] = mem_model / HBM_BW
+    rf["collective_s"] = sum(coll.values()) / ICI_BW
+    terms = {k: rf[k] for k in ("compute_s", "memory_s", "collective_s")}
+    rf["dominant"] = max(terms, key=terms.get)
+    rf["useful_flops_ratio"] = (rf["model_flops_per_device"] / flops
+                                if flops else 0.0)
+    result["state_bytes_per_device"] = _state_bytes_per_device(
+        arch, shape_name, mesh_cfg, run, meta["rule_set"])
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--keep-going", action="store_true")
+    args = ap.parse_args()
+
+    cells = (applicable_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                r = run_cell(arch, shape, mp, force=args.force)
+                rf = r["roofline"]
+                print(f"OK  {arch:26s} {shape:12s} pods={2 if mp else 1} "
+                      f"flops/dev={r['flops_per_device']:.3e} "
+                      f"comp={rf['compute_s'] * 1e3:8.2f}ms "
+                      f"mem={rf['memory_s'] * 1e3:8.2f}ms "
+                      f"coll={rf['collective_s'] * 1e3:8.2f}ms "
+                      f"dom={rf['dominant']:13s} "
+                      f"useful={rf['useful_flops_ratio'] * 100:5.1f}% "
+                      f"[lower {r['lower_s']}s compile {r['compile_s']}s]",
+                      flush=True)
+            except Exception as e:
+                print(f"FAIL {arch} {shape} pods={2 if mp else 1}: "
+                      f"{type(e).__name__}: {e}", flush=True)
+                if not args.keep_going:
+                    raise
+            finally:
+                jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+smoke tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig):
+    return make_production_mesh(multi_pod=cfg.multi_pod)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU examples/tests (degenerate 1x1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,100 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch × shape) —
+weak-type-correct, shardable, no device allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.config import ArchConfig, RunConfig, ShapeConfig, get_arch, get_shape
+from repro.sharding.rules import Rules
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Training/prefill batch structure for this architecture."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), act_dtype),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if cfg.frontend == "vlm_patches":
+        P = cfg.frontend_tokens
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+            "patches": jax.ShapeDtypeStruct((B, P, cfg.d_model), act_dtype),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                       cache_dtype=jnp.bfloat16):
+    """(tokens, pos, cache) stand-ins for a serve_step cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    cache = models.init_decode_cache(cfg, B, S, cache_dtype, mode="shape")
+    return tokens, pos, cache
+
+
+def batch_pspec(cfg: ArchConfig, shape: ShapeConfig, rules: Rules,
+                act_dtype=jnp.bfloat16):
+    """PartitionSpecs for the training batch (divisibility-aware)."""
+    specs = input_specs(cfg, shape, act_dtype)
+    names = {
+        "tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+        "frames": ("batch", "seq", "embed"),
+        "patches": ("batch", "seq", "embed"),
+    }
+    return {k: rules.spec(*names[k], shape=v.shape)
+            for k, v in specs.items()}
+
+
+def _zip_spec(axes_tree, shapes_tree, rules: Rules):
+    return jax.tree_util.tree_map(
+        lambda a, s: rules.spec(*a, shape=s.shape), axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def params_pspec(cfg: ArchConfig, rules: Rules):
+    return _zip_spec(models.param_logical_axes(cfg),
+                     models.param_shapes(cfg), rules)
+
+
+def cache_pspec(cfg: ArchConfig, shape: ShapeConfig, rules: Rules,
+                cache_dtype=jnp.bfloat16):
+    shapes = models.init_decode_cache(cfg, shape.global_batch,
+                                      shape.seq_len, cache_dtype,
+                                      mode="shape")
+    return _zip_spec(models.cache_logical_axes(cfg), shapes, rules)
+
+
+def train_state_pspec(cfg: ArchConfig, run: RunConfig, rules: Rules,
+                      state_shapes):
+    """Sharding for the full TrainState: optimizer state mirrors params
+    (ZeRO); 8-bit payloads/scales fall back to replicated-safe specs."""
+    from jax.sharding import PartitionSpec as P
+    p_spec = params_pspec(cfg, rules)
+    eight_bit = run.optimizer == "adamw8bit"
+    if eight_bit:
+        # int8 payloads are (blocks, BLOCK): shard the block dim over FSDP
+        def blk_spec(s):
+            return rules.spec("embed_fsdp", None, shape=s.shape)
+        m = jax.tree_util.tree_map(blk_spec, state_shapes.opt.m)
+        v = jax.tree_util.tree_map(blk_spec, state_shapes.opt.v)
+        ms = jax.tree_util.tree_map(blk_spec, state_shapes.opt.m_scale)
+        vs = jax.tree_util.tree_map(blk_spec, state_shapes.opt.v_scale)
+    else:
+        m = v = p_spec
+        ms = vs = None
+    from repro.train.step import TrainState
+    from repro.train import optimizer as opt
+    return TrainState(
+        params=p_spec,
+        opt=opt.AdamState(m=m, v=v, m_scale=ms, v_scale=vs),
+        moe_state=jax.tree_util.tree_map(lambda _: P(), state_shapes.moe_state),
+        step=P())

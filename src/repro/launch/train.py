@@ -1,0 +1,48 @@
+"""Training launcher.
+
+On a real cluster: one process per host, ``jax.distributed.initialize()``,
+the production mesh from mesh.py, shardings from launch/specs.py (exactly
+what dryrun.py lowers), the Trainer loop around it.  On this CPU container
+it runs the same Trainer on the reduced (smoke) configs end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 100 --batch 8 --seq 128 [--full-config] [--ckpt-dir /tmp/ck]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.config import RunConfig, get_arch, get_smoke_arch
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full arch (needs the production mesh); "
+                         "default uses the reduced smoke config")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adamw8bit"])
+    args = ap.parse_args()
+
+    cfg = (get_arch(args.arch) if args.full_config
+           else get_smoke_arch(args.arch))
+    run = RunConfig(arch=args.arch, learning_rate=args.lr,
+                    remat_policy=args.remat, optimizer=args.optimizer)
+    tc = TrainerConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, run, tc)
+    state = trainer.train()
+    print(f"done at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+from repro.models.model import (  # noqa: F401
+    block_pattern,
+    cache_logical_axes,
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_moe_state,
+    init_params,
+    loss_fn,
+    num_blocks,
+    param_logical_axes,
+    param_shapes,
+    prefill,
+)

@@ -1,0 +1,257 @@
+"""Core transformer layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Parameters are plain dict pytrees.  Every ``*_init`` function takes a
+:class:`Maker`, which produces either real arrays (init mode), logical-axis
+tuples (axes mode) or ShapeDtypeStructs (shape mode) from the SAME code
+path — so sharding specs can never drift from the real parameter tree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.sharding.rules import shard
+
+
+class Maker:
+    """Single-source param factory: arrays / logical axes / shapes."""
+
+    def __init__(self, key=None, dtype=jnp.float32, mode: str = "init"):
+        assert mode in ("init", "axes", "shape")
+        self.key = key
+        self.dtype = dtype
+        self.mode = mode
+        self._n = 0
+
+    def param(self, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              fan_in: Optional[int] = None, init: str = "normal"):
+        assert len(shape) == len(axes), (shape, axes)
+        if self.mode == "axes":
+            return axes
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, self.dtype)
+        self._n += 1
+        k = jax.random.fold_in(self.key, self._n)
+        if init == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if init == "ones":
+            return jnp.ones(shape, self.dtype)
+        if init == "mamba_a":
+            # S4/Mamba A init: -log of 1..d_state broadcast over channels
+            d_state = shape[-1]
+            a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                         shape[:-1] + (1,))
+            return jnp.log(a).astype(self.dtype)
+        scale = 1.0 / (fan_in or shape[0]) ** 0.5
+        return (jax.random.normal(k, shape, jnp.float32) * scale
+                ).astype(self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization (fp32 accumulation)
+# ---------------------------------------------------------------------------
+
+
+def norm_init(mk: Maker, d: int, kind: str):
+    p = {"scale": mk.param((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        p["bias"] = mk.param((d,), ("embed",), init="zeros")
+    return p
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(
+            jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return theta ** (-jnp.arange(0, head_dim, 2, jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if theta <= 0.0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def attn_init(mk: Maker, cfg: ArchConfig):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    p = {
+        "wq": mk.param((d, H, hd), ("embed_fsdp", "heads", "head_dim"),
+                       fan_in=d),
+        "wk": mk.param((d, KV, hd), ("embed_fsdp", "kv_heads", "head_dim"),
+                       fan_in=d),
+        "wv": mk.param((d, KV, hd), ("embed_fsdp", "kv_heads", "head_dim"),
+                       fan_in=d),
+        "wo": mk.param((H, hd, d), ("heads", "head_dim", "embed_fsdp"),
+                       fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk.param((H, hd), ("heads", "head_dim"), init="zeros")
+        p["bk"] = mk.param((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = mk.param((KV, hd), ("kv_heads", "head_dim"), init="zeros")
+    return p
+
+
+def _qkv(p, cfg: ArchConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, cfg: ArchConfig, x: jnp.ndarray, *, is_local: bool,
+               positions: Optional[jnp.ndarray] = None,
+               return_kv: bool = False):
+    """Full-sequence (train/prefill) attention.  x: (B, S, d_model)."""
+    from repro.kernels.flash_attention import ops as fa
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    # context parallelism (rule-sets mapping seq->model) keeps q sharded
+    # over the sequence and replicates K/V ("kv_seq"), so attention needs
+    # no S^2 collective — only the cheap KV gather.
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    window = cfg.window_size if (is_local and cfg.window_size > 0) else 0
+    out = fa.flash_attention(q, k, v, causal=True, window=window,
+                             softcap=cfg.logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    y = shard(y, "batch", "seq", "embed")
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def attn_decode(p, cfg: ArchConfig, x: jnp.ndarray, kv_cache, pos,
+                *, is_local: bool):
+    """Single-token decode.  x: (B, 1, d); kv_cache: dict(k, v) with
+    (B, S_max, KV, hd); pos: (B,) current positions (tokens written at pos).
+    """
+    from repro.kernels.decode_attention import ops as da
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        kv_cache["k"], k.astype(kv_cache["k"].dtype), pos[0], axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        kv_cache["v"], v.astype(kv_cache["v"].dtype), pos[0], axis=1)
+    kc = shard(kc, "batch", "cache_seq", "cache_heads", "head_dim")
+    vc = shard(vc, "batch", "cache_seq", "cache_heads", "head_dim")
+    window = cfg.window_size if (is_local and cfg.window_size > 0) else 0
+    out = da.decode_attention(q[:, 0], kc, vc, pos, window=window,
+                              softcap=cfg.logit_softcap)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"])[:, None, :]
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(mk: Maker, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "gelu_plain":
+        return {
+            "w1": mk.param((d, f), ("embed_fsdp", "mlp"), fan_in=d),
+            "b1": mk.param((f,), ("mlp",), init="zeros"),
+            "w2": mk.param((f, d), ("mlp", "embed_fsdp"), fan_in=f),
+            "b2": mk.param((d,), ("embed",), init="zeros"),
+        }
+    return {
+        "w_gate": mk.param((d, f), ("embed_fsdp", "mlp"), fan_in=d),
+        "w_up": mk.param((d, f), ("embed_fsdp", "mlp"), fan_in=d),
+        "w_down": mk.param((f, d), ("mlp", "embed_fsdp"), fan_in=f),
+    }
+
+
+def mlp_apply(p, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.act == "gelu_plain":
+        h = jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"]
+        h = shard(h, "batch", "seq", "mlp")
+        h = jax.nn.gelu(h)
+        y = jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"]
+        return shard(y, "batch", "seq", "embed")
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = shard(act(g) * u, "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return shard(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(mk: Maker, cfg: ArchConfig):
+    p = {"tokens": mk.param((cfg.vocab_size, cfg.d_model),
+                            ("vocab", "embed_fsdp"), fan_in=1)}
+    if not cfg.tie_embeddings:
+        p["head"] = mk.param((cfg.d_model, cfg.vocab_size),
+                             ("embed_fsdp", "vocab"), fan_in=cfg.d_model)
+    return p
+
+
+def embed_apply(p, cfg: ArchConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = p["tokens"][tokens]
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_head_apply(p, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["tokens"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["head"])
+    logits = softcap(logits, cfg.final_softcap)
+    return shard(logits, "batch", "seq", "vocab")

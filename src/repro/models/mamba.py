@@ -1,0 +1,106 @@
+"""Mamba-1 block (selective SSM) for falcon-mamba and Jamba hybrid layers."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.models.layers import Maker
+from repro.sharding.rules import shard
+
+
+def _dims(cfg: ArchConfig):
+    m = cfg.mamba
+    di = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return di, m.d_state, m.d_conv, dt_rank
+
+
+def mamba_init(mk: Maker, cfg: ArchConfig):
+    d = cfg.d_model
+    di, st, dc, dtr = _dims(cfg)
+    return {
+        "in_proj": mk.param((d, 2 * di), ("embed_fsdp", "mamba_inner"),
+                            fan_in=d),
+        "conv_w": mk.param((di, dc), ("mamba_inner", "conv"), fan_in=dc),
+        "conv_b": mk.param((di,), ("mamba_inner",), init="zeros"),
+        "x_proj": mk.param((di, dtr + 2 * st), ("mamba_inner", None),
+                           fan_in=di),
+        "dt_w": mk.param((dtr, di), (None, "mamba_inner"), fan_in=dtr),
+        "dt_b": mk.param((di,), ("mamba_inner",), init="ones"),
+        "A_log": mk.param((di, st), ("mamba_inner", "state"),
+                          init="mamba_a"),
+        "D": mk.param((di,), ("mamba_inner",), init="ones"),
+        "out_proj": mk.param((di, d), ("mamba_inner", "embed_fsdp"),
+                             fan_in=di),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over seq.  x: (B, S, DI); w: (DI, K)."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[:, i] for i in range(K))
+    return out + b
+
+
+def _ssm_inputs(p, cfg: ArchConfig, xc: jnp.ndarray):
+    di, st, _, dtr = _dims(cfg)
+    proj = jnp.einsum("...d,dk->...k", xc, p["x_proj"])
+    dt_r, Bm, Cm = jnp.split(proj, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("...r,rd->...d", dt_r, p["dt_w"])
+                         + p["dt_b"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    return dt, A, Bm, Cm
+
+
+def mamba_apply(p, cfg: ArchConfig, x: jnp.ndarray,
+                return_state: bool = False):
+    """Full-sequence path.  x: (B, S, d_model)."""
+    di, st, dc, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    xc_pre, z = jnp.split(xz, 2, axis=-1)
+    xc_pre = shard(xc_pre, "batch", "seq", "mamba_inner")
+    xc = jax.nn.silu(_causal_conv(xc_pre, p["conv_w"], p["conv_b"]))
+    dt, A, Bm, Cm = _ssm_inputs(p, cfg, xc)
+    y, h = ssm_ops.selective_scan(xc, dt, A, Bm, Cm, p["D"])
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    out = shard(out, "batch", "seq", "embed")
+    if return_state:
+        # decode-ready cache: SSM state + last (d_conv-1) pre-activation taps
+        conv_tail = xc_pre[:, -(dc - 1):, :]
+        return out, {"h": h, "conv": conv_tail}
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    di, st, dc, _ = _dims(cfg)
+    return {
+        "h": jnp.zeros((batch, di, st), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+    }
+
+
+def mamba_decode(p, cfg: ArchConfig, x: jnp.ndarray, cache: dict
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token step.  x: (B, 1, d_model)."""
+    di, st, dc, _ = _dims(cfg)
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc = xc[:, 0]                                    # (B, DI)
+    window = jnp.concatenate([cache["conv"],
+                              xc[:, None].astype(cache["conv"].dtype)],
+                             axis=1)                 # (B, dc, DI)
+    conv = (jnp.einsum("bkd,dk->bd", window.astype(xc.dtype),
+                       p["conv_w"]) + p["conv_b"])
+    xcs = jax.nn.silu(conv)
+    dt, A, Bm, Cm = _ssm_inputs(p, cfg, xcs)
+    y, h = ssm_ops.selective_step(xcs, dt, A, Bm, Cm, p["D"], cache["h"])
+    y = y * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,401 @@
+"""Architecture builder: one code path for all 10 assigned families.
+
+A model is a stack of ``num_blocks`` identical *blocks* scanned with
+``lax.scan`` (keeps HLO size O(1) in depth — essential for the 94-layer
+dry-runs).  A block is a short pattern of layers:
+
+  dense/moe/audio/vlm : [attn]            (gemma2: [attn-local, attn-global])
+  ssm                 : [mamba]
+  hybrid (jamba)      : 8 layers, attention at position 7, MoE on odd
+                        positions (1:7 attn:mamba, MoE every other layer)
+
+MoE layers carry per-expert load telemetry (EWMA) through the step — the
+MIDAS stale-telemetry loop — threaded as explicit state.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import stubs
+from repro.sharding.rules import shard
+
+
+class LayerSpec(NamedTuple):
+    kind: str        # "attn" | "mamba"
+    is_moe: bool
+    is_local: bool
+
+
+def block_pattern(cfg: ArchConfig) -> List[LayerSpec]:
+    if cfg.family == "ssm":
+        return [LayerSpec("mamba", False, False)]
+    if cfg.family == "hybrid":
+        out = []
+        for i in range(cfg.attn_every):
+            kind, is_moe = cfg.layer_kind(i)
+            out.append(LayerSpec(kind, is_moe, False))
+        return out
+    if cfg.alt_local_global:
+        return [LayerSpec("attn", cfg.moe is not None, True),
+                LayerSpec("attn", cfg.moe is not None, False)]
+    return [LayerSpec("attn", cfg.moe is not None,
+                      cfg.window_size > 0)]
+
+
+def _scan_unroll():
+    # REPRO_SCAN_FULL_UNROLL=1 removes the layer while-loop so XLA cost
+    # analysis sees every block (dry-run cost compiles only — see
+    # launch/dryrun._cost_extrapolated).
+    return bool(os.environ.get("REPRO_SCAN_FULL_UNROLL"))
+
+
+def num_blocks(cfg: ArchConfig) -> int:
+    pat = block_pattern(cfg)
+    assert cfg.num_layers % len(pat) == 0, (cfg.name, cfg.num_layers,
+                                            len(pat))
+    return cfg.num_layers // len(pat)
+
+
+def _layer_has_ffn(cfg: ArchConfig) -> bool:
+    return cfg.family != "ssm"
+
+
+# ---------------------------------------------------------------------------
+# Init (arrays / logical axes / shapes from one code path)
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(mk: L.Maker, cfg: ArchConfig, spec: LayerSpec):
+    p: Dict[str, Any] = {"pre_norm": L.norm_init(mk, cfg.d_model, cfg.norm)}
+    if spec.kind == "attn":
+        p["mixer"] = L.attn_init(mk, cfg)
+    else:
+        p["mixer"] = mamba_lib.mamba_init(mk, cfg)
+    if _layer_has_ffn(cfg):
+        p["post_norm"] = L.norm_init(mk, cfg.d_model, cfg.norm)
+        if spec.is_moe:
+            p["ffn"] = moe_lib.moe_init(mk, cfg)
+        else:
+            p["ffn"] = L.mlp_init(mk, cfg)
+    return p
+
+
+def _block_init(mk_factory, cfg: ArchConfig):
+    return {str(i): _layer_init(mk_factory(i), cfg, spec)
+            for i, spec in enumerate(block_pattern(cfg))}
+
+
+def init_params(cfg: ArchConfig, key: Optional[jnp.ndarray] = None,
+                dtype=jnp.float32, mode: str = "init"):
+    """mode: "init" (arrays) | "axes" (logical names) | "shape"."""
+    n = num_blocks(cfg)
+    if mode == "init":
+        k_emb, k_blocks, k_fe = jax.random.split(key, 3)
+
+        def one_block(k):
+            return _block_init(
+                lambda i: L.Maker(jax.random.fold_in(k, i), dtype, "init"),
+                cfg)
+
+        blocks = jax.vmap(one_block)(jax.random.split(k_blocks, n))
+        mk = L.Maker(k_emb, dtype, "init")
+        mk_fe = L.Maker(k_fe, dtype, "init")
+    else:
+        blocks = _block_init(lambda i: L.Maker(None, dtype, mode), cfg)
+        if mode == "axes":
+            blocks = jax.tree_util.tree_map(
+                lambda axes: ("layers",) + tuple(axes), blocks,
+                is_leaf=lambda x: isinstance(x, tuple))
+        else:
+            blocks = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype),
+                blocks)
+        mk = L.Maker(None, dtype, mode)
+        mk_fe = mk
+    params = {
+        "embed": L.embed_init(mk, cfg),
+        "final_norm": L.norm_init(mk, cfg.d_model, cfg.norm),
+        "blocks": blocks,
+    }
+    fe = stubs.frontend_init(mk_fe, cfg)
+    if fe:
+        params["frontend"] = fe
+    return params
+
+
+def param_logical_axes(cfg: ArchConfig):
+    return init_params(cfg, mode="axes")
+
+
+def param_shapes(cfg: ArchConfig, dtype=jnp.float32):
+    return init_params(cfg, dtype=dtype, mode="shape")
+
+
+# ---------------------------------------------------------------------------
+# MoE telemetry state
+# ---------------------------------------------------------------------------
+
+
+def init_moe_state(cfg: ArchConfig) -> Dict[str, jnp.ndarray]:
+    """Stale per-expert load telemetry per MoE block position, stacked over
+    blocks: {pos: (num_blocks, E)} — balanced (ones) at init."""
+    if cfg.moe is None:
+        return {}
+    n = num_blocks(cfg)
+    return {str(i): jnp.ones((n, cfg.moe.num_experts), jnp.float32)
+            for i, spec in enumerate(block_pattern(cfg)) if spec.is_moe}
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    if cfg.frontend == "audio_frames":
+        return stubs.audio_frontend(cfg, batch["frames"])
+    tok = L.embed_apply(params["embed"], cfg, batch["tokens"])
+    if cfg.frontend == "vlm_patches":
+        return stubs.vlm_frontend(params["frontend"], cfg, batch["patches"],
+                                  tok)
+    return tok
+
+
+def _layer_apply(p, cfg: ArchConfig, spec: LayerSpec, x, moe_load):
+    h = L.norm_apply(p["pre_norm"], x, cfg.norm)
+    if spec.kind == "attn":
+        mix = L.attn_apply(p["mixer"], cfg, h, is_local=spec.is_local)
+    else:
+        mix = mamba_lib.mamba_apply(p["mixer"], cfg, h)
+    x = x + mix
+    aux = None
+    if _layer_has_ffn(cfg):
+        h2 = L.norm_apply(p["post_norm"], x, cfg.norm)
+        if spec.is_moe:
+            y, aux = moe_lib.moe_apply(p["ffn"], cfg, h2, moe_load)
+        else:
+            y = L.mlp_apply(p["ffn"], cfg, h2)
+        x = x + y
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            moe_state: Optional[Dict[str, jnp.ndarray]] = None,
+            remat_policy: str = "none"):
+    """Full-sequence forward.  Returns (logits, new_moe_state, aux)."""
+    pattern = block_pattern(cfg)
+    moe_state = moe_state if moe_state is not None else init_moe_state(cfg)
+    x = _embed_inputs(params, cfg, batch)
+
+    def body(x, scanned):
+        bp, loads = scanned
+        auxes = {}
+        for i, spec in enumerate(pattern):
+            x, aux = _layer_apply(bp[str(i)], cfg, spec, x,
+                                  loads.get(str(i)))
+            if aux is not None:
+                auxes[str(i)] = aux
+        return x, auxes
+
+    if remat_policy != "none":
+        policy = {
+            "full": None,
+            "dots_saveable": jax.checkpoint_policies.dots_saveable,
+            "dots_with_no_batch_dims_saveable":
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+
+    x, auxes = jax.lax.scan(body, x, (params["blocks"], moe_state),
+                            unroll=_scan_unroll())
+
+    new_state = {}
+    aux_out = {}
+    for key_, a in auxes.items():
+        new_state[key_] = moe_lib.update_load_ewma(moe_state[key_], a.load)
+        aux_out[key_] = a
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = L.lm_head_apply(params["embed"], cfg, x)
+    return logits, new_state, aux_out
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            moe_state=None, remat_policy: str = "none",
+            aux_coef: float = 0.01):
+    """Next-token cross entropy (fp32), plus switch aux loss for the topk
+    router baseline.  Returns (loss, (new_moe_state, metrics))."""
+    logits, new_state, aux = forward(params, cfg, batch, moe_state,
+                                     remat_policy)
+    if cfg.frontend == "audio_frames":
+        labels = batch["labels"]
+        shift_logits, shift_labels = logits[:, :-1], labels[:, 1:]
+    elif cfg.frontend == "vlm_patches":
+        P = batch["patches"].shape[1]
+        toks = batch["tokens"]
+        shift_logits, shift_labels = logits[:, P:-1], toks[:, 1:]
+    else:
+        toks = batch["tokens"]
+        shift_logits, shift_labels = logits[:, :-1], toks[:, 1:]
+    lg = shift_logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, shift_labels[..., None],
+                                 axis=-1)[..., 0]
+    ce = (lse - picked).mean()
+    metrics = {"ce": ce}
+    loss = ce
+    if aux:
+        drop = jnp.stack([a.drop_rate.mean() for a in aux.values()]).mean()
+        steer = jnp.stack([a.steer_rate.mean() for a in aux.values()]).mean()
+        load_cv = jnp.stack(
+            [jnp.std(a.load, axis=-1).mean() for a in aux.values()]).mean()
+        metrics.update(moe_drop_rate=drop, moe_steer_rate=steer,
+                       moe_load_cv=load_cv)
+        if cfg.moe is not None and cfg.moe.router == "topk":
+            aux_l = jnp.stack([a.aux_loss.mean() for a in aux.values()]
+                              ).mean()
+            loss = loss + aux_coef * aux_l
+            metrics["aux_loss"] = aux_l
+    return loss, (new_state, metrics)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (forward + cache collection, logits for the last position only)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray],
+            cache_len: Optional[int] = None, cache_dtype=jnp.bfloat16,
+            remat_policy: str = "none"):
+    """Serving prefill: run the full sequence, emit last-position logits and
+    a decode-ready cache (KV rings padded to ``cache_len``)."""
+    pattern = block_pattern(cfg)
+    moe_state = init_moe_state(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    cache_len = cache_len or S
+
+    def body(x, scanned):
+        bp, loads = scanned
+        caches = {}
+        for i, spec in enumerate(pattern):
+            p = bp[str(i)]
+            h = L.norm_apply(p["pre_norm"], x, cfg.norm)
+            if spec.kind == "attn":
+                mix, kv = L.attn_apply(p["mixer"], cfg, h,
+                                       is_local=spec.is_local,
+                                       return_kv=True)
+                pad = ((0, 0), (0, cache_len - S), (0, 0), (0, 0))
+                caches[str(i)] = {
+                    "k": jnp.pad(kv["k"].astype(cache_dtype), pad),
+                    "v": jnp.pad(kv["v"].astype(cache_dtype), pad)}
+            else:
+                mix, st = mamba_lib.mamba_apply(p["mixer"], cfg, h,
+                                                return_state=True)
+                caches[str(i)] = {"h": st["h"],
+                                  "conv": st["conv"].astype(cache_dtype)}
+            x = x + mix
+            if _layer_has_ffn(cfg):
+                h2 = L.norm_apply(p["post_norm"], x, cfg.norm)
+                if spec.is_moe:
+                    y, _ = moe_lib.moe_apply(p["ffn"], cfg, h2,
+                                             loads.get(str(i)))
+                else:
+                    y = L.mlp_apply(p["ffn"], cfg, h2)
+                x = x + y
+        return x, caches
+
+    if remat_policy != "none":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    x, cache = jax.lax.scan(body, x, (params["blocks"], moe_state),
+                           unroll=_scan_unroll())
+    x = L.norm_apply(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = L.lm_head_apply(params["embed"], cfg, x)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token with cache)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16, mode: str = "init"):
+    """Stacked per-block-position caches: attention positions get KV rings,
+    mamba positions get (h, conv) states."""
+    n = num_blocks(cfg)
+    kv = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    # mode="shape" must NEVER allocate (a 32k x 128 cache is tens of GB)
+    make = (jax.ShapeDtypeStruct if mode == "shape"
+            else lambda s, d: jnp.zeros(s, d))
+    cache: Dict[str, Any] = {}
+    for i, spec in enumerate(block_pattern(cfg)):
+        if spec.kind == "attn":
+            shp = (n, batch, max_seq, kv, hd)
+            c = {"k": make(shp, dtype), "v": make(shp, dtype)}
+        else:
+            di, st, dc, _ = mamba_lib._dims(cfg)
+            c = {"h": make((n, batch, di, st), jnp.float32),
+                 "conv": make((n, batch, dc - 1, di), dtype)}
+        cache[str(i)] = c
+    return cache
+
+
+def cache_logical_axes(cfg: ArchConfig):
+    axes: Dict[str, Any] = {}
+    for i, spec in enumerate(block_pattern(cfg)):
+        if spec.kind == "attn":
+            a = ("layers", "batch", "cache_seq", "cache_heads", "head_dim")
+            axes[str(i)] = {"k": a, "v": a}
+        else:
+            axes[str(i)] = {
+                "h": ("layers", "batch", "mamba_inner", "state"),
+                "conv": ("layers", "batch", "conv", "mamba_inner")}
+    return axes
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens: jnp.ndarray,
+                pos: jnp.ndarray):
+    """One decode step.  tokens: (B, 1) int32; pos: (B,) current write
+    position.  Returns (logits (B, 1, V), new_cache)."""
+    pattern = block_pattern(cfg)
+    x = L.embed_apply(params["embed"], cfg, tokens)
+
+    def body(x, scanned):
+        bp, cache_p = scanned
+        new_c = {}
+        for i, spec in enumerate(pattern):
+            p = bp[str(i)]
+            h = L.norm_apply(p["pre_norm"], x, cfg.norm)
+            if spec.kind == "attn":
+                mix, new_c[str(i)] = L.attn_decode(
+                    p["mixer"], cfg, h, cache_p[str(i)], pos,
+                    is_local=spec.is_local)
+            else:
+                mix, new_c[str(i)] = mamba_lib.mamba_decode(
+                    p["mixer"], cfg, h, cache_p[str(i)])
+            x = x + mix
+            if _layer_has_ffn(cfg):
+                h2 = L.norm_apply(p["post_norm"], x, cfg.norm)
+                if spec.is_moe:
+                    y, _ = moe_lib.moe_apply(p["ffn"], cfg, h2, None)
+                else:
+                    y = L.mlp_apply(p["ffn"], cfg, h2)
+                x = x + y
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache),
+                                unroll=_scan_unroll())
+    x = L.norm_apply(params["final_norm"], x, cfg.norm)
+    logits = L.lm_head_apply(params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,50 @@
+"""Modality frontends (STUBS per spec).
+
+The assigned [audio]/[vlm] entries specify the transformer BACKBONE only;
+``input_specs()`` provides precomputed frame/patch embeddings.  These stubs
+add the minimal glue: sinusoidal positions for audio frames and a learned
+projector for vision patches.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config import ArchConfig
+from repro.models.layers import Maker
+from repro.sharding.rules import shard
+
+
+def sinusoidal_positions(S: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((S, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang[:, : (d - d // 2)]))
+    return out
+
+
+def frontend_init(mk: Maker, cfg: ArchConfig):
+    if cfg.frontend == "vlm_patches":
+        # llava-style multimodal projector (single linear here; the vision
+        # tower itself is stubbed away upstream)
+        return {"proj": mk.param((cfg.d_model, cfg.d_model),
+                                 ("embed", "embed_fsdp"), fan_in=cfg.d_model)}
+    return {}
+
+
+def audio_frontend(cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S, d_model) precomputed EnCodec frame embeddings."""
+    S, d = frames.shape[1], frames.shape[2]
+    x = frames + sinusoidal_positions(S, d).astype(frames.dtype)[None]
+    return shard(x, "batch", "seq", "embed")
+
+
+def vlm_frontend(p, cfg: ArchConfig, patches: jnp.ndarray,
+                 token_embeds: jnp.ndarray) -> jnp.ndarray:
+    """patches: (B, P, d_model) precomputed patch embeddings; prepended to
+    the text token embeddings after the projector."""
+    proj = jnp.einsum("bpd,de->bpe", patches, p["proj"])
+    x = jnp.concatenate([proj.astype(token_embeds.dtype), token_embeds],
+                        axis=1)
+    return shard(x, "batch", "seq", "embed")

@@ -1,0 +1,2 @@
+from repro.serve.router import MidasRouter  # noqa: F401
+from repro.serve.step import make_prefill_step, make_serve_step  # noqa: F401

@@ -1,0 +1,32 @@
+"""Serving step functions (prefill + decode) for pjit."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.config import ArchConfig, RunConfig
+
+
+def make_prefill_step(cfg: ArchConfig, run: RunConfig,
+                      cache_len: int | None = None):
+    cache_dtype = jnp.dtype(run.decode_kv_dtype)
+
+    def prefill_step(params, batch):
+        return models.prefill(params, cfg, batch, cache_len=cache_len,
+                              cache_dtype=cache_dtype)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, run: RunConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = models.decode_step(params, cfg, cache, tokens,
+                                               pos)
+        next_token = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return next_token.astype(jnp.int32), new_cache
+
+    return serve_step

@@ -1,0 +1,215 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code annotates parameters and activations with *logical* axis names
+("embed", "mlp", "heads", "expert", "batch", ...).  A rule-set maps logical
+names to mesh axes.  Different rule-sets are the main §Perf hillclimb lever:
+swapping a rule-set re-shards the whole model without touching model code.
+
+Rules are applied through a context (set by the launcher / dryrun); with no
+context active, ``shard()`` is a no-op so single-device smoke tests run
+unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+# Training: DP over (pod, data) for the batch; FSDP shards weights' embed dim
+# over (pod, data); TP over model for heads / mlp / vocab / experts.
+TRAIN_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "embed_fsdp": ("pod", "data"),     # FSDP dim of 2D weights
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "expert_embed": ("pod", "data"),   # FSDP dim of expert weights
+    "expert_mlp": None,
+    "mamba_inner": "model",
+    "conv": None,
+    "state": None,
+    "layers": None,
+    "cache_seq": None,
+    "cache_heads": "model",
+}
+
+# Serving (decode/prefill): batch over (pod, data), TP over model, weights
+# replicated over DP axes (no per-step all-gathers on the latency path).
+SERVE_RULES: Dict[str, MeshAxes] = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "embed_fsdp": None,
+    "expert_embed": None,
+})
+
+# Long-context decode (batch=1): sequence-parallel KV cache over data.
+LONG_RULES: Dict[str, MeshAxes] = dict(SERVE_RULES)
+LONG_RULES.update({
+    "batch": "pod",
+    "cache_seq": "data",
+    "embed_fsdp": None,
+})
+
+# Serving for very large models that do not fit TP-only: 2D weight sharding.
+SERVE_2D_RULES: Dict[str, MeshAxes] = dict(SERVE_RULES)
+SERVE_2D_RULES.update({
+    "embed_fsdp": "data",
+    "expert_embed": "data",
+})
+
+# §Perf variants -----------------------------------------------------------
+# head_dim TP: for archs whose head counts don't divide the model axis
+# (smollm 15H/5KV, starcoder2 24H/2KV, gemma2 8H/4KV) shard the head_dim
+# instead — QK/AV contractions pick up a psum but attention stops being
+# replicated 16x.
+SERVE_HD_RULES: Dict[str, MeshAxes] = dict(SERVE_RULES)
+SERVE_HD_RULES.update({"heads": None, "kv_heads": None,
+                       "head_dim": "model", "cache_heads": None})
+
+TRAIN_HD_RULES: Dict[str, MeshAxes] = dict(TRAIN_RULES)
+TRAIN_HD_RULES.update({"heads": None, "kv_heads": None,
+                       "head_dim": "model", "cache_heads": None})
+
+# KV-cache sequence sharding over the model axis for decode when kv_heads
+# can't fill it (dbrx kv=8, qwen3 kv=4): flash-decoding style — partial
+# softmax per shard, psum-logsumexp combine (XLA derives it from the
+# sharded softmax).
+SERVE_KVSEQ_RULES: Dict[str, MeshAxes] = dict(SERVE_2D_RULES)
+SERVE_KVSEQ_RULES.update({"cache_seq": "model", "cache_heads": None})
+
+# Expert-resident training: no FSDP on expert weights (they stay sharded
+# over the model axis only) — trades optimizer-state memory for zero
+# per-layer expert all-gathers.
+TRAIN_EP_RESIDENT_RULES: Dict[str, MeshAxes] = dict(TRAIN_RULES)
+TRAIN_EP_RESIDENT_RULES.update({"expert_embed": None})
+
+# Weight-stationary MoE decode: KV-seq over model (flash-decoding combine),
+# expert weights resident as f-chunks over data (partial_f path in
+# moe.py — token batch is tiny at decode, so it is all-gathered and the
+# down-proj partials psum'd instead of moving hundreds of GB of experts).
+SERVE_DECODE_MOE_RULES: Dict[str, MeshAxes] = dict(SERVE_KVSEQ_RULES)
+SERVE_DECODE_MOE_RULES.update({"expert_embed": None, "expert_mlp": "data"})
+
+# Context parallelism for prefill: shard the q-sequence over the model
+# axis, replicate K/V (tiny: S·KV·hd per layer) — the S² compute splits
+# 16-way with only the KV gather as collective.
+SERVE_SEQ_RULES: Dict[str, MeshAxes] = dict(SERVE_RULES)
+SERVE_SEQ_RULES.update({"seq": "model", "kv_seq": None,
+                        "heads": None, "kv_heads": None})
+
+RULE_SETS: Dict[str, Dict[str, MeshAxes]] = {
+    "train": TRAIN_RULES,
+    "serve": SERVE_RULES,
+    "long": LONG_RULES,
+    "serve_2d": SERVE_2D_RULES,
+    "serve_hd": SERVE_HD_RULES,
+    "train_hd": TRAIN_HD_RULES,
+    "serve_kvseq": SERVE_KVSEQ_RULES,
+    "serve_decode_moe": SERVE_DECODE_MOE_RULES,
+    "serve_seq": SERVE_SEQ_RULES,
+    "train_ep_resident": TRAIN_EP_RESIDENT_RULES,
+}
+
+
+class Rules:
+    def __init__(self, mapping: Dict[str, MeshAxes], mesh: Optional[Mesh]):
+        self.mapping = dict(mapping)
+        self.mesh = mesh
+
+    def spec(self, *logical: Optional[str],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tensor whose dims have these logical names.
+
+        When ``shape`` is given, shardings that do not divide the dim size
+        are DROPPED (replicated) — this is what makes a fixed production
+        mesh usable across archs whose head counts (15, 24, 8, ...) do not
+        divide the 16-way model axis.  The roofline analysis surfaces the
+        replication cost; alternate rule-sets re-shard such dims (§Perf).
+        """
+        axes = []
+        used = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                axes.append(None)
+                continue
+            ax = self.mapping.get(name)
+            if ax is None:
+                axes.append(None)
+                continue
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            # the same mesh axis may appear only once in a PartitionSpec
+            flat = tuple(a for a in flat if a not in used
+                         and (self.mesh is None or a in self.mesh.axis_names))
+            if shape is not None and flat and self.mesh is not None:
+                n = 1
+                for a in flat:
+                    n *= self.mesh.shape[a]
+                if shape[i] % n != 0:
+                    # try the largest prefix of the axis tuple that divides
+                    while flat:
+                        flat = flat[:-1]
+                        n = 1
+                        for a in flat:
+                            n *= self.mesh.shape[a]
+                        if flat and shape[i] % n == 0:
+                            break
+            used.update(flat)
+            if not flat:
+                axes.append(None)
+            elif len(flat) == 1:
+                axes.append(flat[0])
+            else:
+                axes.append(flat)
+        return P(*axes)
+
+    def sharding(self, *logical: Optional[str],
+                 shape: Optional[Sequence[int]] = None
+                 ) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical, shape=shape))
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = current_rules()
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def make_rules(rule_set: str, mesh: Optional[Mesh]) -> Rules:
+    return Rules(RULE_SETS[rule_set], mesh)
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain an activation's sharding by logical axis names (no-op when
+    no rules context is active, e.g. in CPU smoke tests)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(*logical, shape=x.shape))

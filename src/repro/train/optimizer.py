@@ -1,0 +1,108 @@
+"""Optimizers (no external deps): AdamW with fp32 state, optional 8-bit
+(block-quantized) first/second moments — the memory-compression trick that
+matters at 100B+ scale — plus global-norm clipping.
+
+State sharding mirrors parameter sharding (ZeRO-style: the FSDP axes shard
+both), so per-device optimizer memory scales 1/(dp·tp).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import global_norm
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+    # 8-bit mode keeps per-block scales alongside int8 payloads
+    m_scale: Any = None
+    v_scale: Any = None
+
+
+BLOCK = 256  # quantization block for 8-bit state
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    return flat[:n].reshape(shape)
+
+
+def init_adam_state(params, *, eight_bit: bool = False) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if not eight_bit:
+        m = jax.tree_util.tree_map(zeros, params)
+        v = jax.tree_util.tree_map(zeros, params)
+        return AdamState(m=m, v=v)
+    q = jax.tree_util.tree_map(lambda p: _quantize(zeros(p))[0], params)
+    s = jax.tree_util.tree_map(lambda p: _quantize(zeros(p))[1], params)
+    return AdamState(m=q, v=jax.tree_util.tree_map(jnp.copy, q),
+                     m_scale=s, v_scale=jax.tree_util.tree_map(jnp.copy, s))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * factor).astype(x.dtype), grads), g
+
+
+def adamw_update(params, grads, state: AdamState, step: jnp.ndarray, *,
+                 lr: float, beta1: float = 0.9, beta2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 eight_bit: bool = False):
+    """Returns (new_params, new_state).  Params stay in their stored dtype
+    (fp32 master recommended); math is fp32."""
+    t = step.astype(jnp.float32) + 1.0
+    c1 = 1.0 - beta1 ** t
+    c2 = 1.0 - beta2 ** t
+
+    def upd(p, g, m, v, ms, vs):
+        g = g.astype(jnp.float32)
+        if eight_bit:
+            m_f = _dequantize(m, ms, p.shape)
+            v_f = _dequantize(v, vs, p.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = beta1 * m_f + (1.0 - beta1) * g
+        v_f = beta2 * v_f + (1.0 - beta2) * jnp.square(g)
+        mh = m_f / c1
+        vh = v_f / c2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * pf)
+        if eight_bit:
+            mq, msn = _quantize(m_f)
+            vq, vsn = _quantize(v_f)
+            return pf.astype(p.dtype), mq, vq, msn, vsn
+        return pf.astype(p.dtype), m_f, v_f, None, None
+
+    ms = state.m_scale if eight_bit else state.m
+    vs = state.v_scale if eight_bit else state.v
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v,
+                                 ms, vs)
+    is5 = lambda x: isinstance(x, tuple) and len(x) == 5
+    new_p = jax.tree_util.tree_map(lambda x: x[0], out, is_leaf=is5)
+    new_m = jax.tree_util.tree_map(lambda x: x[1], out, is_leaf=is5)
+    new_v = jax.tree_util.tree_map(lambda x: x[2], out, is_leaf=is5)
+    if eight_bit:
+        new_ms = jax.tree_util.tree_map(lambda x: x[3], out, is_leaf=is5)
+        new_vs = jax.tree_util.tree_map(lambda x: x[4], out, is_leaf=is5)
+        return new_p, AdamState(new_m, new_v, new_ms, new_vs)
+    return new_p, AdamState(new_m, new_v)

@@ -1,0 +1,6 @@
+from repro.utils.trees import (  # noqa: F401
+    tree_bytes,
+    tree_count,
+    tree_map_with_path_names,
+    global_norm,
+)

@@ -1,0 +1,39 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_count(tree) -> int:
+    """Total number of array elements in a pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays/ShapeDtypeStructs."""
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_map_with_path_names(fn, tree):
+    """tree_map where fn receives ('a/b/c', leaf)."""
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_name(path), leaf), tree)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))

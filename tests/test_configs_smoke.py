@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + one decode step on CPU, asserting shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.config import get_arch, get_smoke_arch, list_archs
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    k1, k2 = jax.random.split(key)
+    if cfg.frontend == "audio_frames":
+        return {
+            "frames": jax.random.normal(k1, (B, S, cfg.d_model),
+                                        jnp.float32) * 0.02,
+            "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.frontend == "vlm_patches":
+        P = cfg.frontend_tokens
+        return {
+            "tokens": jax.random.randint(k1, (B, S - P), 0, cfg.vocab_size),
+            "patches": jax.random.normal(k2, (B, P, cfg.d_model),
+                                         jnp.float32) * 0.02,
+        }
+    return {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_loss(arch):
+    cfg = get_smoke_arch(arch)
+    key = jax.random.PRNGKey(0)
+    params = models.init_params(cfg, key)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits, moe_state, aux = models.forward(params, cfg, batch,
+                                            models.init_moe_state(cfg))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, (new_state, metrics) = models.loss_fn(
+        params, cfg, batch, models.init_moe_state(cfg))
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    # MoE archs must emit telemetry + drop metrics
+    if cfg.moe is not None:
+        assert new_state, "moe state missing"
+        for v in new_state.values():
+            assert np.isfinite(np.asarray(v)).all()
+        assert "moe_drop_rate" in metrics
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_grad_step(arch):
+    cfg = get_smoke_arch(arch)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    def loss(p):
+        l, _ = models.loss_fn(p, cfg, batch, models.init_moe_state(cfg))
+        return l
+
+    grads = jax.grad(loss)(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    # at least some gradient signal everywhere except unused frontends
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in flat)
+    assert gnorm > 0
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_prefill(arch):
+    """Prefill logits at position t must match step-by-step decode."""
+    import dataclasses
+    cfg = get_smoke_arch(arch)
+    if cfg.frontend == "audio_frames":
+        pytest.skip("audio stub trains on frames; decode covered by "
+                    "token-embedding path in other archs")
+    if cfg.moe is not None:
+        # capacity drops depend on batch size; use dropless capacity so the
+        # prefill and decode paths are numerically comparable
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    S_test = 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S_test), 0,
+                              cfg.vocab_size)
+    batch = ({"tokens": toks} if cfg.frontend != "vlm_patches" else
+             {"tokens": toks,
+              "patches": jnp.zeros((B, cfg.frontend_tokens, cfg.d_model))})
+    full_logits, _, _ = models.forward(params, cfg, batch,
+                                       models.init_moe_state(cfg))
+    if cfg.frontend == "vlm_patches":
+        pytest.skip("vlm decode tested via text-only path in dense archs")
+
+    cache = models.init_decode_cache(cfg, B, 16, dtype=jnp.float32)
+    outs = []
+    for t in range(S_test):
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, cache = models.decode_step(params, cfg, cache, toks[:, t:t + 1],
+                                       pos)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_param_counts():
+    """Full (non-smoke) configs instantiate abstractly with expected sizes."""
+    from repro.utils import tree_bytes
+    expected = {
+        "dbrx-132b": 131.6e9, "qwen3-moe-235b-a22b": 235.1e9,
+        "falcon-mamba-7b": 7.27e9, "smollm-360m": 0.36e9,
+    }
+    for arch, n in expected.items():
+        cfg = get_arch(arch)
+        shapes = models.param_shapes(cfg, jnp.bfloat16)
+        total = sum(int(np.prod(s.shape))
+                    for s in jax.tree_util.tree_leaves(shapes))
+        assert abs(total - n) / n < 0.02, (arch, total, n)
+
+
+def test_logical_axes_align_with_shapes():
+    """Axes trees and shape trees must be structurally identical with
+    matching ranks — guards spec/param drift."""
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        shapes = models.param_shapes(cfg)
+        axes = models.param_logical_axes(cfg)
+        jax.tree_util.tree_map(
+            lambda s, a: None if len(s.shape) == len(a)
+            else pytest.fail(f"{arch}: {s.shape} vs {a}"),
+            shapes, axes, is_leaf=lambda x: isinstance(x, tuple))

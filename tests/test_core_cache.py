@@ -1,0 +1,108 @@
+"""Cooperative cache: coherence invariants per mode."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as cache_lib
+
+
+def _req(keys, writes=None):
+    keys = jnp.asarray(keys, jnp.int32)
+    mask = jnp.ones_like(keys, dtype=bool)
+    w = jnp.zeros_like(mask) if writes is None else jnp.asarray(writes, bool)
+    return keys, mask, w
+
+
+def test_miss_then_hit_within_ttl():
+    c = cache_lib.init_cache(16)
+    keys, mask, w = _req([3])
+    c, hit = cache_lib.lookup_batch(c, keys, mask, w, jnp.asarray(0.0),
+                                    mode="lease", lease_ms=1000.0)
+    assert not bool(hit[0])
+    c, hit = cache_lib.lookup_batch(c, keys, mask, w, jnp.asarray(10.0),
+                                    mode="lease", lease_ms=1000.0)
+    assert bool(hit[0])
+    assert int(c.hits) == 1 and int(c.misses) == 1
+
+
+def test_lease_mode_write_invalidates_immediately():
+    c = cache_lib.init_cache(16)
+    keys, mask, _ = _req([3])
+    c, _ = cache_lib.lookup_batch(c, keys, mask, jnp.zeros(1, bool),
+                                  jnp.asarray(0.0), mode="lease")
+    # write to key 3 kills the entry
+    c, _ = cache_lib.lookup_batch(c, keys, mask, jnp.ones(1, bool),
+                                  jnp.asarray(1.0), mode="lease")
+    c, hit = cache_lib.lookup_batch(c, keys, mask, jnp.zeros(1, bool),
+                                    jnp.asarray(2.0), mode="lease")
+    assert not bool(hit[0])            # never served past invalidation
+    assert int(c.stale_serves) == 0
+
+
+def test_entry_never_served_past_expiry():
+    c = cache_lib.init_cache(16)
+    keys, mask, w = _req([5])
+    c, _ = cache_lib.lookup_batch(c, keys, mask, w, jnp.asarray(0.0),
+                                  mode="lease", lease_ms=100.0)
+    c, hit = cache_lib.lookup_batch(c, keys, mask, w, jnp.asarray(101.0),
+                                    mode="lease", lease_ms=100.0)
+    assert not bool(hit[0])
+
+
+def test_ttl_per_key_hot_keys_get_short_ttls():
+    c = cache_lib.init_cache(16)
+    now = 0.0
+    hot = jnp.asarray([1], jnp.int32)
+    # hammer key 1 with writes every 10 ms -> high hazard
+    for i in range(20):
+        keys, mask, _ = _req([1])
+        c, _ = cache_lib.lookup_batch(c, keys, mask, jnp.ones(1, bool),
+                                      jnp.asarray(now), mode="ttl_per_key")
+        now += 10.0
+    h_hot = float(c.key_hazard[1])
+    assert h_hot > 0.01               # ~1/10ms
+    # installing hot key now gets TTL near the floor
+    keys, mask, w = _req([1])
+    c, _ = cache_lib.lookup_batch(c, keys, mask, w, jnp.asarray(now),
+                                  mode="ttl_per_key", rtt_ms=2.0)
+    ttl_installed = float(c.expiry_ms[1]) - now
+    assert ttl_installed <= 2.0 + 1e-3   # clipped to RTT floor
+
+
+def test_sentinel_does_not_corrupt_last_key():
+    """Regression: masked-out scatters must not write to key N-1."""
+    N = 8
+    c = cache_lib.init_cache(N)
+    keys = jnp.asarray([0], jnp.int32)
+    mask = jnp.asarray([False])        # nothing valid
+    c2, hit = cache_lib.lookup_batch(c, keys, mask, jnp.zeros(1, bool),
+                                     jnp.asarray(0.0), mode="lease")
+    np.testing.assert_array_equal(np.asarray(c2.expiry_ms),
+                                  np.asarray(c.expiry_ms))
+    np.testing.assert_array_equal(np.asarray(c2.global_version),
+                                  np.asarray(c.global_version))
+    assert not bool(hit[0])
+
+
+def test_slow_update_ttl_respects_lease_and_floor():
+    c = cache_lib.init_cache(16)
+    c = c._replace(win_writes=jnp.asarray(100.0),
+                   win_reads=jnp.asarray(100.0))
+    c2 = cache_lib.slow_update(c, window_ms=30_000.0, rtt_ms=5.0,
+                               lease_remaining_ms=50.0)
+    assert float(c2.ttl_ms) <= 50.0    # capped by lease expiry
+    assert float(c2.ttl_ms) >= 5.0     # >= one RTT
+    assert float(c2.win_writes) == 0.0  # window reset
+
+
+def test_slow_update_gamma_shrink_under_heavy_writes():
+    c = cache_lib.init_cache(16)
+    base = c._replace(win_writes=jnp.asarray(10.0),
+                      win_reads=jnp.asarray(1000.0))
+    lo = cache_lib.slow_update(base, 30_000.0, 0.001)
+    heavy = c._replace(win_writes=jnp.asarray(900.0),
+                       win_reads=jnp.asarray(100.0),
+                       write_frac=jnp.asarray(0.9))
+    hi = cache_lib.slow_update(heavy, 30_000.0, 0.001)
+    # same hazard-free comparison isn't exact; check the γ path triggered
+    assert float(hi.write_frac) > cache_lib.W_HIGH
+    assert float(lo.write_frac) < cache_lib.W_HIGH

@@ -1,0 +1,96 @@
+"""Self-stabilizing control loop: hysteresis, bounds, Lyapunov argument."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control as ctl
+
+
+def _ctrl():
+    return ctl.init_control(rtt_ms=2.0, b_tgt=0.1, p99_tgt=100.0)
+
+
+def step_n(c, B, p99, n):
+    for _ in range(n):
+        c = ctl.fast_update(c, jnp.asarray(B), jnp.asarray(p99), 2.0,
+                            jnp.asarray(0.0))
+    return c
+
+
+def test_pressure_zero_when_within_targets():
+    c = _ctrl()
+    P = ctl.pressure_score(jnp.asarray(0.05), jnp.asarray(50.0), c)
+    assert float(P) == 0.0
+
+
+def test_knobs_escalate_after_k_up():
+    c = _ctrl()
+    # high pressure for K_UP iterations bumps d once and relaxes delta_l
+    c = step_n(c, 2.0, 1000.0, ctl.K_UP)
+    assert int(c.d) == ctl.D_INIT + 1
+    assert float(c.delta_l) == ctl.DELTA_L_INIT - 1
+
+
+def test_knobs_deescalate_after_k_down():
+    c = _ctrl()
+    c = step_n(c, 0.0, 0.0, ctl.K_DOWN)
+    assert int(c.d) == ctl.D_INIT - 1
+    assert float(c.delta_l) == ctl.DELTA_L_INIT + 1
+
+
+def test_counter_resets_after_firing():
+    c = _ctrl()
+    c = step_n(c, 2.0, 1000.0, ctl.K_UP)          # fires
+    assert int(c.above_cnt) == 0                  # reset
+    c2 = step_n(c, 2.0, 1000.0, ctl.K_UP - 1)     # not yet again
+    assert int(c2.d) == int(c.d)
+
+
+def test_knob_bounds_under_sustained_pressure():
+    c = _ctrl()
+    c = step_n(c, 5.0, 1e6, 100)
+    assert int(c.d) == ctl.D_MAX
+    assert float(c.delta_l) == ctl.DELTA_L_MIN
+    c = step_n(c, 0.0, 0.0, 400)
+    assert int(c.d) == ctl.D_MIN
+    assert float(c.delta_l) == ctl.DELTA_L_MAX
+
+
+def test_deadband_freezes_knobs():
+    """H_down < P < H_up: neither counter advances, knobs frozen."""
+    c = _ctrl()
+    mid_B = float(c.b_tgt) + (ctl.H_DOWN + ctl.H_UP) / 2
+    c2 = step_n(c, mid_B, 0.0, 50)
+    assert int(c2.d) == int(c.d)
+    assert float(c2.delta_l) == float(c.delta_l)
+
+
+def test_warmup_targets_formulas():
+    B = jnp.asarray([0.1, 0.2, 0.3, 0.4, 0.5])
+    b_tgt, p99_tgt = ctl.warmup_targets(B, jnp.asarray(100.0), rtt_ms=2.0)
+    assert np.isclose(float(b_tgt), 0.3 + 0.05)
+    assert np.isclose(float(p99_tgt), 125.0)       # 1.25 * p99_warm
+    # RTT floor binds on very fast paths
+    _, p99_tgt2 = ctl.warmup_targets(B, jnp.asarray(1.0), rtt_ms=20.0)
+    assert np.isclose(float(p99_tgt2), 22.0)
+
+
+def test_lyapunov_delta_matches_potential_difference():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        L = jnp.asarray(rng.integers(0, 50, size=8).astype(np.float32))
+        p, j = rng.choice(8, size=2, replace=False)
+        moved = L.at[p].add(-1.0).at[j].add(1.0)
+        dv_direct = (ctl.lyapunov_potential(moved)
+                     - ctl.lyapunov_potential(L))
+        dv_formula = ctl.lyapunov_delta_v(L, jnp.asarray(p), jnp.asarray(j))
+        assert np.isclose(float(dv_direct), float(dv_formula), atol=1e-3)
+
+
+def test_lyapunov_negative_iff_margin_at_least_two():
+    """Δ_L >= 2  =>  ΔV <= -2 < 0 (paper's stability condition)."""
+    L = jnp.asarray([10.0, 8.0, 7.5, 3.0])
+    # margin exactly 2: p=0 (10), j with L=8
+    assert float(ctl.lyapunov_delta_v(L, jnp.asarray(0), jnp.asarray(1))) == -2.0
+    # margin 1 is NOT enough (ΔV = 0)
+    L2 = jnp.asarray([10.0, 9.0])
+    assert float(ctl.lyapunov_delta_v(L2, jnp.asarray(0), jnp.asarray(1))) == 0.0

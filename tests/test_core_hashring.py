@@ -1,0 +1,63 @@
+"""Consistent-hash ring: determinism, feasibility, stability."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashring
+
+
+def test_primary_range_and_determinism():
+    ring = hashring.make_ring(8, V=64)
+    keys = jnp.arange(1000, dtype=jnp.int32)
+    p1 = hashring.primary(ring, keys)
+    p2 = hashring.primary(ring, keys)
+    assert ((p1 >= 0) & (p1 < 8)).all()
+    assert (p1 == p2).all()
+
+
+def test_primary_roughly_balanced():
+    ring = hashring.make_ring(8, V=128)
+    keys = jnp.arange(20000, dtype=jnp.int32)
+    p = np.asarray(hashring.primary(ring, keys))
+    counts = np.bincount(p, minlength=8)
+    # virtual nodes keep shares within ~2x of fair
+    assert counts.min() > 20000 / 8 / 2
+    assert counts.max() < 20000 / 8 * 2
+
+
+def test_feasible_set_contains_primary_and_distinct():
+    ring = hashring.make_ring(8, V=64)
+    keys = jnp.arange(500, dtype=jnp.int32)
+    feas = np.asarray(hashring.feasible_set(ring, keys, 4))
+    prim = np.asarray(hashring.primary(ring, keys))
+    assert feas.shape == (500, 4)
+    assert (feas[:, 0] == prim).all()
+    assert ((feas >= 0) & (feas < 8)).all()
+    for row in feas:
+        assert len(set(row.tolist())) == 4, row
+
+
+def test_feasible_set_small_m():
+    ring = hashring.make_ring(2, V=16)
+    feas = np.asarray(hashring.feasible_set(ring, jnp.arange(100), 4))
+    # fewer servers than d_max: padding keeps entries in range
+    assert ((feas >= 0) & (feas < 2)).all()
+
+
+def test_consistency_under_server_addition():
+    """Adding one server moves at most ~K/m keys (consistent hashing)."""
+    keys = jnp.arange(20000, dtype=jnp.int32)
+    for m in (4, 8, 16):
+        p_before = np.asarray(hashring.primary(hashring.make_ring(m), keys))
+        p_after = np.asarray(hashring.primary(hashring.make_ring(m + 1), keys))
+        moved = (p_before != p_after).mean()
+        # ideal: 1/(m+1); allow 2.5x slack for virtual-node variance
+        assert moved < 2.5 / (m + 1), (m, moved)
+        # keys that moved must have moved TO the new server
+        assert (p_after[p_before != p_after] == m).all()
+
+
+def test_mix32_is_a_permutation_sample():
+    xs = jnp.arange(100000, dtype=jnp.uint32)
+    hs = np.asarray(hashring.mix32(xs))
+    assert len(np.unique(hs)) == 100000  # injective on this range

@@ -1,0 +1,111 @@
+"""Routing-layer unit tests: margins, pinning, leaky bucket, baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashring, routing
+
+M, N, W = 8, 64, 20
+
+
+def _rs():
+    return routing.init_router(P=4, N=N, W_ticks=W, seed=0)
+
+
+def _midas(rs, keys, L, *, d=2, delta_l=2.0, delta_t=0.0, f_max=1.0,
+           now=0.0, p50=None, rng=0):
+    keys = jnp.asarray(keys, jnp.int32)
+    ring = hashring.make_ring(M, V=32)
+    feas = hashring.feasible_set(ring, keys, 4)
+    mask = jnp.ones(keys.shape, bool)
+    p50 = L * 100.0 if p50 is None else p50
+    return routing.route_midas(
+        rs, jax.random.PRNGKey(rng), keys, feas, jnp.asarray(L, jnp.float32),
+        jnp.asarray(p50, jnp.float32), mask, jnp.asarray(d),
+        jnp.asarray(delta_l), jnp.asarray(delta_t), jnp.asarray(f_max),
+        jnp.asarray(now), 300.0, W) + (feas,)
+
+
+def test_no_steering_when_balanced():
+    """Equal loads never satisfy the Δ_L margin: everyone stays on primary."""
+    L = jnp.ones((M,)) * 5.0
+    rs, assign, stats, feas = _midas(_rs(), np.arange(32), L)
+    np.testing.assert_array_equal(np.asarray(assign), np.asarray(feas[:, 0]))
+    assert float(stats.steered) == 0
+
+
+def test_steering_respects_both_margins():
+    """Queue margin alone is not enough — the p50 margin must hold too."""
+    L = jnp.asarray([50.0, 0, 0, 0, 0, 0, 0, 0])
+    keys = np.arange(64)
+    # p50 margin blocked: candidate p50 == primary p50
+    rs, assign, stats, feas = _midas(_rs(), keys, L, d=4,
+                                     p50=jnp.ones((M,)) * 10.0,
+                                     delta_t=5.0)
+    prim = np.asarray(feas[:, 0])
+    assert float(stats.steered) == 0
+    np.testing.assert_array_equal(np.asarray(assign), prim)
+    # both margins open: requests with primary 0 steer away
+    rs, assign, stats, feas = _midas(_rs(), keys, L, d=4, delta_t=0.0)
+    prim = np.asarray(feas[:, 0])
+    a = np.asarray(assign)
+    hot = prim == 0
+    if hot.any():
+        assert (a[hot] != 0).any()
+    # steered targets had >= Δ_L shorter queues => ΔV < 0 per paper
+    moved = a != prim
+    Lnp = np.asarray(L)
+    assert all(Lnp[prim[i]] - Lnp[a[i]] >= 2.0 for i in np.where(moved)[0])
+
+
+def test_leaky_bucket_exact_cap():
+    L = jnp.asarray([50.0, 0, 0, 0, 0, 0, 0, 0])
+    rs = _rs()
+    total_steered, total_elig = 0.0, 0.0
+    for t in range(30):
+        rs, assign, stats, _ = _midas(rs, np.arange(64), L, d=4,
+                                      f_max=0.1, now=t * 50.0, rng=t)
+        total_steered += float(stats.steered)
+        total_elig += float(stats.eligible)
+    assert total_elig > 0
+    assert total_steered <= 0.1 * total_elig + 1.0
+
+
+def test_pin_honored_until_expiry():
+    L = jnp.asarray([50.0, 0, 0, 0, 0, 0, 0, 0])
+    rs = _rs()
+    keys = np.arange(64)
+    rs, assign1, stats, feas = _midas(rs, keys, L, d=4, now=0.0)
+    a1 = np.asarray(assign1)
+    prim = np.asarray(feas[:, 0])
+    steered_keys = keys[a1 != prim]
+    assert len(steered_keys) > 0
+    # within pin window (C=300ms): same assignment even though loads flipped
+    L_flipped = jnp.asarray([0.0, 50, 50, 50, 50, 50, 50, 50])
+    rs2, assign2, _, _ = _midas(rs, steered_keys, L_flipped, d=4, now=100.0)
+    np.testing.assert_array_equal(np.asarray(assign2), a1[a1 != prim])
+    # after expiry the pin no longer applies (routes to primary: balanced L)
+    rs3, assign3, _, feas3 = _midas(rs, steered_keys, jnp.ones((M,)),
+                                    d=4, now=500.0)
+    np.testing.assert_array_equal(np.asarray(assign3),
+                                  np.asarray(feas3[:, 0]))
+
+
+def test_round_robin_is_static_key_placement():
+    keys = jnp.asarray([0, 1, 2, 9, 17], jnp.int32)
+    mask = jnp.ones((5,), bool)
+    a = np.asarray(routing.route_round_robin(keys, mask, M))
+    np.testing.assert_array_equal(a, [0, 1, 2, 1, 1])
+
+
+def test_power_of_d_prefers_less_loaded():
+    ring = hashring.make_ring(M, V=32)
+    keys = jnp.arange(256, dtype=jnp.int32)
+    feas = hashring.feasible_set(ring, keys, 4)
+    L = jnp.asarray([100.0, 0, 100, 0, 100, 0, 100, 0])
+    a = routing.route_power_of_d(jax.random.PRNGKey(0), feas, L,
+                                 jnp.ones((256,), bool), 4)
+    loads_chosen = np.asarray(L)[np.asarray(a)]
+    # with d=4 over distinct feasible sets, the heavy servers are avoidable
+    # for almost all keys
+    assert (loads_chosen == 0).mean() > 0.9

@@ -1,0 +1,95 @@
+"""End-to-end simulator behaviour: the paper's §VI claims, directionally."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, make_workload, simulate
+
+T = 1600  # 80 s at dt=50 ms — enough for several bursts
+
+
+@pytest.fixture(scope="module")
+def bursty_results():
+    wl = make_workload("bursty", T=T, m=8, seed=1)
+    out = {}
+    for policy in ("round_robin", "power_of_d"):
+        out[policy] = simulate(SimConfig(m=8, policy=policy), wl,
+                               do_warmup=False)
+    return out
+
+
+def test_power_of_d_reduces_mean_queue(bursty_results):
+    rr = bursty_results["round_robin"]
+    pod = bursty_results["power_of_d"]
+    assert pod.mean_queue() < rr.mean_queue() * 0.9  # >= 10% better
+
+
+def test_power_of_d_mitigates_worst_case(bursty_results):
+    """Paper: 50–80% shorter queues in worst cases."""
+    rr = bursty_results["round_robin"]
+    pod = bursty_results["power_of_d"]
+    assert pod.worst_case_queue() < rr.worst_case_queue() * 0.5
+
+
+def test_power_of_d_reduces_dispersion(bursty_results):
+    rr = bursty_results["round_robin"]
+    pod = bursty_results["power_of_d"]
+    assert pod.dispersion() < rr.dispersion()
+    assert pod.dispersion() < 0.43     # paper: MIDAS stays <= ~43%
+
+
+def test_queue_timeline_shape_and_nonneg(bursty_results):
+    q = bursty_results["round_robin"].queue_timeline
+    assert q.shape == (T, 8)
+    assert (q >= 0).all()
+    assert np.isfinite(q).all()
+
+
+def test_midas_full_stability_and_bounded_steering():
+    wl = make_workload("bursty", T=T, m=8, seed=2)
+    cfg = SimConfig(m=8, policy="midas", cache_enabled=True,
+                    cache_mode="lease")
+    res = simulate(cfg, wl)
+    # knobs stay in their paper bounds
+    assert res.d_timeline.min() >= 1 and res.d_timeline.max() <= 4
+    assert res.delta_l_timeline.min() >= 2 and res.delta_l_timeline.max() <= 8
+    # leaky bucket: aggregate steering <= f_cap of eligible (+1 slack/window)
+    steered, eligible = res.steered.sum(), res.eligible.sum()
+    assert steered <= 0.1 * eligible + 20
+    # zero stale serves in lease mode (never serve past validity horizon)
+    assert int(res.final_cache.stale_serves) == 0
+
+
+def test_midas_beats_static_hash_placement():
+    wl = make_workload("skewed", T=T, m=8, seed=3)
+    hash_res = simulate(SimConfig(m=8, policy="hash"), wl, do_warmup=False)
+    midas_res = simulate(SimConfig(m=8, policy="midas", cache_enabled=True,
+                                   cache_mode="lease"), wl)
+    assert midas_res.mean_queue() < hash_res.mean_queue() * 0.7
+
+
+def test_cache_absorbs_hot_keys():
+    wl = make_workload("skewed", T=T, m=8, seed=4)
+    with_cache = simulate(SimConfig(m=8, policy="midas", cache_enabled=True,
+                                    cache_mode="lease"), wl)
+    assert with_cache.cache_hits.sum() > 0.2 * wl.mask.sum()
+
+
+def test_workload_shapes():
+    for name in ("light", "bursty", "periodic", "diurnal", "skewed",
+                 "storm", "uniform_heavy"):
+        wl = make_workload(name, T=100, m=8, seed=0)
+        assert wl.keys.shape == wl.mask.shape == wl.is_write.shape
+        assert (np.asarray(wl.keys) >= 0).all()
+        assert (np.asarray(wl.keys) < wl.N).all()
+        # writes only on valid slots
+        assert not np.any(np.asarray(wl.is_write) & ~np.asarray(wl.mask))
+
+
+def test_deterministic_given_seed():
+    wl = make_workload("bursty", T=200, m=4, seed=7)
+    cfg = SimConfig(m=4, policy="power_of_d")
+    r1 = simulate(cfg, wl, do_warmup=False)
+    r2 = simulate(cfg, wl, do_warmup=False)
+    np.testing.assert_array_equal(r1.queue_timeline, r2.queue_timeline)

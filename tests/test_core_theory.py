@@ -1,0 +1,37 @@
+"""§V theory: balls-into-bins max-load and M/M/1 latency."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def test_mm1_latency():
+    assert theory.mm1_latency(0.0, 10.0) == pytest.approx(0.1)
+    assert theory.mm1_latency(5.0, 10.0) == pytest.approx(0.2)
+    assert theory.mm1_latency(10.0, 10.0) == math.inf
+
+
+def test_power_of_two_beats_uniform():
+    m = 64
+    gap1, _ = theory.maxload_gap_empirical(n_balls=m, m=m, d=1, trials=30)
+    gap2, _ = theory.maxload_gap_empirical(n_balls=m, m=m, d=2, trials=30)
+    assert gap2 < gap1
+    # theory scale: ln m/ln ln m vs ln ln m / ln 2
+    assert gap1 > theory.power_of_d_maxload_gap_theory(m, 2)
+
+
+def test_maxload_gap_shrinks_with_d():
+    m = 64
+    gaps = [theory.maxload_gap_empirical(n_balls=m, m=m, d=d, trials=20)[0]
+            for d in (1, 2, 4)]
+    assert gaps[0] > gaps[1] >= gaps[2]
+
+
+def test_uniform_gap_matches_theory_scale():
+    """E[max above mean] ≈ ln m / ln ln m for n = m balls (within 2x)."""
+    m = 256
+    gap, _ = theory.maxload_gap_empirical(n_balls=m, m=m, d=1, trials=30)
+    pred = theory.uniform_maxload_gap_theory(m)
+    assert 0.5 * pred < gap < 2.5 * pred

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as cache_lib
+from repro.core import control as ctl
+from repro.core import hashring, telemetry
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+@given(m=st.integers(2, 24), key_lo=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_feasible_sets_always_valid(m, key_lo):
+    ring = hashring.make_ring(m, V=32)
+    keys = jnp.arange(key_lo, key_lo + 64, dtype=jnp.int32)
+    feas = np.asarray(hashring.feasible_set(ring, keys, 4))
+    prim = np.asarray(hashring.primary(ring, keys))
+    assert ((feas >= 0) & (feas < m)).all()
+    assert (feas[:, 0] == prim).all()
+    # entries distinct whenever m >= 4
+    if m >= 4:
+        assert all(len(set(r.tolist())) == 4 for r in feas)
+
+
+@given(pressures=st.lists(st.floats(0.0, 10.0), min_size=1, max_size=200))
+@settings(**SETTINGS)
+def test_control_knobs_always_bounded(pressures):
+    """No pressure sequence can push knobs out of their paper bounds."""
+    c = ctl.init_control(rtt_ms=2.0, b_tgt=0.0, p99_tgt=1.0)
+    for p in pressures:
+        # drive via imbalance directly (b_tgt=0 so B == pressure term)
+        c = ctl.fast_update(c, jnp.asarray(p), jnp.asarray(0.0), 2.0,
+                            jnp.asarray(0.0))
+        assert ctl.D_MIN <= int(c.d) <= ctl.D_MAX
+        assert ctl.DELTA_L_MIN <= float(c.delta_l) <= ctl.DELTA_L_MAX
+
+
+@given(loads=st.lists(st.integers(0, 100), min_size=2, max_size=16),
+       data=st.data())
+@settings(**SETTINGS)
+def test_lyapunov_steering_with_margin_2_strictly_decreases_v(loads, data):
+    L = jnp.asarray(loads, jnp.float32)
+    m = len(loads)
+    p = data.draw(st.integers(0, m - 1))
+    j = data.draw(st.integers(0, m - 1))
+    if p == j:
+        return
+    if loads[p] - loads[j] >= 2:          # the admitted-steer condition
+        dv = float(ctl.lyapunov_delta_v(L, jnp.asarray(p), jnp.asarray(j)))
+        assert dv <= -2.0
+
+
+@given(alpha=st.floats(0.01, 0.99),
+       xs=st.lists(st.floats(-100, 100), min_size=1, max_size=50))
+@settings(**SETTINGS)
+def test_ewma_stays_within_input_hull(alpha, xs):
+    lo, hi = min(xs + [0.0]), max(xs + [0.0])
+    acc = jnp.asarray(0.0)
+    for x in xs:
+        acc = telemetry.ewma(acc, jnp.asarray(x), alpha)
+        assert lo - 1e-4 <= float(acc) <= hi + 1e-4
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 15), st.booleans()),
+                    min_size=1, max_size=60))
+@settings(**SETTINGS)
+def test_lease_mode_never_serves_stale(ops):
+    """In lease mode a cached read can never observe an outdated version."""
+    c = cache_lib.init_cache(16)
+    now = 0.0
+    for key, is_write in ops:
+        keys = jnp.asarray([key], jnp.int32)
+        mask = jnp.asarray([True])
+        w = jnp.asarray([is_write])
+        c, _ = cache_lib.lookup_batch(c, keys, mask, w, jnp.asarray(now),
+                                      mode="lease", lease_ms=500.0)
+        now += 7.0
+    assert int(c.stale_serves) == 0
+
+
+@given(writes=st.lists(st.floats(1.0, 1000.0), min_size=2, max_size=30))
+@settings(**SETTINGS)
+def test_ttl_never_exceeds_lease_or_cap(writes):
+    c = cache_lib.init_cache(8)
+    c = c._replace(win_writes=jnp.asarray(sum(writes)),
+                   win_reads=jnp.asarray(100.0))
+    lease = float(np.random.default_rng(0).uniform(1, 1e5))
+    c2 = cache_lib.slow_update(c, 30_000.0, rtt_ms=1.0,
+                               lease_remaining_ms=lease)
+    assert float(c2.ttl_ms) <= min(lease, cache_lib.TTL_CAP_MS) + 1e-3
+    assert float(c2.ttl_ms) >= 1.0
