@@ -18,7 +18,7 @@ from repro.core import SimConfig, make_workload, simulate
 
 def run() -> None:
     wl = make_workload("bursty", T=2400, m=8, seed=9)
-    base = SimConfig(m=8, policy="midas", cache_enabled=True,
+    base = SimConfig(m=8, policy="midas", middleware=("cache",),
                      cache_mode="lease")
     results = {}
     for name, abl in (("full", ""), ("no_margin", "no_margin"),

@@ -9,7 +9,8 @@ from repro.core import SimConfig, make_workload, simulate
 def run() -> None:
     wl = make_workload("skewed", T=3000, m=8, seed=0)
     for mode in ("lease", "ttl_per_key", "ttl_aggregate"):
-        cfg = SimConfig(m=8, policy="midas", cache_enabled=True,
+        # cache as an explicit pipeline stage (new middleware API)
+        cfg = SimConfig(m=8, policy="midas", middleware=("cache",),
                         cache_mode=mode)
         res, us = timed(simulate, cfg, wl)
         fc = res.final_cache

@@ -10,7 +10,7 @@ from repro.core import SimConfig, make_workload, simulate
 
 def run() -> None:
     wl = make_workload("bursty", T=3000, m=8, seed=5)
-    cfg = SimConfig(m=8, policy="midas", cache_enabled=True,
+    cfg = SimConfig(m=8, policy="midas", middleware=("cache",),
                     cache_mode="lease")
     res, us = timed(simulate, cfg, wl)
     d = res.d_timeline

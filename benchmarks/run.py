@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes artifacts
 under experiments/.  E-numbers refer to DESIGN.md §6.
 
-  PYTHONPATH=src python -m benchmarks.run [--only paper,theory,...]
+  PYTHONPATH=src python -m benchmarks.run [--only paper,theory,...] [--list]
 """
 from __future__ import annotations
 
@@ -25,11 +25,22 @@ SECTIONS = {
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="MIDAS benchmark suite (see DESIGN.md §6)")
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--list", action="store_true",
+                    help="list available sections and exit")
     args = ap.parse_args()
+    if args.list:
+        for name, mod in SECTIONS.items():
+            print(f"{name:10s} {mod}")
+        return
     names = (args.only.split(",") if args.only else list(SECTIONS))
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown section(s): {', '.join(unknown)}; "
+                 f"available: {', '.join(SECTIONS)} (try --list)")
     print("name,us_per_call,derived")
     t0 = time.time()
     for name in names:

@@ -2,13 +2,16 @@
 
 Reproduces the paper's headline comparison (Lustre round-robin vs MIDAS
 power-of-d) in ~1 minute on CPU, then shows the full self-stabilizing
-stack (margins + pinning + leaky bucket + cooperative cache).
+stack (margins + pinning + leaky bucket + cooperative cache) and the
+pluggable policy registry (every policy in ``policies.available()`` —
+including third-party registrations — runs through the same engine).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import SimConfig, make_workload, simulate
+from repro.core import (SimConfig, make_workload, policies, simulate,
+                        simulate_sweep)
 
 T, M = 2400, 8  # 120 s of simulated time, 8 metadata servers
 
@@ -35,7 +38,7 @@ def main() -> None:
     print(f"  dispersion (CV) {pod.dispersion():8.3f}  (paper: <=0.43)")
 
     print("=== full MIDAS: + control loop + cooperative cache ===")
-    full = simulate(SimConfig(m=M, policy="midas", cache_enabled=True,
+    full = simulate(SimConfig(m=M, policy="midas", middleware=("cache",),
                               cache_mode="lease"), wl)
     fc = full.final_cache
     print(f"  mean queue      {full.mean_queue():8.2f}")
@@ -45,6 +48,16 @@ def main() -> None:
           f"{full.d_timeline.max()}  (bounded 1..4)")
     print(f"  steered/eligible {full.steered.sum() / max(full.eligible.sum(), 1):.3f}"
           f"  (leaky-bucket cap 0.10)")
+
+    print("=== policy registry: swap policies without touching the engine ===")
+    print(f"  registered: {', '.join(policies.available())}")
+    # one sweep call: jsq (d=m upper bound) and bounded-load consistent
+    # hashing, each compiled once, vmapped over two seeds
+    sweep = simulate_sweep(SimConfig(m=M), wl, policies=("jsq", "chbl"),
+                           seeds=(0, 1), do_warmup=False)
+    for name, rows in sweep.items():
+        mq = np.mean([r.mean_queue() for r in rows])
+        print(f"  {name:6s} mean queue {mq:8.2f}  (2-seed avg)")
 
 
 if __name__ == "__main__":

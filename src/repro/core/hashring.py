@@ -9,10 +9,12 @@ consistent with namespace locality).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _GOLDEN = jnp.uint32(0x9E3779B9)
 
@@ -42,14 +44,47 @@ class Ring(NamedTuple):
     V: int                   # virtual nodes per server
 
 
-def make_ring(m: int, V: int = 64, salt: int = 0) -> Ring:
-    servers = jnp.repeat(jnp.arange(m, dtype=jnp.uint32), V)
-    replicas = jnp.tile(jnp.arange(V, dtype=jnp.uint32), m)
-    pos = hash2(servers * jnp.uint32(0x10001) + replicas,
-                jnp.uint32(salt + 1))
-    order = jnp.argsort(pos)
-    return Ring(positions=pos[order], owners=servers[order].astype(jnp.int32),
+def _np_mix32(x: np.ndarray) -> np.ndarray:
+    """Numpy replica of :func:`mix32` (uint32 arithmetic wraps mod 2^32)."""
+    x = np.asarray(x, np.uint32).copy()
+    x ^= x >> np.uint32(16)
+    x *= np.uint32(0x85EBCA6B)
+    x ^= x >> np.uint32(13)
+    x *= np.uint32(0xC2B2AE35)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def _np_hash2(a: np.ndarray, b) -> np.ndarray:
+    a = np.asarray(a, np.uint32)
+    b = np.asarray(b, np.uint32)
+    return _np_mix32(a ^ (_np_mix32(b) + np.uint32(0x9E3779B9)
+                          + (a << np.uint32(6)) + (a >> np.uint32(2))))
+
+
+def _ring_arrays(m: int, V: int, salt: int):
+    """Pure-numpy ring builder; memoization happens in the caller."""
+    servers = np.repeat(np.arange(m, dtype=np.uint32), V)
+    replicas = np.tile(np.arange(V, dtype=np.uint32), m)
+    pos = _np_hash2(servers * np.uint32(0x10001) + replicas,
+                    np.uint32(salt + 1))
+    order = np.argsort(pos, kind="stable")
+    return pos[order], servers[order].astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_ring_cached(m: int, V: int, salt: int) -> Ring:
+    """Memoized host-side: re-tracing ``_run_scan`` reuses the concrete
+    positions/owners instead of rebuilding the ring."""
+    pos, owners = _ring_arrays(m, V, salt)
+    return Ring(positions=jnp.asarray(pos), owners=jnp.asarray(owners),
                 m=m, V=V)
+
+
+def make_ring(m: int, V: int = 64, salt: int = 0) -> Ring:
+    """Memoized ring: repeat calls (and re-traces) return the same object,
+    whose arrays become compile-time constants inside ``jax.jit``."""
+    return _make_ring_cached(int(m), int(V), int(salt))
 
 
 def key_position(keys: jnp.ndarray, salt: int = 0) -> jnp.ndarray:

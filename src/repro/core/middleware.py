@@ -1,0 +1,129 @@
+"""Middleware pipeline: composable batch stages in front of routing.
+
+The paper frames MIDAS as *middleware* — stages that sit between incoming
+metadata requests and the routing decision.  Each stage sees the tick's
+request batch, may absorb requests (serve them at the proxy) by clearing
+their mask bits, and carries its own state through the scan.  Stages also
+get a slow-loop hook on the paper's T_slow cadence.
+
+``SimConfig.middleware`` is a tuple of registered stage names applied in
+order; the cooperative cache is the first (and reference) stage.  Writing a
+new stage — admission control, QoS throttling (PADLL-style), in-network
+caching (Fletch-style) — means subclassing :class:`Middleware`, registering
+it, and naming it in the config; the simulator core never changes.
+
+    from repro.core import middleware
+
+    @middleware.register("drop_writes")
+    class DropWrites(middleware.Middleware):
+        def on_batch(self, state, batch, cfg):
+            keep = batch.mask & ~batch.is_write
+            absorbed = jnp.sum(batch.mask & batch.is_write)
+            return state, keep, absorbed.astype(jnp.float32)
+
+    SimConfig(middleware=("drop_writes", "cache"))
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple, Type
+
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core import control as ctl
+
+
+class BatchView(NamedTuple):
+    """One tick's request batch, as seen by a middleware stage."""
+    keys: jnp.ndarray      # (R,) int32 namespace keys
+    mask: jnp.ndarray      # (R,) bool validity (may be narrowed upstream)
+    is_write: jnp.ndarray  # (R,) bool metadata-mutating ops
+    now_ms: jnp.ndarray    # () float32 tick clock
+    rng: jnp.ndarray       # per-stage PRNG key
+
+
+class Middleware:
+    """Base class for registered pipeline stages.
+
+    ``init(cfg) -> state`` builds the stage's carried pytree.
+    ``on_batch(state, batch, cfg) -> (state, mask, absorbed)`` processes one
+    tick: the returned mask replaces ``batch.mask`` for downstream stages
+    and routing; ``absorbed`` is the () float32 count of requests served at
+    the proxy.  ``on_slow(state, cfg) -> state`` runs on the T_slow cadence.
+    """
+
+    name: str = "?"
+
+    def init(self, cfg) -> Any:
+        return ()
+
+    def on_batch(self, state: Any, batch: BatchView, cfg
+                 ) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+        return state, batch.mask, jnp.zeros((), jnp.float32)
+
+    def on_slow(self, state: Any, cfg) -> Any:
+        return state
+
+
+_REGISTRY: Dict[str, Type[Middleware]] = {}
+
+
+def register(name: str):
+    """Class decorator registering a Middleware stage under ``name``."""
+    def deco(cls: Type[Middleware]) -> Type[Middleware]:
+        prev = _REGISTRY.get(name)
+        if prev is not None and prev is not cls:
+            raise ValueError(f"middleware {name!r} already registered "
+                             f"({prev.__module__}.{prev.__qualname__})")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def unregister(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_class(name: str) -> Type[Middleware]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown middleware {name!r}; available: "
+            f"{', '.join(available())}") from None
+
+
+def get(name: str) -> Middleware:
+    return get_class(name)()
+
+
+@register("cache")
+class CooperativeCache(Middleware):
+    """The paper's cooperative metadata cache as a pipeline stage.
+
+    Read hits within the validity horizon are absorbed at the proxy; writes
+    always pass through (bumping versions / invalidating leases).  The slow
+    hook retunes the aggregate TTL from the invalidation-hazard estimator.
+    Coherence semantics live unchanged in :mod:`repro.core.cache`.
+    """
+
+    def init(self, cfg) -> cache_lib.CacheState:
+        return cache_lib.init_cache(cfg.N)
+
+    def on_batch(self, state: cache_lib.CacheState, batch: BatchView, cfg):
+        state, hit = cache_lib.lookup_batch(
+            state, batch.keys, batch.mask, batch.is_write, batch.now_ms,
+            mode=cfg.cache_mode, lease_ms=cfg.lease_ms, rtt_ms=cfg.rtt_ms,
+            p_star=cfg.p_star)
+        # hits never reach the servers
+        return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
+
+    def on_slow(self, state: cache_lib.CacheState, cfg):
+        lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
+        return cache_lib.slow_update(state, ctl.T_SLOW_MS, cfg.rtt_ms,
+                                     lease, cfg.p_star)

@@ -1,0 +1,44 @@
+"""Pluggable routing-policy registry for the MIDAS middleware pipeline.
+
+The simulator resolves ``SimConfig.policy`` through this registry — there
+is no policy-name branching in ``sim.py`` — so third-party policies plug in
+without touching the engine.  A complete registration looks like this
+(~15 lines):
+
+    import jax.numpy as jnp
+    from repro.core import policies
+
+    @policies.register("hot_shard_split")
+    class HotShardSplit(policies.Policy):
+        '''Send every request whose primary is overloaded to primary+1.'''
+
+        def route(self, state, ctx):
+            hot = ctx.L_view[ctx.primary] > 2.0 * jnp.mean(ctx.L_view)
+            alt = (ctx.primary + 1) % ctx.m
+            assign = jnp.where(ctx.mask,
+                               jnp.where(hot, alt, ctx.primary), -1)
+            return state, assign, policies.RouteStats.zeros()
+
+    # SimConfig(policy="hot_shard_split") now works everywhere:
+    # simulate(), simulate_sweep(), every benchmark and example.
+
+Stateful policies override ``init(cfg, ring)`` and thread their pytree
+through ``route`` (see ``midas.py``); ``adaptive = True`` opts into the
+§III-B warmup-derived control targets.  ``available()`` lists everything
+registered; unknown names raise a ``ValueError`` naming the alternatives.
+"""
+from repro.core.policies.base import (ControlKnobs, Policy, RouteContext,
+                                      RouteStats, available, get, get_class,
+                                      register, sample_candidates,
+                                      steering_dv, unregister)
+
+# Built-in policies self-register on import.
+from repro.core.policies import (bounded_load, jsq, midas,  # noqa: F401, E402
+                                 power_of_d, round_robin, static_hash,
+                                 uniform)
+
+__all__ = [
+    "ControlKnobs", "Policy", "RouteContext", "RouteStats", "available",
+    "get", "get_class", "register", "sample_candidates", "steering_dv",
+    "unregister",
+]

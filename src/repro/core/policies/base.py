@@ -1,0 +1,162 @@
+"""Policy protocol, route context, and the policy registry.
+
+A *policy* is the routing stage of the MIDAS middleware pipeline: given a
+wave of requests and the proxies' (stale) view of server state, it assigns
+each request to a metadata server.  Policies are self-contained modules that
+register themselves by name; the simulator resolves ``cfg.policy`` through
+the registry and never branches on policy names.
+
+Protocol
+--------
+``Policy.init(cfg, ring) -> state`` builds the policy's carried pytree
+(``()`` for stateless policies).  ``Policy.route(state, ctx) ->
+(state, assign, RouteStats)`` routes one wave: ``assign`` is ``(R,)`` int32
+server ids (−1 for masked-out slots) and ``RouteStats`` carries the
+steering telemetry the control loop and benchmarks consume.
+
+``RouteContext`` bundles everything a policy may consult: the request keys
+and validity mask, the namespace-feasible set from the consistent-hash ring
+(slot 0 is the primary), the stale telemetry views (L̂, p̃50), the control
+knobs, the tick clock, and a per-wave PRNG key.  Policies read what they
+need; XLA dead-code-eliminates the rest.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+
+class ControlKnobs(NamedTuple):
+    """Control-plane view handed to policies (ablations already applied)."""
+    d: jnp.ndarray          # () int32 sample width in {1..4}
+    delta_l: jnp.ndarray    # () float32 queue margin Δ_L
+    delta_t: jnp.ndarray    # () float32 latency margin Δ_t (ms)
+    f_max: jnp.ndarray      # () float32 steering cap
+    pin_ms: float           # static pin duration C (ms)
+
+
+class RouteContext(NamedTuple):
+    """One routing wave, as seen by a policy."""
+    keys: jnp.ndarray       # (R,) int32 namespace keys
+    mask: jnp.ndarray       # (R,) bool validity
+    feas: jnp.ndarray       # (R, d_max) int32 feasible set; slot 0 = primary
+    L_view: jnp.ndarray     # (m,) float32 stale EWMA queue + own sends
+    p50_view: jnp.ndarray   # (m,) float32 stale EWMA p50 (ms)
+    knobs: ControlKnobs
+    now_ms: jnp.ndarray     # () float32 tick clock
+    rng: jnp.ndarray        # per-wave PRNG key
+    m: int                  # static: number of servers
+    fixed_d: int            # static: d for non-adaptive power-of-d
+
+    @property
+    def primary(self) -> jnp.ndarray:
+        """Ring-primary server per request (feasible-set slot 0)."""
+        return self.feas[:, 0]
+
+
+class RouteStats(NamedTuple):
+    """Per-wave steering telemetry; summed across waves into TickOut."""
+    steered: jnp.ndarray    # () float32 requests steered off primary
+    eligible: jnp.ndarray   # () float32 steer-eligible requests
+    dV: jnp.ndarray         # () float32 Lyapunov ΔV of admitted steers
+
+    @classmethod
+    def zeros(cls) -> "RouteStats":
+        z = jnp.zeros((), jnp.float32)
+        return cls(steered=z, eligible=z, dV=z)
+
+
+def steering_dv(ctx: RouteContext, assign: jnp.ndarray) -> jnp.ndarray:
+    """ΔV contribution of steering away from primary (paper eq. 2)."""
+    prim = ctx.primary
+    moved = ctx.mask & (assign != prim) & (assign >= 0)
+    return jnp.sum(jnp.where(
+        moved, 2.0 * (ctx.L_view[assign] - ctx.L_view[prim]) + 2.0, 0.0))
+
+
+class Policy:
+    """Base class for registered routing policies.
+
+    Subclasses override :meth:`route` (and :meth:`init` when they carry
+    state).  Set ``adaptive = True`` when the policy consumes the
+    warmup-derived control targets (§III-B) so ``simulate`` knows to run the
+    warmup pass — a capability flag, not a name check.
+    """
+
+    name: str = "?"
+    adaptive: bool = False
+
+    def init(self, cfg, ring) -> Any:
+        """Build the policy's carried state pytree (default: stateless)."""
+        return ()
+
+    def route(self, state: Any, ctx: RouteContext
+              ) -> Tuple[Any, jnp.ndarray, RouteStats]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Policy]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("my_policy")`` adds a Policy subclass
+    to the registry under ``name`` (usable as ``SimConfig(policy=name)``)."""
+    def deco(cls: Type[Policy]) -> Type[Policy]:
+        prev = _REGISTRY.get(name)
+        if prev is not None and prev is not cls:
+            raise ValueError(f"policy {name!r} already registered "
+                             f"({prev.__module__}.{prev.__qualname__})")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def unregister(name: str) -> None:
+    """Remove a registered policy (intended for tests/plugins)."""
+    _REGISTRY.pop(name, None)
+
+
+def available() -> Tuple[str, ...]:
+    """Sorted names of every registered policy."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_class(name: str) -> Type[Policy]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; available: "
+            f"{', '.join(available())}") from None
+
+
+def get(name: str) -> Policy:
+    """Instantiate the policy registered under ``name``."""
+    return get_class(name)()
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def sample_candidates(rng: jnp.ndarray, feas: jnp.ndarray,
+                      d: jnp.ndarray) -> jnp.ndarray:
+    """Mark which of the d_max feasible slots are sampled (size-d subset).
+
+    Slot 0 (the primary) is always in S; the remaining d-1 picks are a
+    uniform subset of slots 1..d_max-1 via random ranking.
+    """
+    R, d_max = feas.shape
+    scores = jax.random.uniform(rng, (R, d_max))
+    scores = scores.at[:, 0].set(-1.0)             # primary always sampled
+    order = jnp.argsort(scores, axis=1)
+    rank = jnp.argsort(order, axis=1)              # rank of each slot
+    return rank < d                                 # (R, d_max) bool

@@ -1,0 +1,45 @@
+"""Consistent hashing with bounded loads (registry proof-point #2).
+
+CHBL (Mirrokni, Thorup & Zadimoghaddam, 2018): every request goes to its
+ring primary unless the primary's load exceeds ``c`` times the mean; then it
+walks the feasible-set successors clockwise and takes the first server
+under the cap (falling back to the least-loaded successor when all are
+over).  Unlike power-of-d it steers *deterministically* and only under
+overload, so placement stays maximally stable — a useful middle ground
+between static hash and JSQ(d), and exactly the kind of policy the paper's
+middleware framing says should be pluggable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.policies.base import (Policy, RouteStats, register,
+                                      steering_dv)
+
+C_LOAD = 1.25   # CHBL capacity factor: cap = c * (mean load + 1)
+
+
+def route_bounded_load(feas: jnp.ndarray, L_view: jnp.ndarray,
+                       mask: jnp.ndarray, c: float = C_LOAD) -> jnp.ndarray:
+    """First feasible successor under the load cap; primary when it fits."""
+    cap = c * (jnp.mean(L_view) + 1.0)
+    Lf = L_view[feas]                              # (R, d_max)
+    under = Lf <= cap
+    first_under = jnp.argmax(under, axis=1)        # first True slot
+    least_loaded = jnp.argmin(Lf, axis=1)          # fallback: all over cap
+    slot = jnp.where(jnp.any(under, axis=1), first_under, least_loaded)
+    assign = jnp.take_along_axis(feas, slot[:, None], axis=1)[:, 0]
+    return jnp.where(mask, assign, -1)
+
+
+@register("chbl")
+class BoundedLoadHash(Policy):
+    """Consistent hashing with bounded loads (cap = 1.25 * (mean + 1))."""
+
+    def route(self, state, ctx):
+        assign = route_bounded_load(ctx.feas, ctx.L_view, ctx.mask)
+        moved = ctx.mask & (assign != ctx.primary)
+        z = jnp.zeros((), jnp.float32)
+        return state, assign, RouteStats(
+            steered=jnp.sum(moved).astype(jnp.float32), eligible=z,
+            dV=steering_dv(ctx, assign))

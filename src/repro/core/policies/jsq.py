@@ -1,0 +1,37 @@
+"""Full join-shortest-queue (registry proof-point #1).
+
+JSQ samples ALL m servers — the d = m limit of power-of-d — ignoring
+namespace feasibility.  It is not a deployable metadata policy (requests
+must reach a server that can resolve their object), but it bounds how much
+balance any sampling policy can buy, which makes the power-of-d gap
+measurable.  Lives entirely outside the simulator core: registering this
+module is all it takes to make ``SimConfig(policy="jsq")`` work.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies.base import (Policy, RouteStats, register,
+                                      steering_dv)
+
+
+def route_jsq(rng: jnp.ndarray, L_view: jnp.ndarray,
+              mask: jnp.ndarray) -> jnp.ndarray:
+    """Each request joins the globally shortest queue (random tie-break)."""
+    R, m = mask.shape[0], L_view.shape[0]
+    load = jnp.broadcast_to(L_view[None, :], (R, m))
+    tie = jax.random.uniform(rng, (R, m)) * 1e-3
+    assign = jnp.argmin(load + tie, axis=1).astype(jnp.int32)
+    return jnp.where(mask, assign, -1)
+
+
+@register("jsq")
+class JoinShortestQueue(Policy):
+    """Global JSQ over the stale telemetry view (d = m upper bound)."""
+
+    def route(self, state, ctx):
+        assign = route_jsq(ctx.rng, ctx.L_view, ctx.mask)
+        z = jnp.zeros((), jnp.float32)
+        return state, assign, RouteStats(steered=z, eligible=z,
+                                         dV=steering_dv(ctx, assign))

@@ -1,0 +1,22 @@
+"""Static consistent-hash placement (the no-steering MIDAS substrate)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashring
+from repro.core.policies.base import Policy, RouteStats, register
+
+
+def route_hash(ring: hashring.Ring, keys: jnp.ndarray,
+               mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(mask, hashring.primary(ring, keys), -1)
+
+
+@register("hash")
+class StaticHash(Policy):
+    """Every request goes to its ring primary — stable placement, no load
+    awareness.  This is what the warmup pass (§III-B) runs."""
+
+    def route(self, state, ctx):
+        assign = jnp.where(ctx.mask, ctx.primary, -1)
+        return state, assign, RouteStats.zeros()

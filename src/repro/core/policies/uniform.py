@@ -1,0 +1,21 @@
+"""Uniform-random placement baseline (balls-into-bins, d = 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies.base import Policy, RouteStats, register
+
+
+def route_uniform(rng: jnp.ndarray, mask: jnp.ndarray, m: int) -> jnp.ndarray:
+    a = jax.random.randint(rng, mask.shape, 0, m, dtype=jnp.int32)
+    return jnp.where(mask, a, -1)
+
+
+@register("uniform")
+class Uniform(Policy):
+    """Each request picks a server uniformly at random (§V d=1 bound)."""
+
+    def route(self, state, ctx):
+        return state, route_uniform(ctx.rng, ctx.mask, ctx.m), \
+            RouteStats.zeros()

@@ -1,182 +1,24 @@
-"""Routing policies: round-robin (Lustre baseline), uniform, static
-consistent-hash, power-of-d (paper's headline), and full MIDAS.
+"""Compatibility shim — routing policies now live in ``repro.core.policies``.
 
-Faithfulness notes:
-  * Proxies act on *stale* telemetry — the EWMA view from the last fast-loop
-    ingest (≤ one fast interval of delay, paper assumption 1) — never on
-    instantaneous queue state.
-  * MIDAS steering needs BOTH margins:  L̂_j ≤ L̂_p − Δ_L  and
-    p̃50_j ≤ p̃50_p − Δ_t;  winner is argmin L̂ with random tie-break.
-  * Steered keys are pinned to their chosen server for C ms.
-  * A sliding-window leaky bucket caps steered/eligible ≤ f_max exactly.
-  * Round-robin is run by P independent proxies with random phases, which is
-    how RR actually behaves at scale (aggregate ≈ random placement).
+Each policy is a self-contained registered module (see
+``repro/core/policies/__init__.py`` and DESIGN.md §2).  The functional
+kernels (``route_*``) are re-exported here unchanged; the state containers
+were split per policy and renamed — the old monolithic ``RouterState`` /
+``init_router`` are gone, replaced by ``MidasState`` / ``init_midas`` (pin
++ leaky-bucket state) and ``RRState`` / ``init_rr`` (per-proxy counters).
+New code should import from the policy modules directly.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import hashring
-
-
-class RouterState(NamedTuple):
-    rr_count: jnp.ndarray     # (P,) int32 per-proxy RR counters
-    rr_phase: jnp.ndarray     # (P,) int32 per-proxy RR phases
-    pin_server: jnp.ndarray   # (N,) int32 pinned server per key (-1 none)
-    pin_expiry: jnp.ndarray   # (N,) float32 absolute pin expiry (ms)
-    steer_hist: jnp.ndarray   # (W,) float32 per-tick steered counts
-    elig_hist: jnp.ndarray    # (W,) float32 per-tick eligible counts
-    hist_idx: jnp.ndarray     # () int32
-
-
-def init_router(P: int, N: int, W_ticks: int, seed: int = 0) -> RouterState:
-    phases = jax.random.randint(jax.random.PRNGKey(seed ^ 0xA5A5), (P,),
-                                0, 1_000_000, dtype=jnp.int32)
-    return RouterState(
-        rr_count=jnp.zeros((P,), jnp.int32),
-        rr_phase=phases,
-        pin_server=jnp.full((N,), -1, jnp.int32),
-        pin_expiry=jnp.zeros((N,), jnp.float32),
-        steer_hist=jnp.zeros((W_ticks,), jnp.float32),
-        elig_hist=jnp.zeros((W_ticks,), jnp.float32),
-        hist_idx=jnp.zeros((), jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# Baselines
-# ---------------------------------------------------------------------------
-
-
-def route_round_robin(keys: jnp.ndarray, mask: jnp.ndarray,
-                      m: int) -> jnp.ndarray:
-    """Lustre (Round-Robin) baseline: namespace objects are assigned to
-    metadata targets *sequentially at creation time* (DNE round-robin
-    striping), and every request follows its object's placement.  Object
-    ids are creation-ordered, so placement is ``key mod m``.  Under skewed
-    or bursty namespace access this is what produces the paper's hotspots:
-    the placement never reacts to load."""
-    return jnp.where(mask, (keys % m).astype(jnp.int32), -1)
-
-
-def route_rr_per_request(rs: RouterState, proxy: jnp.ndarray,
-                         mask: jnp.ndarray, m: int
-                         ) -> Tuple[RouterState, jnp.ndarray]:
-    """Ablation: P independent per-proxy per-request round-robin streams
-    (ignores namespace placement entirely; not a valid metadata policy —
-    requests must reach their object's server — but useful as a fairness
-    upper bound on *counts*)."""
-    P = rs.rr_count.shape[0]
-    oh = (proxy[:, None] == jnp.arange(P)[None, :]) & mask[:, None]  # (R,P)
-    prior = jnp.cumsum(oh, axis=0) - oh            # same-proxy requests before r
-    rank = jnp.sum(prior * oh, axis=1)             # (R,)
-    base = rs.rr_phase[proxy] + rs.rr_count[proxy]
-    assign = ((base + rank) % m).astype(jnp.int32)
-    new_count = rs.rr_count + jnp.sum(oh, axis=0).astype(jnp.int32)
-    return rs._replace(rr_count=new_count), jnp.where(mask, assign, -1)
-
-
-def route_uniform(rng: jnp.ndarray, mask: jnp.ndarray, m: int) -> jnp.ndarray:
-    a = jax.random.randint(rng, mask.shape, 0, m, dtype=jnp.int32)
-    return jnp.where(mask, a, -1)
-
-
-def route_hash(ring: hashring.Ring, keys: jnp.ndarray,
-               mask: jnp.ndarray) -> jnp.ndarray:
-    return jnp.where(mask, hashring.primary(ring, keys), -1)
-
-
-# ---------------------------------------------------------------------------
-# Power-of-d / MIDAS
-# ---------------------------------------------------------------------------
-
-
-def _sample_candidates(rng: jnp.ndarray, feas: jnp.ndarray,
-                       d: jnp.ndarray) -> jnp.ndarray:
-    """Mark which of the d_max feasible slots are sampled (size-d subset).
-
-    Slot 0 (the primary) is always in S; the remaining d-1 picks are a
-    uniform subset of slots 1..d_max-1 via random ranking.
-    """
-    R, d_max = feas.shape
-    scores = jax.random.uniform(rng, (R, d_max))
-    scores = scores.at[:, 0].set(-1.0)             # primary always sampled
-    order = jnp.argsort(scores, axis=1)
-    rank = jnp.argsort(order, axis=1)              # rank of each slot
-    return rank < d                                 # (R, d_max) bool
-
-
-def route_power_of_d(rng: jnp.ndarray, feas: jnp.ndarray, L_view: jnp.ndarray,
-                     mask: jnp.ndarray, d) -> jnp.ndarray:
-    """Pure JSQ(d) within the feasible set (paper §VI eval policy)."""
-    sampled = _sample_candidates(rng, feas, d)
-    load = jnp.where(sampled, L_view[feas], jnp.inf)
-    # random tie-break
-    tie = jax.random.uniform(jax.random.fold_in(rng, 1), feas.shape) * 1e-3
-    best = jnp.argmin(load + tie, axis=1)
-    assign = jnp.take_along_axis(feas, best[:, None], axis=1)[:, 0]
-    return jnp.where(mask, assign, -1)
-
-
-class MidasTickStats(NamedTuple):
-    eligible: jnp.ndarray   # () number of steer-eligible requests
-    steered: jnp.ndarray    # () number actually steered
-
-
-def route_midas(rs: RouterState, rng: jnp.ndarray, keys: jnp.ndarray,
-                feas: jnp.ndarray, L_view: jnp.ndarray, p50_view: jnp.ndarray,
-                mask: jnp.ndarray, d, delta_l, delta_t, f_max,
-                now_ms, pin_c_ms: float, w_ticks: int,
-                ) -> Tuple[RouterState, jnp.ndarray, MidasTickStats]:
-    """Full MIDAS routing for one request batch (Alg. 1 lines 36–47)."""
-    primary = feas[:, 0]
-    sampled = _sample_candidates(rng, feas, d)
-    sampled = sampled.at[:, 0].set(False)          # candidates exclude primary
-
-    Lp = L_view[primary][:, None]
-    p50p = p50_view[primary][:, None]
-    ok = (sampled
-          & (L_view[feas] <= Lp - delta_l)
-          & (p50_view[feas] <= p50p - delta_t))    # eligibility per candidate
-    load = jnp.where(ok, L_view[feas], jnp.inf)
-    tie = jax.random.uniform(jax.random.fold_in(rng, 2), feas.shape) * 1e-3
-    best_slot = jnp.argmin(load + tie, axis=1)
-    best = jnp.take_along_axis(feas, best_slot[:, None], axis=1)[:, 0]
-    has_candidate = jnp.any(ok, axis=1) & mask
-
-    # honor active pins: pinned keys go to their pinned server, no steering
-    pinned = (rs.pin_expiry[keys] > now_ms) & (rs.pin_server[keys] >= 0) & mask
-    # leaky bucket (exact sliding window): allow at most
-    #   f_max * (eligible in window incl. now) - (steered in window)
-    i = rs.hist_idx % w_ticks                     # slot about to be evicted
-    elig_now = jnp.sum(has_candidate & ~pinned)
-    elig_win = jnp.sum(rs.elig_hist) - rs.elig_hist[i] + elig_now
-    steer_win = jnp.sum(rs.steer_hist) - rs.steer_hist[i]
-    budget = jnp.floor(f_max * elig_win) - steer_win
-    want = has_candidate & ~pinned
-    order_rank = jnp.cumsum(want.astype(jnp.int32)) - 1
-    allowed = want & (order_rank < budget)
-
-    assign = jnp.where(pinned, rs.pin_server[keys],
-                       jnp.where(allowed, best, primary))
-    assign = jnp.where(mask, assign, -1)
-
-    # pin steered keys for C ms (sentinel N is out-of-bounds => dropped)
-    N = rs.pin_server.shape[0]
-    steer_keys = jnp.where(allowed, keys, N)
-    pin_server = rs.pin_server.at[steer_keys].set(best, mode="drop")
-    pin_expiry = rs.pin_expiry.at[steer_keys].set(
-        now_ms + pin_c_ms, mode="drop")
-
-    # window histories
-    steer_hist = rs.steer_hist.at[i].set(jnp.sum(allowed).astype(jnp.float32))
-    elig_hist = rs.elig_hist.at[i].set(elig_now.astype(jnp.float32))
-
-    new = rs._replace(pin_server=pin_server, pin_expiry=pin_expiry,
-                      steer_hist=steer_hist, elig_hist=elig_hist,
-                      hist_idx=rs.hist_idx + 1)
-    stats = MidasTickStats(eligible=elig_now.astype(jnp.float32),
-                           steered=jnp.sum(allowed).astype(jnp.float32))
-    return new, assign, stats
+from repro.core.policies.base import (RouteStats, sample_candidates,  # noqa: F401
+                                      steering_dv)
+from repro.core.policies.bounded_load import route_bounded_load  # noqa: F401
+from repro.core.policies.jsq import route_jsq  # noqa: F401
+from repro.core.policies.midas import (MidasState, MidasTickStats,  # noqa: F401
+                                       init_midas, route_midas)
+from repro.core.policies.power_of_d import route_power_of_d  # noqa: F401
+from repro.core.policies.round_robin import (RRState, init_rr,  # noqa: F401
+                                             route_round_robin,
+                                             route_rr_per_request)
+from repro.core.policies.static_hash import route_hash  # noqa: F401
+from repro.core.policies.uniform import route_uniform  # noqa: F401

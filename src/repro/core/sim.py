@@ -2,33 +2,41 @@
 
 m metadata servers, each a FIFO queue with constant 100 ms service time
 (the paper's stress bound).  Time advances in dt_ms ticks under
-``jax.lax.scan``; each tick routes a padded batch of requests with one of
-the policies in routing.py, applies service, refreshes (delayed) telemetry,
-and runs the fast/slow control loops on their paper cadences.
+``jax.lax.scan``; each tick first runs the middleware pipeline (stages may
+absorb requests at the proxy — the cooperative cache is the reference
+stage), then routes the surviving batch with the policy resolved from the
+registry (``repro.core.policies``), applies service, refreshes (delayed)
+telemetry, and runs the fast/slow control loops on their paper cadences.
 
 Within a tick, requests are processed in ``n_groups`` sequential waves:
 every wave sees the stale EWMA telemetry *plus* the proxies' own
 assignments from earlier waves (a proxy knows what it already sent), which
 is the honest middle ground between full per-request sequencing and pure
 batch routing.
+
+``simulate`` runs one config; ``simulate_sweep`` batches seeds with
+``jax.vmap`` (one compiled scan per policy, regardless of seed count) and
+fans out across policies — the API the benchmark suite uses.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import cache as cache_lib
 from repro.core import control as ctl
-from repro.core import hashring, routing, telemetry
+from repro.core import hashring, telemetry
+from repro.core import middleware as mw_lib
+from repro.core import policies as policy_lib
+from repro.core.policies.base import ControlKnobs, RouteContext
 from repro.core.workloads import Workload
 
-POLICIES = ("round_robin", "rr_request", "uniform", "hash", "power_of_d",
-            "midas")
+# Snapshot of the registry at import time; prefer policies.available().
+POLICIES = policy_lib.available()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,12 +46,13 @@ class SimConfig:
     N: int = 4096                  # namespace size (keys)
     dt_ms: float = 50.0
     service_ms: float = 100.0      # paper: constant 100 ms per RPC
-    policy: str = "midas"
+    policy: str = "midas"          # any name in policies.available()
     d_max: int = 4
     V: int = 64                    # virtual nodes per server
     rtt_ms: float = 2.0
     n_groups: int = 8              # routing waves per tick
-    cache_enabled: bool = False    # cooperative cache in front of routing
+    middleware: Tuple[str, ...] = ()  # pipeline stages, applied in order
+    cache_enabled: bool = False    # legacy alias for middleware=("cache",)
     cache_mode: str = "lease"      # lease | ttl_aggregate | ttl_per_key
     lease_ms: float = 5000.0
     p_star: float = 1e-4
@@ -67,6 +76,14 @@ class SimConfig:
     def serve_per_tick(self) -> float:
         return self.dt_ms / self.service_ms
 
+    @property
+    def middleware_chain(self) -> Tuple[str, ...]:
+        """Resolved pipeline: the legacy cache flag prepends the cache."""
+        chain = tuple(self.middleware)
+        if self.cache_enabled and "cache" not in chain:
+            chain = ("cache",) + chain
+        return chain
+
 
 class SimState(NamedTuple):
     tick: jnp.ndarray            # () int32
@@ -75,9 +92,9 @@ class SimState(NamedTuple):
     p50_hat: jnp.ndarray         # (m,) float32 EWMA p50 (ms)
     p99_hat: jnp.ndarray         # (m,) float32 EWMA p99 (ms)
     sketch: telemetry.LatencySketch
-    router: routing.RouterState
+    policy: tuple                # policy-owned pytree (see policies.base)
     ctrl: ctl.ControlState
-    cache: cache_lib.CacheState
+    mw: tuple                    # per-stage middleware pytrees, chain order
     rng: jnp.ndarray
 
 
@@ -90,7 +107,7 @@ class TickOut(NamedTuple):
     pressure: jnp.ndarray        # ()
     steered: jnp.ndarray         # ()
     eligible: jnp.ndarray        # ()
-    cache_hits: jnp.ndarray      # ()
+    cache_hits: jnp.ndarray      # () requests absorbed by the pipeline
     dV: jnp.ndarray              # () potential change from steering this tick
 
 
@@ -104,7 +121,7 @@ class SimResult(NamedTuple):
     steered: np.ndarray          # (T,)
     eligible: np.ndarray         # (T,)
     cache_hits: np.ndarray       # (T,)
-    final_cache: Optional[cache_lib.CacheState]
+    final_cache: Optional[object]
     config: SimConfig
 
     # ---- paper metrics -------------------------------------------------
@@ -143,63 +160,48 @@ class SimResult(NamedTuple):
         order = np.argsort(lat)
         lat, w = lat[order], w[order]
         cum = np.cumsum(w) / w.sum()
-        return tuple(float(lat[np.searchsorted(cum, q / 100.0)])
-                     for q in qs)
+        # fp rounding can leave cum[-1] < 1.0, pushing searchsorted past the
+        # last index — clip.
+        last = lat.size - 1
+        return tuple(
+            float(lat[min(int(np.searchsorted(cum, q / 100.0)), last)])
+            for q in qs)
 
 
-def _route_group(cfg: SimConfig, ring: hashring.Ring, state: SimState,
-                 L_view, keys, mask, rng, now_ms):
-    """Dispatch one wave of requests under the configured policy."""
-    if cfg.policy == "round_robin":
-        return state, routing.route_round_robin(keys, mask, cfg.m), None
-    if cfg.policy == "rr_request":
-        proxy = jax.random.randint(jax.random.fold_in(rng, 11), keys.shape,
-                                   0, cfg.P, dtype=jnp.int32)
-        router, assign = routing.route_rr_per_request(state.router, proxy,
-                                                      mask, cfg.m)
-        return state._replace(router=router), assign, None
-    if cfg.policy == "uniform":
-        return state, routing.route_uniform(rng, mask, cfg.m), None
-    if cfg.policy == "hash":
-        return state, routing.route_hash(ring, keys, mask), None
-    feas = hashring.feasible_set(ring, keys, cfg.d_max)
-    if cfg.policy == "power_of_d":
-        assign = routing.route_power_of_d(rng, feas, L_view, mask,
-                                          cfg.fixed_d)
-        return state, assign, None
-    if cfg.policy == "midas":
-        # stability-mechanism ablations (benchmarks/ablations.py)
-        delta_l = (jnp.zeros(()) if "no_margin" in cfg.ablate
-                   else state.ctrl.delta_l)
-        delta_t = (jnp.zeros(()) - 1e9 if "no_margin" in cfg.ablate
-                   else state.ctrl.delta_t)
-        f_max = (jnp.ones(()) if "no_bucket" in cfg.ablate
-                 else state.ctrl.f_max)
-        pin_ms = 0.0 if "no_pin" in cfg.ablate else ctl.PIN_C_MS
-        router, assign, stats = routing.route_midas(
-            state.router, rng, keys, feas, L_view, state.p50_hat, mask,
-            state.ctrl.d, delta_l, delta_t, f_max, now_ms, pin_ms,
-            cfg.w_ticks)
-        return state._replace(router=router), assign, stats
-    raise ValueError(f"unknown policy {cfg.policy!r}")
+def _middlewares(cfg: SimConfig) -> Tuple[mw_lib.Middleware, ...]:
+    return tuple(mw_lib.get(name) for name in cfg.middleware_chain)
 
 
-def _tick(cfg: SimConfig, ring: hashring.Ring, state: SimState,
+def _knob_view(cfg: SimConfig, ctrl: ctl.ControlState) -> ControlKnobs:
+    """Control knobs as policies see them, with stability-mechanism
+    ablations (benchmarks/ablations.py) applied uniformly."""
+    delta_l = (jnp.zeros(()) if "no_margin" in cfg.ablate else ctrl.delta_l)
+    delta_t = (jnp.zeros(()) - 1e9 if "no_margin" in cfg.ablate
+               else ctrl.delta_t)
+    f_max = (jnp.ones(()) if "no_bucket" in cfg.ablate else ctrl.f_max)
+    pin_ms = 0.0 if "no_pin" in cfg.ablate else ctl.PIN_C_MS
+    return ControlKnobs(d=ctrl.d, delta_l=delta_l, delta_t=delta_t,
+                        f_max=f_max, pin_ms=pin_ms)
+
+
+def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
+          mws: Tuple[mw_lib.Middleware, ...], state: SimState,
           inputs) -> Tuple[SimState, TickOut]:
     keys, mask, is_write = inputs
     now_ms = state.tick.astype(jnp.float32) * cfg.dt_ms
-    rng, r_cache, r_route = jax.random.split(state.rng, 3)
+    rng, r_mw, r_route = jax.random.split(state.rng, 3)
     state = state._replace(rng=rng)
 
-    cache_hits = jnp.zeros((), jnp.float32)
-    if cfg.cache_enabled:
-        new_cache, hit = cache_lib.lookup_batch(
-            state.cache, keys, mask, is_write, now_ms,
-            mode=cfg.cache_mode, lease_ms=cfg.lease_ms, rtt_ms=cfg.rtt_ms,
-            p_star=cfg.p_star)
-        state = state._replace(cache=new_cache)
-        mask = mask & ~hit                      # hits never reach the servers
-        cache_hits = jnp.sum(hit).astype(jnp.float32)
+    # --- middleware pipeline: stages may absorb requests at the proxy -----
+    absorbed = jnp.zeros((), jnp.float32)
+    mw_states = list(state.mw)
+    for i, mw in enumerate(mws):
+        batch = mw_lib.BatchView(keys=keys, mask=mask, is_write=is_write,
+                                 now_ms=now_ms,
+                                 rng=jax.random.fold_in(r_mw, i))
+        mw_states[i], mask, took = mw.on_batch(mw_states[i], batch, cfg)
+        absorbed = absorbed + took
+    state = state._replace(mw=tuple(mw_states))
 
     # --- route in waves; later waves see earlier waves' own assignments ---
     R = keys.shape[0]
@@ -208,30 +210,31 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, state: SimState,
     keysg = jnp.pad(keys, (0, pad)).reshape(G, -1)
     maskg = jnp.pad(mask, (0, pad)).reshape(G, -1)
 
+    knobs = _knob_view(cfg, state.ctrl)
+    ps = state.policy
     L_self = jnp.zeros((cfg.m,), jnp.float32)   # own sends this tick
     arrivals = jnp.zeros((cfg.m,), jnp.float32)
     steered = jnp.zeros((), jnp.float32)
     eligible = jnp.zeros((), jnp.float32)
     dV = jnp.zeros((), jnp.float32)
     for g in range(G):
-        rg = jax.random.fold_in(r_route, g)
-        L_view = state.L_hat + L_self
-        state, assign, stats = _route_group(cfg, ring, state, L_view,
-                                            keysg[g], maskg[g], rg, now_ms)
+        ctx = RouteContext(
+            keys=keysg[g], mask=maskg[g],
+            feas=hashring.feasible_set(ring, keysg[g], cfg.d_max),
+            L_view=state.L_hat + L_self, p50_view=state.p50_hat,
+            knobs=knobs, now_ms=now_ms,
+            rng=jax.random.fold_in(r_route, g),
+            m=cfg.m, fixed_d=cfg.fixed_d)
+        ps, assign, stats = policy.route(ps, ctx)
         counts = jnp.zeros((cfg.m,), jnp.float32).at[
             jnp.where(maskg[g], assign, 0)].add(
             jnp.where(maskg[g], 1.0, 0.0))
-        # Lyapunov bookkeeping: ΔV contribution of steering away from primary
-        if cfg.policy in ("power_of_d", "midas"):
-            prim = hashring.primary(ring, keysg[g])
-            moved = maskg[g] & (assign != prim) & (assign >= 0)
-            dV = dV + jnp.sum(jnp.where(
-                moved, 2.0 * (L_view[assign] - L_view[prim]) + 2.0, 0.0))
         L_self = L_self + counts
         arrivals = arrivals + counts
-        if stats is not None:
-            steered = steered + stats.steered
-            eligible = eligible + stats.eligible
+        steered = steered + stats.steered
+        eligible = eligible + stats.eligible
+        dV = dV + stats.dV
+    state = state._replace(policy=ps)
 
     # --- queue dynamics: constant-rate servers, work-conserving ----------
     L = state.L + arrivals
@@ -259,25 +262,26 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, state: SimState,
     state = state._replace(sketch=sketch)
     state = jax.lax.cond(is_fast, ingest, lambda s: s, state)
 
-    if cfg.cache_enabled:
+    if mws:
         is_slow = (state.tick % cfg.t_slow_ticks) == 0
-        lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
 
         def slow(s: SimState) -> SimState:
-            return s._replace(cache=cache_lib.slow_update(
-                s.cache, ctl.T_SLOW_MS, cfg.rtt_ms, lease, cfg.p_star))
+            return s._replace(mw=tuple(
+                mw.on_slow(ms, cfg) for mw, ms in zip(mws, s.mw)))
 
         state = jax.lax.cond(is_slow, slow, lambda s: s, state)
 
     out = TickOut(L=L, arrivals=arrivals, lat_pred=lat_pred,
                   d=state.ctrl.d, delta_l=state.ctrl.delta_l,
                   pressure=state.ctrl.pressure, steered=steered,
-                  eligible=eligible, cache_hits=cache_hits, dV=dV)
+                  eligible=eligible, cache_hits=absorbed, dV=dV)
     return state, out
 
 
 def init_state(cfg: SimConfig, b_tgt: float = 0.15,
                p99_tgt: float = 500.0) -> SimState:
+    policy = policy_lib.get(cfg.policy)     # raises with available() names
+    ring = hashring.make_ring(cfg.m, cfg.V)
     return SimState(
         tick=jnp.zeros((), jnp.int32),
         L=jnp.zeros((cfg.m,), jnp.float32),
@@ -285,17 +289,33 @@ def init_state(cfg: SimConfig, b_tgt: float = 0.15,
         p50_hat=jnp.zeros((cfg.m,), jnp.float32),
         p99_hat=jnp.zeros((cfg.m,), jnp.float32),
         sketch=telemetry.make_sketch(cfg.m),
-        router=routing.init_router(cfg.P, cfg.N, cfg.w_ticks, cfg.seed),
+        policy=policy.init(cfg, ring),
         ctrl=ctl.init_control(cfg.rtt_ms, b_tgt, p99_tgt),
-        cache=cache_lib.init_cache(cfg.N),
+        mw=tuple(mw.init(cfg) for mw in _middlewares(cfg)),
         rng=jax.random.PRNGKey(cfg.seed))
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
     ring = hashring.make_ring(cfg.m, cfg.V)
-    step = functools.partial(_tick, cfg, ring)
+    step = functools.partial(_tick, cfg, ring, policy_lib.get(cfg.policy),
+                             _middlewares(cfg))
     return jax.lax.scan(step, state, (keys, mask, is_write))
+
+
+# Trace counter for _run_scan_sweep: increments only when the sweep scan is
+# (re)compiled, letting tests assert "one compile per policy, any #seeds".
+_SWEEP_TRACES = [0]
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _run_scan_sweep(cfg: SimConfig, states: SimState, keys, mask, is_write):
+    _SWEEP_TRACES[0] += 1
+    ring = hashring.make_ring(cfg.m, cfg.V)
+    step = functools.partial(_tick, cfg, ring, policy_lib.get(cfg.policy),
+                             _middlewares(cfg))
+    return jax.vmap(
+        lambda st: jax.lax.scan(step, st, (keys, mask, is_write)))(states)
 
 
 def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
@@ -304,7 +324,8 @@ def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
     from repro.core.workloads import make_workload
     wl = make_workload("light", T=T, m=cfg.m, seed=seed, dt_ms=cfg.dt_ms,
                        service_ms=cfg.service_ms, N=cfg.N)
-    warm_cfg = dataclasses.replace(cfg, policy="hash", cache_enabled=False)
+    warm_cfg = dataclasses.replace(cfg, policy="hash", cache_enabled=False,
+                                   middleware=())
     st = init_state(warm_cfg)
     _, outs = _run_scan(warm_cfg, st, wl.keys, wl.mask, wl.is_write)
     L = np.asarray(outs.L)
@@ -321,7 +342,8 @@ def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
     if fw.sum() > 0:
         order = np.argsort(flat)
         cum = np.cumsum(fw[order]) / fw.sum()
-        p99_warm = float(flat[order][np.searchsorted(cum, 0.99)])
+        idx = min(int(np.searchsorted(cum, 0.99)), flat.size - 1)  # fp clip
+        p99_warm = float(flat[order][idx])
     else:
         p99_warm = cfg.service_ms
     b_tgt = float(np.median(B) + 0.05)
@@ -329,14 +351,14 @@ def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
     return b_tgt, p99_tgt
 
 
-def simulate(cfg: SimConfig, wl: Workload,
-             do_warmup: bool = True) -> SimResult:
-    if do_warmup and cfg.policy == "midas":
-        b_tgt, p99_tgt = warmup(cfg)
-    else:
-        b_tgt, p99_tgt = 0.15, 5.0 * cfg.service_ms
-    state = init_state(cfg, b_tgt, p99_tgt)
-    final, outs = _run_scan(cfg, state, wl.keys, wl.mask, wl.is_write)
+def _final_cache(cfg: SimConfig, final: SimState):
+    chain = cfg.middleware_chain
+    if "cache" not in chain:
+        return None
+    return jax.device_get(final.mw[chain.index("cache")])
+
+
+def _to_result(cfg: SimConfig, outs: TickOut, final_cache) -> SimResult:
     return SimResult(
         queue_timeline=np.asarray(outs.L),
         arrivals=np.asarray(outs.arrivals),
@@ -347,5 +369,55 @@ def simulate(cfg: SimConfig, wl: Workload,
         steered=np.asarray(outs.steered),
         eligible=np.asarray(outs.eligible),
         cache_hits=np.asarray(outs.cache_hits),
-        final_cache=jax.device_get(final.cache) if cfg.cache_enabled else None,
+        final_cache=final_cache,
         config=cfg)
+
+
+def _targets(cfg: SimConfig, do_warmup: bool) -> Tuple[float, float]:
+    if do_warmup and policy_lib.get_class(cfg.policy).adaptive:
+        return warmup(cfg)
+    return 0.15, 5.0 * cfg.service_ms
+
+
+def simulate(cfg: SimConfig, wl: Workload,
+             do_warmup: bool = True) -> SimResult:
+    b_tgt, p99_tgt = _targets(cfg, do_warmup)
+    state = init_state(cfg, b_tgt, p99_tgt)
+    final, outs = _run_scan(cfg, state, wl.keys, wl.mask, wl.is_write)
+    return _to_result(cfg, outs, _final_cache(cfg, final))
+
+
+def simulate_sweep(cfg: SimConfig, wl: Workload,
+                   policies: Optional[Tuple[str, ...]] = None,
+                   seeds: Tuple[int, ...] = (0,),
+                   do_warmup: bool = True,
+                   ) -> Dict[str, Tuple[SimResult, ...]]:
+    """Batched simulation: ``jax.vmap`` over seeds, fan-out over policies.
+
+    For each policy the scan is traced and compiled exactly once regardless
+    of how many seeds are swept (per-seed ``simulate`` calls would each
+    retrace, since ``cfg.seed`` is static).  Returns
+    ``{policy: (SimResult per seed, ...)}``; per-seed results match
+    individual ``simulate`` runs.
+    """
+    names = tuple(policies) if policies is not None else (cfg.policy,)
+    seeds = tuple(seeds)
+    if not seeds:
+        raise ValueError("simulate_sweep needs at least one seed")
+    results: Dict[str, Tuple[SimResult, ...]] = {}
+    for name in names:
+        pcfg = dataclasses.replace(cfg, policy=name)
+        b_tgt, p99_tgt = _targets(pcfg, do_warmup)
+        per_seed = [init_state(dataclasses.replace(pcfg, seed=s),
+                               b_tgt, p99_tgt) for s in seeds]
+        states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_seed)
+        final, outs = _run_scan_sweep(pcfg, states, wl.keys, wl.mask,
+                                      wl.is_write)
+        rows = []
+        for i, s in enumerate(seeds):
+            outs_i = jax.tree_util.tree_map(lambda x: x[i], outs)
+            final_i = jax.tree_util.tree_map(lambda x: x[i], final)
+            rows.append(_to_result(dataclasses.replace(pcfg, seed=s), outs_i,
+                                   _final_cache(pcfg, final_i)))
+        results[name] = tuple(rows)
+    return results

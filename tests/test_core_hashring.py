@@ -61,3 +61,25 @@ def test_mix32_is_a_permutation_sample():
     xs = jnp.arange(100000, dtype=jnp.uint32)
     hs = np.asarray(hashring.mix32(xs))
     assert len(np.unique(hs)) == 100000  # injective on this range
+
+
+def test_make_ring_is_memoized():
+    """Host-side lru_cache: re-traces reuse the same concrete ring."""
+    assert hashring.make_ring(8, V=64) is hashring.make_ring(8, 64)
+    assert hashring.make_ring(8, V=64) is not hashring.make_ring(8, 32)
+
+
+def test_numpy_builder_matches_traced_hash():
+    """The memoized numpy ring builder reproduces the jnp hash exactly."""
+    m, V = 8, 64
+    ring = hashring.make_ring(m, V)
+    servers = jnp.repeat(jnp.arange(m, dtype=jnp.uint32), V)
+    replicas = jnp.tile(jnp.arange(V, dtype=jnp.uint32), m)
+    pos = hashring.hash2(servers * jnp.uint32(0x10001) + replicas,
+                         jnp.uint32(1))
+    order = jnp.argsort(pos)
+    np.testing.assert_array_equal(np.asarray(pos[order]),
+                                  np.asarray(ring.positions))
+    np.testing.assert_array_equal(
+        np.asarray(servers[order].astype(jnp.int32)),
+        np.asarray(ring.owners))

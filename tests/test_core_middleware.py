@@ -1,0 +1,96 @@
+"""Middleware pipeline: cache-as-stage preserves the coherence invariants
+of test_core_cache.py, absorbed requests leave the batch, stages compose."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, make_workload, middleware as mw_lib, simulate
+
+
+def _cache_mw(mode="lease", **cfg_kw):
+    cfg = SimConfig(N=16, cache_mode=mode, **cfg_kw)
+    mw = mw_lib.get("cache")
+    return mw, mw.init(cfg), cfg
+
+
+def _batch(keys, writes=None, now=0.0):
+    keys = jnp.asarray(keys, jnp.int32)
+    mask = jnp.ones_like(keys, dtype=bool)
+    w = jnp.zeros_like(mask) if writes is None else jnp.asarray(writes, bool)
+    return mw_lib.BatchView(keys=keys, mask=mask, is_write=w,
+                            now_ms=jnp.asarray(now),
+                            rng=jnp.zeros((2,), jnp.uint32))
+
+
+def test_unknown_middleware_error_lists_names():
+    with pytest.raises(ValueError, match="available"):
+        mw_lib.get("no_such_stage")
+
+
+def test_cache_stage_miss_then_hit_within_ttl():
+    mw, st, cfg = _cache_mw()
+    st, mask, absorbed = mw.on_batch(st, _batch([3], now=0.0), cfg)
+    assert bool(mask[0]) and float(absorbed) == 0      # miss reaches server
+    st, mask, absorbed = mw.on_batch(st, _batch([3], now=10.0), cfg)
+    assert not bool(mask[0]) and float(absorbed) == 1  # hit absorbed
+    assert int(st.hits) == 1 and int(st.misses) == 1
+
+
+def test_cache_stage_write_invalidates_immediately():
+    mw, st, cfg = _cache_mw("lease")
+    st, _, _ = mw.on_batch(st, _batch([3], now=0.0), cfg)
+    st, mask, _ = mw.on_batch(st, _batch([3], writes=[True], now=1.0), cfg)
+    assert bool(mask[0])                               # writes pass through
+    st, mask, _ = mw.on_batch(st, _batch([3], now=2.0), cfg)
+    assert bool(mask[0])                               # entry was invalidated
+    assert int(st.stale_serves) == 0
+
+
+def test_cache_stage_never_serves_past_expiry():
+    mw, st, cfg = _cache_mw("lease", lease_ms=100.0)
+    st, _, _ = mw.on_batch(st, _batch([5], now=0.0), cfg)
+    st, mask, absorbed = mw.on_batch(st, _batch([5], now=101.0), cfg)
+    assert bool(mask[0]) and float(absorbed) == 0
+
+
+def test_cache_stage_slow_hook_retunes_ttl():
+    mw, st, cfg = _cache_mw("ttl_aggregate", rtt_ms=5.0)
+    st = st._replace(win_writes=jnp.asarray(100.0),
+                     win_reads=jnp.asarray(100.0))
+    st2 = mw.on_slow(st, cfg)
+    assert float(st2.ttl_ms) >= 5.0                    # >= one RTT
+    assert float(st2.win_writes) == 0.0                # window reset
+
+
+def test_legacy_cache_flag_equals_middleware_chain():
+    """cache_enabled=True is exactly middleware=("cache",)."""
+    wl = make_workload("skewed", T=120, m=4, seed=2)
+    a = simulate(SimConfig(m=4, policy="hash", cache_enabled=True), wl,
+                 do_warmup=False)
+    b = simulate(SimConfig(m=4, policy="hash", middleware=("cache",)), wl,
+                 do_warmup=False)
+    np.testing.assert_array_equal(a.queue_timeline, b.queue_timeline)
+    np.testing.assert_array_equal(a.cache_hits, b.cache_hits)
+    assert int(a.final_cache.hits) == int(b.final_cache.hits)
+
+
+def test_custom_stage_composes_before_cache():
+    """A third-party stage slots into the pipeline ahead of the cache."""
+    @mw_lib.register("_test_drop_writes")
+    class DropWrites(mw_lib.Middleware):
+        def on_batch(self, state, batch, cfg):
+            keep = batch.mask & ~batch.is_write
+            absorbed = jnp.sum(batch.mask & batch.is_write)
+            return state, keep, absorbed.astype(jnp.float32)
+
+    try:
+        wl = make_workload("skewed", T=60, m=4, seed=4, write_frac=0.5)
+        cfg = SimConfig(m=4, policy="hash",
+                        middleware=("_test_drop_writes", "cache"))
+        res = simulate(cfg, wl, do_warmup=False)
+        # with every write absorbed upstream, the cache never sees an
+        # invalidation => zero stale serves, and arrivals < offered load
+        assert int(res.final_cache.stale_serves) == 0
+        assert res.arrivals.sum() < np.asarray(wl.mask).sum()
+    finally:
+        mw_lib.unregister("_test_drop_writes")

@@ -1,0 +1,112 @@
+"""Policy registry + pipeline API: registration, dispatch, sweeps."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, make_workload, simulate, simulate_sweep
+from repro.core import policies
+from repro.core import sim as sim_lib
+
+BUILTINS = ("chbl", "hash", "jsq", "midas", "power_of_d", "round_robin",
+            "rr_request", "uniform")
+
+
+def test_builtins_registered():
+    names = policies.available()
+    for n in BUILTINS:
+        assert n in names
+
+
+def test_unknown_policy_error_lists_available_names():
+    wl = make_workload("bursty", T=8, m=4, seed=0)
+    with pytest.raises(ValueError) as ei:
+        simulate(SimConfig(m=4, policy="no_such_policy"), wl,
+                 do_warmup=False)
+    msg = str(ei.value)
+    assert "no_such_policy" in msg
+    for n in policies.available():
+        assert n in msg
+
+
+@pytest.mark.parametrize("name", BUILTINS)
+def test_every_policy_simulates_bursty_without_nans(name):
+    wl = make_workload("bursty", T=40, m=4, seed=3)
+    res = simulate(SimConfig(m=4, N=256, policy=name), wl, do_warmup=False)
+    assert np.isfinite(res.queue_timeline).all()
+    assert (res.queue_timeline >= 0).all()
+    assert np.isfinite(res.lat_pred).all()
+    # everything that arrived was routed somewhere valid
+    assert res.arrivals.sum() == np.asarray(wl.mask).sum()
+
+
+def test_third_party_policy_registers_and_runs():
+    @policies.register("_test_all_to_zero")
+    class AllToZero(policies.Policy):
+        def route(self, state, ctx):
+            assign = jnp.where(ctx.mask, 0, -1).astype(jnp.int32)
+            return state, assign, policies.RouteStats.zeros()
+
+    try:
+        wl = make_workload("bursty", T=20, m=4, seed=0)
+        res = simulate(SimConfig(m=4, policy="_test_all_to_zero"), wl,
+                       do_warmup=False)
+        assert res.arrivals[:, 1:].sum() == 0
+        assert res.arrivals[:, 0].sum() == np.asarray(wl.mask).sum()
+    finally:
+        policies.unregister("_test_all_to_zero")
+    assert "_test_all_to_zero" not in policies.available()
+
+
+def test_duplicate_registration_rejected():
+    @policies.register("_test_dup")
+    class First(policies.Policy):
+        pass
+
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            @policies.register("_test_dup")
+            class Second(policies.Policy):
+                pass
+    finally:
+        policies.unregister("_test_dup")
+
+
+def test_adaptive_flag_drives_warmup():
+    """Warmup targeting is a capability flag, not a policy-name check."""
+    assert policies.get_class("midas").adaptive
+    for name in ("hash", "power_of_d", "jsq", "chbl"):
+        assert not policies.get_class(name).adaptive
+
+
+def test_sweep_matches_per_seed_runs_and_compiles_once():
+    wl = make_workload("bursty", T=200, m=4, seed=11)
+    cfg = SimConfig(m=4, N=512, policy="power_of_d")
+    seeds = (0, 1, 2, 3)
+    before = sim_lib._SWEEP_TRACES[0]
+    sweep = simulate_sweep(cfg, wl, seeds=seeds, do_warmup=False)
+    assert sim_lib._SWEEP_TRACES[0] == before + 1   # one compile, 4 seeds
+    assert set(sweep) == {"power_of_d"}
+    assert len(sweep["power_of_d"]) == len(seeds)
+    for i, s in enumerate(seeds):
+        single = simulate(dataclasses.replace(cfg, seed=s), wl,
+                          do_warmup=False)
+        np.testing.assert_allclose(sweep["power_of_d"][i].queue_timeline,
+                                   single.queue_timeline,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(sweep["power_of_d"][i].arrivals,
+                                   single.arrivals, rtol=1e-5, atol=1e-5)
+
+
+def test_sweep_fans_out_over_policies_with_cache():
+    wl = make_workload("skewed", T=120, m=4, seed=2)
+    sweep = simulate_sweep(SimConfig(m=4, middleware=("cache",)), wl,
+                           policies=("hash", "midas"), seeds=(0, 1),
+                           do_warmup=False)
+    assert set(sweep) == {"hash", "midas"}
+    for rows in sweep.values():
+        assert len(rows) == 2
+        for r in rows:
+            assert r.final_cache is not None
+            assert np.isfinite(r.queue_timeline).all()

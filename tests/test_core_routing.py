@@ -1,15 +1,23 @@
-"""Routing-layer unit tests: margins, pinning, leaky bucket, baselines."""
+"""Routing-layer unit tests: margins, pinning, leaky bucket, baselines.
+
+Policies now live in self-contained registered modules under
+``repro.core.policies``; these tests exercise their functional kernels.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hashring, routing
+from repro.core import hashring
+from repro.core.policies import bounded_load as chbl
+from repro.core.policies import midas as midas_mod
+from repro.core.policies import power_of_d as pod_mod
+from repro.core.policies import round_robin as rr_mod
 
 M, N, W = 8, 64, 20
 
 
 def _rs():
-    return routing.init_router(P=4, N=N, W_ticks=W, seed=0)
+    return midas_mod.init_midas(N=N, w_ticks=W)
 
 
 def _midas(rs, keys, L, *, d=2, delta_l=2.0, delta_t=0.0, f_max=1.0,
@@ -19,7 +27,7 @@ def _midas(rs, keys, L, *, d=2, delta_l=2.0, delta_t=0.0, f_max=1.0,
     feas = hashring.feasible_set(ring, keys, 4)
     mask = jnp.ones(keys.shape, bool)
     p50 = L * 100.0 if p50 is None else p50
-    return routing.route_midas(
+    return midas_mod.route_midas(
         rs, jax.random.PRNGKey(rng), keys, feas, jnp.asarray(L, jnp.float32),
         jnp.asarray(p50, jnp.float32), mask, jnp.asarray(d),
         jnp.asarray(delta_l), jnp.asarray(delta_t), jnp.asarray(f_max),
@@ -94,7 +102,7 @@ def test_pin_honored_until_expiry():
 def test_round_robin_is_static_key_placement():
     keys = jnp.asarray([0, 1, 2, 9, 17], jnp.int32)
     mask = jnp.ones((5,), bool)
-    a = np.asarray(routing.route_round_robin(keys, mask, M))
+    a = np.asarray(rr_mod.route_round_robin(keys, mask, M))
     np.testing.assert_array_equal(a, [0, 1, 2, 1, 1])
 
 
@@ -103,9 +111,39 @@ def test_power_of_d_prefers_less_loaded():
     keys = jnp.arange(256, dtype=jnp.int32)
     feas = hashring.feasible_set(ring, keys, 4)
     L = jnp.asarray([100.0, 0, 100, 0, 100, 0, 100, 0])
-    a = routing.route_power_of_d(jax.random.PRNGKey(0), feas, L,
+    a = pod_mod.route_power_of_d(jax.random.PRNGKey(0), feas, L,
                                  jnp.ones((256,), bool), 4)
     loads_chosen = np.asarray(L)[np.asarray(a)]
     # with d=4 over distinct feasible sets, the heavy servers are avoidable
     # for almost all keys
     assert (loads_chosen == 0).mean() > 0.9
+
+
+def test_bounded_load_stays_on_primary_under_cap():
+    """CHBL is placement-stable: balanced loads never move a request."""
+    ring = hashring.make_ring(M, V=32)
+    keys = jnp.arange(128, dtype=jnp.int32)
+    feas = hashring.feasible_set(ring, keys, 4)
+    mask = jnp.ones((128,), bool)
+    L = jnp.ones((M,)) * 3.0
+    a = chbl.route_bounded_load(feas, L, mask)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(feas[:, 0]))
+
+
+def test_bounded_load_spills_only_over_cap():
+    """Requests whose primary exceeds c*(mean+1) walk to a successor that
+    fits; everyone else stays put."""
+    ring = hashring.make_ring(M, V=32)
+    keys = jnp.arange(256, dtype=jnp.int32)
+    feas = hashring.feasible_set(ring, keys, 4)
+    mask = jnp.ones((256,), bool)
+    L = jnp.asarray([100.0, 0, 0, 0, 0, 0, 0, 0])
+    cap = chbl.C_LOAD * (float(jnp.mean(L)) + 1.0)
+    a = np.asarray(chbl.route_bounded_load(feas, L, mask))
+    prim = np.asarray(feas[:, 0])
+    Lnp = np.asarray(L)
+    over = Lnp[prim] > cap
+    assert over.any()
+    # spilled requests landed under the cap; others kept their primary
+    assert (Lnp[a[over]] <= cap).all()
+    np.testing.assert_array_equal(a[~over], prim[~over])

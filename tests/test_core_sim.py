@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import SimConfig, make_workload, simulate
+from repro.core.sim import SimResult
 
 T = 1600  # 80 s at dt=50 ms — enough for several bursts
 
@@ -44,6 +45,21 @@ def test_queue_timeline_shape_and_nonneg(bursty_results):
     assert q.shape == (T, 8)
     assert (q >= 0).all()
     assert np.isfinite(q).all()
+
+
+def test_latency_quantiles_q100_stays_in_bounds():
+    """Regression: fp rounding can leave cum[-1] < 1.0; q=100 must not
+    index past the end (np.searchsorted returns len on such inputs)."""
+    T_, m_ = 1, 10
+    lat = np.arange(m_, dtype=np.float64).reshape(T_, m_)
+    w = np.full((T_, m_), 0.1)          # cumsum(w)/sum(w) ends below 1.0
+    r = SimResult(
+        queue_timeline=np.zeros((T_, m_)), arrivals=w, lat_pred=lat,
+        d_timeline=np.zeros(T_), delta_l_timeline=np.zeros(T_),
+        pressure=np.zeros(T_), steered=np.zeros(T_), eligible=np.zeros(T_),
+        cache_hits=np.zeros(T_), final_cache=None, config=SimConfig())
+    (q100,) = r.latency_quantiles(qs=(100,))
+    assert q100 == lat.max()
 
 
 def test_midas_full_stability_and_bounded_steering():

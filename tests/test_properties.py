@@ -1,7 +1,10 @@
 """Hypothesis property tests on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dep: skip cleanly when absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cache as cache_lib
 from repro.core import control as ctl
