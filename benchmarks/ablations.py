@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core import SimConfig, make_workload, simulate

@@ -27,7 +27,8 @@ def run() -> None:
         worst[policy] = max(pool._backlog) / (1 << 20)
     emit("ckpt/storm_worst_lane_mb", 0.0,
          ";".join(f"{p}={v:.0f}" for p, v in worst.items())
-         + f";midas_vs_hash=-{(1 - worst['midas'] / worst['hash']) * 100:.0f}%")
+         + ";midas_vs_hash="
+         + f"-{(1 - worst['midas'] / worst['hash']) * 100:.0f}%")
 
     # real end-to-end save + restore
     rng = np.random.default_rng(0)

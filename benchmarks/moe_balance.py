@@ -51,4 +51,6 @@ def run() -> None:
          f"steer_rate={float(steered.mean()):.3f}")
     emit("moe/improvement", 0.0,
          f"load_cv -{(1 - cv_m / max(cv_v, 1e-9)) * 100:.0f}%;"
-         f"drops -{(1 - drop_rate(e_mid) / max(drop_rate(e_van), 1e-9)) * 100:.0f}%")
+         "drops "
+         f"-{(1 - drop_rate(e_mid) / max(drop_rate(e_van), 1e-9)) * 100:.0f}"
+         "%")

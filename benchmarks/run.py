@@ -18,6 +18,7 @@ SECTIONS = {
     "cache": "benchmarks.cache",               # E5
     "moe": "benchmarks.moe_balance",           # E6
     "ckpt": "benchmarks.ckpt_storm",           # E7
+    "scenario_matrix": "benchmarks.scenario_matrix",  # E8
     "serving": "benchmarks.serving",
     "kernels": "benchmarks.kernels_bench",
     "ablations": "benchmarks.ablations",       # §IV-E stability guards
@@ -36,7 +37,18 @@ def main() -> None:
         for name, mod in SECTIONS.items():
             print(f"{name:10s} {mod}")
         return
-    names = (args.only.split(",") if args.only else list(SECTIONS))
+    if args.only:
+        # tolerate whitespace and stray commas; run each section once, in
+        # the order first named
+        names = []
+        for n in (s.strip() for s in args.only.split(",")):
+            if n and n not in names:
+                names.append(n)
+        if not names:
+            ap.error("--only named no sections; "
+                     f"available: {', '.join(SECTIONS)} (try --list)")
+    else:
+        names = list(SECTIONS)
     unknown = [n for n in names if n not in SECTIONS]
     if unknown:
         ap.error(f"unknown section(s): {', '.join(unknown)}; "

@@ -1,7 +1,6 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import sys
-import jax
 from repro.config import RunConfig, MeshConfig
 from repro.launch.dryrun import run_cell
 

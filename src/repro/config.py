@@ -7,9 +7,8 @@ paired per-arch through ``applicable_shapes``.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Architecture config
@@ -24,7 +23,8 @@ class MoEConfig:
     router: str = "topk"                # "topk" | "midas"
     capacity_factor: float = 1.25
     # MIDAS dispatch knobs (paper Alg. 1 adapted to expert dispatch)
-    midas_d: int = 2                    # power-of-d sample among top-d gate candidates
+    midas_d: int = 2            # power-of-d sample among top-d gate
+                                # candidates
     midas_delta_l: int = 2              # queue margin (Lyapunov-stable >= 2)
     midas_fmax: float = 0.25            # steering cap (fraction of tokens)
     midas_ewma_alpha: float = 0.2       # EWMA on per-expert load telemetry
@@ -41,7 +41,7 @@ class MambaConfig:
 @dataclass(frozen=True)
 class ArchConfig:
     name: str
-    family: str                         # dense | moe | hybrid | ssm | audio | vlm
+    family: str                 # dense | moe | hybrid | ssm | audio | vlm
     num_layers: int
     d_model: int
     num_heads: int
@@ -57,16 +57,16 @@ class ArchConfig:
     final_softcap: float = 0.0
     tie_embeddings: bool = False
     norm: str = "rmsnorm"               # rmsnorm | layernorm
-    act: str = "silu"                   # silu (gated) | gelu (gated) | gelu_plain
+    act: str = "silu"           # silu (gated) | gelu (gated) | gelu_plain
     qkv_bias: bool = False
     # MoE / hybrid / ssm
     moe: Optional[MoEConfig] = None
     mamba: Optional[MambaConfig] = None
-    attn_every: int = 1                 # jamba: 1 attention layer per `attn_every` layers
-    moe_every: int = 1                  # jamba: MoE layer every `moe_every` layers
+    attn_every: int = 1         # jamba: 1 attn layer per `attn_every`
+    moe_every: int = 1          # jamba: MoE layer every `moe_every`
     # modality frontend stub
     frontend: str = "none"              # none | audio_frames | vlm_patches
-    frontend_tokens: int = 0            # extra prepended embedding tokens (vlm)
+    frontend_tokens: int = 0    # extra prepended embedding tokens (vlm)
     # which shapes apply (long_500k only for sub-quadratic archs)
     applicable_shapes: Tuple[str, ...] = (
         "train_4k", "prefill_32k", "decode_32k")
@@ -86,13 +86,9 @@ class ArchConfig:
         hd = self.resolved_head_dim
         emb = self.vocab_size * d
         head = 0 if self.tie_embeddings else self.vocab_size * d
-        per_layer = 0
-        n_attn_layers = sum(1 for i in range(L) if self.layer_kind(i)[0] == "attn")
-        n_mamba_layers = L - n_attn_layers
         attn = (d * self.num_heads * hd  # q
                 + 2 * d * self.num_kv_heads * hd  # k,v
                 + self.num_heads * hd * d)  # o
-        per_layer += 0  # accumulated below per kind
         total = emb + head
         for i in range(L):
             kind, is_moe = self.layer_kind(i)
@@ -142,8 +138,10 @@ class ArchConfig:
         if self.family == "hybrid":
             # Jamba: 1 attention layer per `attn_every` (position attn_every-1
             # within each period); MoE every `moe_every` layers (odd layers).
-            kind = "attn" if (i % self.attn_every == self.attn_every - 1) else "mamba"
-            is_moe = self.moe is not None and (i % self.moe_every == self.moe_every - 1)
+            last = i % self.attn_every == self.attn_every - 1
+            kind = "attn" if last else "mamba"
+            is_moe = (self.moe is not None
+                      and i % self.moe_every == self.moe_every - 1)
             return (kind, is_moe)
         is_moe = self.moe is not None
         return ("attn", is_moe)
@@ -191,7 +189,8 @@ class MeshConfig:
 
     @property
     def axis_names(self) -> Tuple[str, ...]:
-        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+        return (("pod", "data", "model") if self.multi_pod
+                else ("data", "model"))
 
     @property
     def num_devices(self) -> int:
@@ -246,7 +245,8 @@ def register_arch(cfg: ArchConfig, smoke: ArchConfig) -> ArchConfig:
 def get_arch(name: str) -> ArchConfig:
     _ensure_configs_loaded()
     if name not in ARCH_REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_REGISTRY)}")
+        raise KeyError(
+            f"unknown arch {name!r}; known: {sorted(ARCH_REGISTRY)}")
     return ARCH_REGISTRY[name]
 
 
@@ -267,7 +267,7 @@ def get_shape(name: str) -> ShapeConfig:
 
 
 def all_cells() -> List[Tuple[str, str]]:
-    """All (arch, shape) cells, including inapplicable ones (caller filters)."""
+    """All (arch, shape) cells, incl. inapplicable (caller filters)."""
     _ensure_configs_loaded()
     return [(a, s) for a in list_archs() for s in SHAPES]
 
@@ -291,7 +291,7 @@ def _ensure_configs_loaded() -> None:
     if _configs_loaded:
         return
     _configs_loaded = True
-    from repro import configs as _configs  # noqa: F401  (side-effect registration)
+    from repro import configs as _configs  # noqa: F401  (registration)
 
 
 def override(cfg, **kw):

@@ -17,7 +17,6 @@ from __future__ import annotations
 
 from typing import NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
 
 # Paper defaults (Algorithm 1 lines 1–20)

@@ -45,7 +45,7 @@ def route_rr_per_request(rs: RRState, proxy: jnp.ndarray,
     upper bound on *counts*)."""
     P = rs.rr_count.shape[0]
     oh = (proxy[:, None] == jnp.arange(P)[None, :]) & mask[:, None]  # (R,P)
-    prior = jnp.cumsum(oh, axis=0) - oh            # same-proxy requests before r
+    prior = jnp.cumsum(oh, axis=0) - oh   # same-proxy requests before r
     rank = jnp.sum(prior * oh, axis=1)             # (R,)
     base = rs.rr_phase[proxy] + rs.rr_count[proxy]
     assign = ((base + rank) % m).astype(jnp.int32)

@@ -10,12 +10,13 @@ New code should import from the policy modules directly.
 """
 from __future__ import annotations
 
-from repro.core.policies.base import (RouteStats, sample_candidates,  # noqa: F401
-                                      steering_dv)
+from repro.core.policies.base import (RouteStats,  # noqa: F401
+                                      sample_candidates, steering_dv)
 from repro.core.policies.bounded_load import route_bounded_load  # noqa: F401
 from repro.core.policies.jsq import route_jsq  # noqa: F401
-from repro.core.policies.midas import (MidasState, MidasTickStats,  # noqa: F401
-                                       init_midas, route_midas)
+from repro.core.policies.midas import (MidasState,  # noqa: F401
+                                       MidasTickStats, init_midas,
+                                       route_midas)
 from repro.core.policies.power_of_d import route_power_of_d  # noqa: F401
 from repro.core.policies.round_robin import (RRState, init_rr,  # noqa: F401
                                              route_round_robin,

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -310,12 +310,15 @@ _SWEEP_TRACES = [0]
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_scan_sweep(cfg: SimConfig, states: SimState, keys, mask, is_write):
+    """Batched scan: ``states`` and the workload grids both carry a leading
+    batch axis (seed × workload combos flattened)."""
     _SWEEP_TRACES[0] += 1
     ring = hashring.make_ring(cfg.m, cfg.V)
     step = functools.partial(_tick, cfg, ring, policy_lib.get(cfg.policy),
                              _middlewares(cfg))
     return jax.vmap(
-        lambda st: jax.lax.scan(step, st, (keys, mask, is_write)))(states)
+        lambda st, k, mk, w: jax.lax.scan(step, st, (k, mk, w)))(
+        states, keys, mask, is_write)
 
 
 def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
@@ -387,37 +390,72 @@ def simulate(cfg: SimConfig, wl: Workload,
     return _to_result(cfg, outs, _final_cache(cfg, final))
 
 
-def simulate_sweep(cfg: SimConfig, wl: Workload,
+# per-seed rows for one (policy, workload) combo
+SweepRows = Tuple[SimResult, ...]
+
+
+def simulate_sweep(cfg: SimConfig, wl: Union[Workload, Sequence[Workload]],
                    policies: Optional[Tuple[str, ...]] = None,
                    seeds: Tuple[int, ...] = (0,),
                    do_warmup: bool = True,
-                   ) -> Dict[str, Tuple[SimResult, ...]]:
-    """Batched simulation: ``jax.vmap`` over seeds, fan-out over policies.
+                   ) -> Union[Dict[str, SweepRows],
+                              Dict[str, Dict[str, SweepRows]]]:
+    """Batched simulation: fan-out over ``policies × workloads × seeds``.
 
-    For each policy the scan is traced and compiled exactly once regardless
-    of how many seeds are swept (per-seed ``simulate`` calls would each
-    retrace, since ``cfg.seed`` is static).  Returns
-    ``{policy: (SimResult per seed, ...)}``; per-seed results match
-    individual ``simulate`` runs.
+    ``wl`` is a single :class:`Workload` or a sequence of them (same grid
+    shape, e.g. built under one set of ``make_workload`` params).  For each
+    policy the scan is traced and compiled exactly once: seeds *and*
+    workload grids are batched onto a leading ``vmap`` axis — the grids
+    ride along as scan inputs, so sweeping the whole scenario registry
+    costs one compile per policy (per-seed/per-workload ``simulate`` calls
+    would each retrace, since ``cfg.seed`` is static).
+
+    Returns ``{policy: (SimResult per seed, ...)}`` for a single workload
+    (the legacy shape) and ``{policy: {workload_name: (SimResult per seed,
+    ...)}}`` for a sequence; per-combo results match individual
+    ``simulate`` runs.
     """
+    single = isinstance(wl, Workload)
+    wls: Tuple[Workload, ...] = (wl,) if single else tuple(wl)
+    if not wls:
+        raise ValueError("simulate_sweep needs at least one workload")
+    shapes = {w.keys.shape for w in wls}
+    if len(shapes) > 1:
+        raise ValueError(f"simulate_sweep workloads must share one grid "
+                         f"shape; got {sorted(shapes)}")
+    wl_names = [w.name for w in wls]
+    if len(set(wl_names)) != len(wl_names):
+        raise ValueError(f"simulate_sweep workload names must be unique; "
+                         f"got {wl_names}")
     names = tuple(policies) if policies is not None else (cfg.policy,)
     seeds = tuple(seeds)
     if not seeds:
         raise ValueError("simulate_sweep needs at least one seed")
-    results: Dict[str, Tuple[SimResult, ...]] = {}
+    S, W = len(seeds), len(wls)
+    # grids batched workload-major: combo b = i_wl * S + i_seed
+    keys = jnp.repeat(jnp.stack([w.keys for w in wls]), S, axis=0)
+    mask = jnp.repeat(jnp.stack([w.mask for w in wls]), S, axis=0)
+    is_write = jnp.repeat(jnp.stack([w.is_write for w in wls]), S, axis=0)
+    results: Dict[str, dict] = {}
     for name in names:
         pcfg = dataclasses.replace(cfg, policy=name)
         b_tgt, p99_tgt = _targets(pcfg, do_warmup)
         per_seed = [init_state(dataclasses.replace(pcfg, seed=s),
                                b_tgt, p99_tgt) for s in seeds]
-        states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_seed)
-        final, outs = _run_scan_sweep(pcfg, states, wl.keys, wl.mask,
-                                      wl.is_write)
-        rows = []
-        for i, s in enumerate(seeds):
-            outs_i = jax.tree_util.tree_map(lambda x: x[i], outs)
-            final_i = jax.tree_util.tree_map(lambda x: x[i], final)
-            rows.append(_to_result(dataclasses.replace(pcfg, seed=s), outs_i,
-                                   _final_cache(pcfg, final_i)))
-        results[name] = tuple(rows)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *per_seed)
+        states = jax.tree_util.tree_map(
+            lambda x: jnp.tile(x, (W,) + (1,) * (x.ndim - 1)), stacked)
+        final, outs = _run_scan_sweep(pcfg, states, keys, mask, is_write)
+        per_wl: Dict[str, Tuple[SimResult, ...]] = {}
+        for j, w in enumerate(wls):
+            rows = []
+            for i, s in enumerate(seeds):
+                b = j * S + i
+                outs_b = jax.tree_util.tree_map(lambda x: x[b], outs)
+                final_b = jax.tree_util.tree_map(lambda x: x[b], final)
+                rows.append(_to_result(dataclasses.replace(pcfg, seed=s),
+                                       outs_b, _final_cache(pcfg, final_b)))
+            per_wl[w.name] = tuple(rows)
+        results[name] = per_wl[wls[0].name] if single else per_wl
     return results

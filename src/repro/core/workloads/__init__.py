@@ -1,0 +1,65 @@
+"""Pluggable workload registry + combinators for the MIDAS evaluation.
+
+This package mirrors the policy registry (``repro.core.policies``) on the
+traffic side: generators register with ``@workloads.register("name")``,
+``make_workload(name, ...)`` resolves through the registry, and unknown
+names raise a ``ValueError`` listing every alternative.  The modules:
+
+``base``         Workload grid, WorkloadSpec protocol, params, registry
+``fig2``         the paper's seven Fig. 2 generators (legacy built-ins)
+``combinators``  mix / concat / scale_rate / shift_hotset on realized grids
+``scenarios``    job_startup, rename_storm, flash_crowd, multi_tenant
+``trace``        trace replay from recorded (t_ms, key, is_write) ``.npz``
+
+See ``base``'s docstring for a complete third-party registration (~10
+lines) and DESIGN.md §7 for the architecture.
+"""
+
+from repro.core.workloads.base import (
+    Workload,
+    WorkloadParams,
+    WorkloadSpec,
+    assemble,
+    available,
+    get_class,
+    hot_subset_keys,
+    make_workload,
+    register,
+    sample_keys,
+    unregister,
+    zipf_cdf,
+)
+from repro.core.workloads.combinators import (
+    concat,
+    mix,
+    scale_rate,
+    shift_hotset,
+)
+
+# Built-in generators and scenarios self-register on import.
+from repro.core.workloads.fig2 import WORKLOADS
+from repro.core.workloads.scenarios import SCENARIOS
+from repro.core.workloads.trace import load_trace, rebucket
+
+__all__ = [
+    "SCENARIOS",
+    "WORKLOADS",
+    "Workload",
+    "WorkloadParams",
+    "WorkloadSpec",
+    "assemble",
+    "available",
+    "concat",
+    "get_class",
+    "hot_subset_keys",
+    "load_trace",
+    "make_workload",
+    "mix",
+    "rebucket",
+    "register",
+    "sample_keys",
+    "scale_rate",
+    "shift_hotset",
+    "unregister",
+    "zipf_cdf",
+]

@@ -1,0 +1,271 @@
+"""Workload spec protocol, build parameters, and the workload registry.
+
+A *workload* is the traffic side of the MIDAS evaluation: a ``(T, R)`` grid
+of request keys with a validity mask and a write flag.  Keys index a
+namespace of ``N`` objects (directories/inodes); the key→server map comes
+from the consistent-hash ring, so key skew creates server hotspots exactly
+as in the paper's motivation (job start-ups / checkpoint storms hammer few
+directories).
+
+Workloads are self-contained specs that register themselves by name —
+mirroring the policy registry (``repro.core.policies``) — and the engine
+resolves names through :func:`make_workload`; there is no workload-name
+branching anywhere else.  A complete registration looks like this:
+
+    import jax.numpy as jnp
+    from repro.core import workloads
+
+    @workloads.register("half_capacity")
+    class HalfCapacity(workloads.WorkloadSpec):
+        '''Steady uniform traffic at 50% of aggregate service capacity.'''
+
+        def build(self, p):
+            rate = jnp.full((p.T,), 0.5 * p.cap)
+            return workloads.assemble(
+                p.rng, rate, p.R, p.N, 0.0, p.write_frac, "half_capacity"
+            )
+
+    # make_workload("half_capacity", T=..., m=...) now works everywhere:
+    # simulate(), simulate_sweep(), every benchmark and example.
+
+Rates are expressed as a fraction of aggregate service capacity
+``cap = m * dt_ms / service_ms`` requests per tick.  ``available()`` lists
+everything registered; unknown names raise a ``ValueError`` naming the
+alternatives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+
+class Workload(NamedTuple):
+    """A realized traffic grid; what ``simulate`` consumes."""
+
+    keys: jnp.ndarray      # (T, R) int32 in [0, N)
+    mask: jnp.ndarray      # (T, R) bool
+    is_write: jnp.ndarray  # (T, R) bool (metadata-mutating ops)
+    name: str
+    N: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadParams:
+    """Grid shape + capacity context handed to ``WorkloadSpec.build``.
+
+    ``R`` is always concrete here (``make_workload`` resolves the default),
+    so every workload built under the same params shares the grid width —
+    the invariant the combinators and the sweep batcher rely on.
+    """
+
+    T: int
+    m: int
+    seed: int = 0
+    dt_ms: float = 50.0
+    service_ms: float = 100.0
+    N: int = 4096
+    R: int = 0
+    write_frac: float = 0.05
+
+    @property
+    def cap(self) -> float:
+        """Aggregate service capacity in requests per tick."""
+        return self.m * self.dt_ms / self.service_ms
+
+    @property
+    def sec(self) -> jnp.ndarray:
+        """(T,) wall-clock seconds at each tick."""
+        return jnp.arange(self.T, dtype=jnp.float32) * self.dt_ms / 1000.0
+
+    @property
+    def rng(self) -> jnp.ndarray:
+        return jax.random.PRNGKey(self.seed)
+
+    def make(self, name: str, **overrides) -> Workload:
+        """Build another registered workload under these params — the
+        composition hook scenarios use.  ``R`` is passed through explicitly
+        so component grids always align."""
+        kw: Dict[str, Any] = dict(
+            T=self.T,
+            m=self.m,
+            seed=self.seed,
+            dt_ms=self.dt_ms,
+            service_ms=self.service_ms,
+            N=self.N,
+            R=self.R,
+            write_frac=self.write_frac,
+        )
+        kw.update(overrides)
+        return make_workload(name, **kw)
+
+
+class WorkloadSpec:
+    """Base class for registered workload generators.
+
+    Subclasses implement :meth:`build`, producing the ``(T, R)`` grid from a
+    :class:`WorkloadParams`.  Extra keyword arguments passed to
+    ``make_workload`` are forwarded to the spec's constructor (see the
+    trace-replay spec for an example that takes a ``trace`` path).
+    """
+
+    name: str = "?"
+
+    def build(self, p: WorkloadParams) -> Workload:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[WorkloadSpec]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("my_workload")`` adds a WorkloadSpec
+    subclass to the registry under ``name``."""
+
+    def deco(cls: Type[WorkloadSpec]) -> Type[WorkloadSpec]:
+        prev = _REGISTRY.get(name)
+        if prev is not None and prev is not cls:
+            raise ValueError(
+                f"workload {name!r} already registered "
+                f"({prev.__module__}.{prev.__qualname__})"
+            )
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def unregister(name: str) -> None:
+    """Remove a registered workload (intended for tests/plugins)."""
+    _REGISTRY.pop(name, None)
+
+
+def available() -> Tuple[str, ...]:
+    """Sorted names of every registered workload."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_class(name: str) -> Type[WorkloadSpec]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r}; available: "
+            f"{', '.join(available())}"
+        ) from None
+
+
+def make_workload(
+    name: str,
+    *,
+    T: int,
+    m: int,
+    seed: int = 0,
+    dt_ms: float = 50.0,
+    service_ms: float = 100.0,
+    N: int = 4096,
+    R: int = 0,
+    write_frac: float = 0.05,
+    **spec_kw,
+) -> Workload:
+    """Resolve ``name`` through the registry and build its grid.
+
+    ``R`` defaults to ``4 * cap + 8`` slots per tick; extra keyword
+    arguments are forwarded to the spec's constructor.
+    """
+    cls = get_class(name)
+    cap = m * dt_ms / service_ms
+    p = WorkloadParams(
+        T=T,
+        m=m,
+        seed=seed,
+        dt_ms=dt_ms,
+        service_ms=service_ms,
+        N=N,
+        R=R or int(4 * cap) + 8,
+        write_frac=write_frac,
+    )
+    wl = cls(**spec_kw).build(p)
+    return wl._replace(name=name)
+
+
+# ---------------------------------------------------------------------------
+# Shared samplers (used by the built-in generators and scenarios)
+# ---------------------------------------------------------------------------
+
+
+def zipf_cdf(N: int, alpha: float) -> jnp.ndarray:
+    ranks = jnp.arange(1, N + 1, dtype=jnp.float32)
+    w = ranks ** (-alpha)
+    return jnp.cumsum(w) / jnp.sum(w)
+
+
+def sample_keys(key, shape, N: int, alpha: float, perm_salt: int = 3):
+    """Zipf(alpha) keys (alpha=0 → uniform), rank→id decorrelated by
+    hashing so hot keys land on "random" servers."""
+    if alpha <= 0.0:
+        return jax.random.randint(key, shape, 0, N, dtype=jnp.int32)
+    cdf = zipf_cdf(N, alpha)
+    u = jax.random.uniform(key, shape)
+    ranks = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    from repro.core.hashring import hash2
+
+    hashed = hash2(ranks.astype(jnp.uint32), jnp.uint32(perm_salt))
+    return (hashed % jnp.uint32(N)).astype(jnp.int32)
+
+
+def hot_subset_keys(
+    key,
+    shape,
+    epoch_idx: jnp.ndarray,
+    N: int,
+    *,
+    subset: int,
+    alpha: float,
+    salt: int,
+) -> jnp.ndarray:
+    """Zipf(alpha) keys over a small hot subset that rotates per epoch
+    (each burst/storm is a different job hitting different directories)."""
+    from repro.core.hashring import hash2
+
+    cdf = zipf_cdf(subset, alpha)
+    u = jax.random.uniform(key, shape)
+    ranks = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    epochs = epoch_idx[:, None].astype(jnp.uint32)
+    mixed = hash2(
+        ranks.astype(jnp.uint32) + jnp.uint32(subset) * epochs,
+        jnp.uint32(salt),
+    )
+    return (mixed % jnp.uint32(N)).astype(jnp.int32)
+
+
+def assemble(
+    key,
+    rate_per_tick: jnp.ndarray,
+    R: int,
+    N: int,
+    alpha: float,
+    write_frac: float,
+    name: str,
+    hot_subset: int = 0,
+) -> Workload:
+    """Poisson arrivals at rate_per_tick; keys zipf(alpha) (optionally over
+    a hot subset of the namespace, modeling one hot directory)."""
+    T = rate_per_tick.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    counts = jax.random.poisson(k1, rate_per_tick).astype(jnp.int32)
+    counts = jnp.minimum(counts, R)
+    mask = jnp.arange(R)[None, :] < counts[:, None]
+    keys = sample_keys(k2, (T, R), hot_subset or N, alpha)
+    is_write = jax.random.uniform(k3, (T, R)) < write_frac
+    return Workload(
+        keys=keys, mask=mask, is_write=is_write & mask, name=name, N=N
+    )

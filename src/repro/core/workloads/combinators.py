@@ -1,0 +1,122 @@
+"""Workload combinators: compose realized grids into new scenarios.
+
+Combinators are pure functions on :class:`Workload` grids, so anything —
+built-ins, trace replays, third-party registrations — composes with
+anything else.  All binary combinators require matching slot width ``R``
+and namespace size ``N`` (``make_workload``/``WorkloadParams.make`` hand
+every component the same ``R``, so this holds by construction).
+
+Conservation contracts (exercised by ``tests/test_workloads.py``):
+
+* ``concat`` — request counts add; time axes stack.
+* ``mix`` — the Bernoulli selection partitions slots, so
+  ``mix(a, b, p, seed=s)`` and ``mix(b, a, p, seed=s)`` together carry
+  exactly the requests of ``a`` plus ``b``.
+* ``scale_rate`` — ``factor=1`` is the identity on counts; thinning
+  (``factor<1``) only removes; boosting (``factor>1``) replicates the
+  tick's own keys, capped at ``R``.
+* ``shift_hotset`` — mask and write flags are untouched; only keys move.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workloads.base import Workload
+
+
+def _check_compatible(w1: Workload, w2: Workload, op: str) -> None:
+    if w1.keys.shape[1] != w2.keys.shape[1]:
+        raise ValueError(
+            f"{op}: slot widths differ "
+            f"({w1.keys.shape[1]} vs {w2.keys.shape[1]})"
+        )
+    if w1.N != w2.N:
+        raise ValueError(
+            f"{op}: namespace sizes differ ({w1.N} vs {w2.N})"
+        )
+
+
+def mix(w1: Workload, w2: Workload, p: float, *, seed: int = 0) -> Workload:
+    """Per-slot Bernoulli blend: each (tick, slot) cell comes from ``w2``
+    with probability ``p``, else from ``w1`` (keys, mask, and write flag
+    move together).  Models independent tenants sharing one proxy tier.
+    """
+    _check_compatible(w1, w2, "mix")
+    if w1.keys.shape != w2.keys.shape:
+        raise ValueError(
+            f"mix: grid shapes differ ({w1.keys.shape} vs {w2.keys.shape})"
+        )
+    sel = jax.random.uniform(jax.random.PRNGKey(seed), w1.mask.shape) < p
+    return Workload(
+        keys=jnp.where(sel, w2.keys, w1.keys),
+        mask=jnp.where(sel, w2.mask, w1.mask),
+        is_write=jnp.where(sel, w2.is_write, w1.is_write),
+        name=f"mix({w1.name},{w2.name},{p:g})",
+        N=w1.N,
+    )
+
+
+def concat(w1: Workload, w2: Workload) -> Workload:
+    """Play ``w1`` then ``w2``: time axes stack, counts add."""
+    _check_compatible(w1, w2, "concat")
+    return Workload(
+        keys=jnp.concatenate([w1.keys, w2.keys], axis=0),
+        mask=jnp.concatenate([w1.mask, w2.mask], axis=0),
+        is_write=jnp.concatenate([w1.is_write, w2.is_write], axis=0),
+        name=f"concat({w1.name},{w2.name})",
+        N=w1.N,
+    )
+
+
+def scale_rate(w: Workload, factor: float, *, seed: int = 0) -> Workload:
+    """Thin (``factor<1``) or boost (``factor>1``) the request rate.
+
+    Thinning keeps each request independently with probability ``factor``.
+    Boosting replicates the tick's own requests (cyclically, preserving the
+    tick's key distribution) into free slots, capped at the grid width —
+    per-tick counts become ``min(round(count * factor), R)``.
+    """
+    if factor < 0:
+        raise ValueError(f"scale_rate: factor must be >= 0, got {factor}")
+    if factor == 1.0:
+        return w._replace(name=f"scale_rate({w.name},1)")
+    T, R = w.mask.shape
+    if factor < 1.0:
+        u = jax.random.uniform(jax.random.PRNGKey(seed), w.mask.shape)
+        mask = w.mask & (u < factor)
+        return Workload(
+            keys=w.keys,
+            mask=mask,
+            is_write=w.is_write & mask,
+            name=f"scale_rate({w.name},{factor:g})",
+            N=w.N,
+        )
+    # boost: compact valid slots to a prefix, then replicate cyclically
+    order = jnp.argsort(~w.mask, axis=1, stable=True)  # valid slots first
+    keys = jnp.take_along_axis(w.keys, order, axis=1)
+    is_write = jnp.take_along_axis(w.is_write, order, axis=1)
+    counts = w.mask.sum(axis=1)
+    target = jnp.minimum(jnp.round(counts * factor), R).astype(jnp.int32)
+    slot = jnp.arange(R)[None, :]
+    src = slot % jnp.maximum(counts, 1)[:, None]
+    mask = slot < target[:, None]
+    return Workload(
+        keys=jnp.take_along_axis(keys, src, axis=1),
+        mask=mask,
+        is_write=jnp.take_along_axis(is_write, src, axis=1) & mask,
+        name=f"scale_rate({w.name},{factor:g})",
+        N=w.N,
+    )
+
+
+def shift_hotset(w: Workload, offset: int) -> Workload:
+    """Translate every key by ``offset`` (mod N): the same traffic shape
+    aimed at a different namespace region, so two tenants' hotspots land on
+    different servers."""
+    keys = jnp.mod(w.keys + jnp.int32(offset), jnp.int32(w.N))
+    return w._replace(
+        keys=keys.astype(jnp.int32),
+        name=f"shift_hotset({w.name},{offset})",
+    )

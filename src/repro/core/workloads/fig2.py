@@ -1,0 +1,141 @@
+"""The paper's Fig. 2 traffic patterns — the seven legacy generators.
+
+Ported unchanged from the original closed-tuple ``workloads.py``; each is
+now a registered :class:`~repro.core.workloads.base.WorkloadSpec` so the
+scenario combinators (and third-party registrations) compose with them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.workloads.base import (
+    Workload,
+    WorkloadParams,
+    WorkloadSpec,
+    assemble,
+    hot_subset_keys,
+    register,
+)
+
+#: The legacy closed tuple, kept for backward compatibility; the live list
+#: is ``workloads.available()``.
+WORKLOADS = (
+    "light",
+    "uniform_heavy",
+    "bursty",
+    "periodic",
+    "diurnal",
+    "skewed",
+    "storm",
+)
+
+
+@register("light")
+class Light(WorkloadSpec):
+    """Steady 40% utilization, uniform keys (the §III-B warmup regime)."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        rate = jnp.full((p.T,), 0.40 * p.cap)
+        return assemble(p.rng, rate, p.R, p.N, 0.0, p.write_frac, "light")
+
+
+@register("uniform_heavy")
+class UniformHeavy(WorkloadSpec):
+    """Steady 85% utilization, uniform keys — headroom stress, no skew."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        rate = jnp.full((p.T,), 0.85 * p.cap)
+        return assemble(
+            p.rng, rate, p.R, p.N, 0.0, p.write_frac, "uniform_heavy"
+        )
+
+
+@register("bursty")
+class Bursty(WorkloadSpec):
+    """Background 30% + job-startup bursts: every ~20 s, 2 s at 3x
+    capacity, keys concentrated on a small hot directory set.  Each burst
+    is a *different* job => different hot directories."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        k1, k2, k3 = jax.random.split(p.rng, 3)
+        base = jnp.full((p.T,), 0.30 * p.cap)
+        period_s, dur_s = 20.0, 2.0
+        phase = jax.random.uniform(k3, ()) * period_s
+        in_burst = ((p.sec + phase) % period_s) < dur_s
+        burst_idx = ((p.sec + phase) // period_s).astype(jnp.int32)
+        rate = base + jnp.where(in_burst, 3.0 * p.cap, 0.0)
+        wl = assemble(k1, rate, p.R, p.N, 0.0, p.write_frac, "bursty")
+        hot = hot_subset_keys(
+            k2,
+            wl.keys.shape,
+            burst_idx,
+            p.N,
+            subset=32,
+            alpha=1.1,
+            salt=11,
+        )
+        keys = jnp.where(in_burst[:, None], hot, wl.keys)
+        return wl._replace(keys=keys)
+
+
+@register("periodic")
+class Periodic(WorkloadSpec):
+    """Sinusoid peaking slightly above capacity (checkpoint cadence)."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        rate = p.cap * jnp.clip(
+            0.55 + 0.55 * jnp.sin(2 * jnp.pi * p.sec / 30.0), 0.0, None
+        )
+        return assemble(p.rng, rate, p.R, p.N, 0.6, p.write_frac, "periodic")
+
+
+@register("diurnal")
+class Diurnal(WorkloadSpec):
+    """Slow horizon-long swell with a faster ripple on top."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        sec = p.sec
+        horizon = jnp.maximum(sec[-1], 1.0)
+        rate = p.cap * jnp.clip(
+            0.5
+            + 0.45 * jnp.sin(2 * jnp.pi * sec / horizon)
+            + 0.08 * jnp.sin(2 * jnp.pi * sec / 13.0),
+            0.0,
+            None,
+        )
+        return assemble(p.rng, rate, p.R, p.N, 0.5, p.write_frac, "diurnal")
+
+
+@register("skewed")
+class Skewed(WorkloadSpec):
+    """Steady 70% utilization under zipf(0.9) key popularity."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        rate = jnp.full((p.T,), 0.70 * p.cap)
+        return assemble(p.rng, rate, p.R, p.N, 0.9, p.write_frac, "skewed")
+
+
+@register("storm")
+class Storm(WorkloadSpec):
+    """Checkpoint storm: near-idle then all ranks write at once (5 s);
+    each storm targets that job's checkpoint directories."""
+
+    def build(self, p: WorkloadParams) -> Workload:
+        k1, k2 = jax.random.split(p.rng)
+        storm = (p.sec % 60.0) < 5.0
+        storm_idx = (p.sec // 60.0).astype(jnp.int32)
+        rate = jnp.where(storm, 4.0 * p.cap, 0.05 * p.cap)
+        wl = assemble(k1, rate, p.R, p.N, 0.0, 0.5, "storm")
+        hot = hot_subset_keys(
+            k2,
+            wl.keys.shape,
+            storm_idx,
+            p.N,
+            subset=16,
+            alpha=1.0,
+            salt=17,
+        )
+        keys = jnp.where(storm[:, None], hot, wl.keys)
+        return wl._replace(keys=keys)

@@ -6,7 +6,7 @@ epoch.  We reuse the paper's policy one more time: hosts are servers,
 shards are requests keyed by shard id, load = assigned bytes."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import List, Sequence
 
 import numpy as np
 

@@ -15,7 +15,6 @@ from typing import Dict, List, Optional, Set
 
 import numpy as np
 
-from repro.core import control as ctl
 
 
 @dataclasses.dataclass

@@ -13,7 +13,6 @@ as the same algorithm in pure jnp.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,8 @@ mesh) cell, prove it fits (memory_analysis) and extract roofline terms
 (cost_analysis + collective bytes parsed from the partitioned HLO).
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
 """
 import argparse   # noqa: E402
@@ -22,8 +23,8 @@ import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.config import (MeshConfig, RunConfig, get_arch, get_shape,  # noqa: E402
-                          applicable_cells)
+from repro.config import (MeshConfig, RunConfig,  # noqa: E402
+                          applicable_cells, get_arch, get_shape)
 from repro.launch import specs as S  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.sharding import rules as R  # noqa: E402
@@ -302,7 +303,6 @@ def model_memory_bytes(arch: str, shape_name: str, mesh_cfg: MeshConfig,
     both numbers are reported."""
     cfg = get_arch(arch)
     shape = get_shape(shape_name)
-    mesh = (2, 16, 16) if mesh_cfg.multi_pod else (16, 16)
     tp = 16
     dp = mesh_cfg.num_devices // tp
     N = cfg.n_params()

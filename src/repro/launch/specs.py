@@ -2,13 +2,13 @@
 weak-type-correct, shardable, no device allocation."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro import models
-from repro.config import ArchConfig, RunConfig, ShapeConfig, get_arch, get_shape
+from repro.config import ArchConfig, RunConfig, ShapeConfig
 from repro.sharding.rules import Rules
 
 
@@ -96,5 +96,6 @@ def train_state_pspec(cfg: ArchConfig, run: RunConfig, rules: Rules,
     return TrainState(
         params=p_spec,
         opt=opt.AdamState(m=m, v=v, m_scale=ms, v_scale=vs),
-        moe_state=jax.tree_util.tree_map(lambda _: P(), state_shapes.moe_state),
+        moe_state=jax.tree_util.tree_map(lambda _: P(),
+                                         state_shapes.moe_state),
         step=P())

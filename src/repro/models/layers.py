@@ -7,7 +7,6 @@ path — so sharding specs can never drift from the real parameter tree.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -1,7 +1,7 @@
 """Mamba-1 block (selective SSM) for falcon-mamba and Jamba hybrid layers."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

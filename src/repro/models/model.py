@@ -14,9 +14,8 @@ MIDAS stale-telemetry loop — threaded as explicit state.
 """
 from __future__ import annotations
 
-import functools
 import os
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +25,6 @@ from repro.models import layers as L
 from repro.models import mamba as mamba_lib
 from repro.models import moe as moe_lib
 from repro.models import stubs
-from repro.sharding.rules import shard
 
 
 class LayerSpec(NamedTuple):

@@ -98,7 +98,6 @@ def moe_apply_sharded(p, cfg: ArchConfig, x: jnp.ndarray,
     B, S, d = x.shape
     E, k, f = mo.num_experts, mo.experts_per_token, mo.d_ff_expert
     tp = mesh.shape["model"]
-    dp = mesh.size // tp
     E_loc = E // tp
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
 
@@ -199,8 +198,6 @@ def moe_apply_sharded(p, cfg: ArchConfig, x: jnp.ndarray,
                 MoEAux(load=load_out, drop_rate=drop, steer_rate=steer,
                        aux_loss=aux_l))
 
-    dp_spec = tuple(a for a in (("pod", "data") if "pod" in mesh.axis_names
-                                else ("data",)))
     from jax.sharding import PartitionSpec as P
     out_specs = (x_spec, MoEAux(load=P(), drop_rate=P(), steer_rate=P(),
                                 aux_loss=P()))

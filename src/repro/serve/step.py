@@ -1,10 +1,7 @@
 """Serving step functions (prefill + decode) for pjit."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro import models

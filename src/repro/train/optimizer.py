@@ -7,8 +7,7 @@ both), so per-device optimizer memory scales 1/(dp·tp).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ gradient accumulation is available for memory-bound cells.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -6,10 +6,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.config import ArchConfig, RunConfig

@@ -1,0 +1,26 @@
+"""Regenerate synthetic_trace.npz — the checked-in trace-replay fixture.
+
+The events come from ``repro.core.workloads.trace.synthetic_events`` (the
+library's in-code fallback when this file is absent), so the fixture and
+the fallback can never drift.
+
+  PYTHONPATH=src python tests/data/gen_synthetic_trace.py
+"""
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.workloads.trace import synthetic_events
+
+OUT = Path(__file__).resolve().parent / "synthetic_trace.npz"
+
+
+def main() -> None:
+    t_ms, key, is_write = synthetic_events()
+    np.savez_compressed(OUT, t_ms=t_ms, key=key, is_write=is_write)
+    print(f"wrote {OUT} ({t_ms.size} events, "
+          f"{t_ms.max() / 1000.0:.1f} s span)")
+
+
+if __name__ == "__main__":
+    main()

@@ -110,7 +110,6 @@ def test_decode_matches_prefill(arch):
 
 def test_full_configs_param_counts():
     """Full (non-smoke) configs instantiate abstractly with expected sizes."""
-    from repro.utils import tree_bytes
     expected = {
         "dbrx-132b": 131.6e9, "qwen3-moe-235b-a22b": 235.1e9,
         "falcon-mamba-7b": 7.27e9, "smollm-360m": 0.36e9,

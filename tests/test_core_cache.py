@@ -51,7 +51,6 @@ def test_entry_never_served_past_expiry():
 def test_ttl_per_key_hot_keys_get_short_ttls():
     c = cache_lib.init_cache(16)
     now = 0.0
-    hot = jnp.asarray([1], jnp.int32)
     # hammer key 1 with writes every 10 ms -> high hazard
     for i in range(20):
         keys, mask, _ = _req([1])

@@ -90,7 +90,9 @@ def test_lyapunov_negative_iff_margin_at_least_two():
     """Δ_L >= 2  =>  ΔV <= -2 < 0 (paper's stability condition)."""
     L = jnp.asarray([10.0, 8.0, 7.5, 3.0])
     # margin exactly 2: p=0 (10), j with L=8
-    assert float(ctl.lyapunov_delta_v(L, jnp.asarray(0), jnp.asarray(1))) == -2.0
+    dv = float(ctl.lyapunov_delta_v(L, jnp.asarray(0), jnp.asarray(1)))
+    assert dv == -2.0
     # margin 1 is NOT enough (ΔV = 0)
     L2 = jnp.asarray([10.0, 9.0])
-    assert float(ctl.lyapunov_delta_v(L2, jnp.asarray(0), jnp.asarray(1))) == 0.0
+    dv2 = float(ctl.lyapunov_delta_v(L2, jnp.asarray(0), jnp.asarray(1)))
+    assert dv2 == 0.0

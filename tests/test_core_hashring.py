@@ -1,7 +1,6 @@
 """Consistent-hash ring: determinism, feasibility, stability."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import hashring
 

@@ -1,5 +1,4 @@
 """End-to-end simulator behaviour: the paper's §VI claims, directionally."""
-import dataclasses
 
 import numpy as np
 import pytest

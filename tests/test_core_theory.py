@@ -1,7 +1,6 @@
 """§V theory: balls-into-bins max-load and M/M/1 latency."""
 import math
 
-import numpy as np
 import pytest
 
 from repro.core import theory

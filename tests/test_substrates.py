@@ -1,11 +1,7 @@
 """Substrate tests: checkpointing (atomic/restart/elastic), data pipeline
 determinism, failure detection, MIDAS writers/router/shard balancing."""
 import json
-import os
-import shutil
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
