@@ -22,7 +22,10 @@ def run() -> None:
          f"{res.delta_l_timeline.max():.0f}] (paper: d 1-4, dL 2-8)")
     emit("control/oscillation", 0.0,
          f"d_flips_per_min={flips / minutes:.1f}")
+    f = res.f_max_timeline
     emit("control/steering_cap", 0.0,
-         f"steered/eligible={steered / eligible:.3f} (cap f_max=0.10)")
+         f"steered/eligible={steered / eligible:.3f} "
+         f"(adaptive f_max in [{f.min():.2f},{f.max():.2f}], "
+         f"floor 0.10)")
     emit("control/pressure_p99", 0.0,
          f"{np.percentile(res.pressure, 99):.3f}")

@@ -1,0 +1,132 @@
+"""E9 — the fleet matrix: gossip delay × coherence mode × scenario.
+
+E8 found full MIDAS (cache + pinning) degrading under the write-hot
+``rename_storm`` while the converged-shared-table cache model makes the
+cause invisible: is the regression the *mutation rate* (entries die before
+reuse) or *propagation lag* (proxies serving entries other proxies already
+invalidated)?  E9 drops the converged-table assumption: the
+``fleet_cache`` stage runs ``P`` real proxies whose views lag gossip by
+``gossip_ms`` (see ``repro.core.fleet``), swept over delays × coherence
+modes × scenarios.  Scenarios ride one batched ``simulate_sweep`` per
+(delay, mode) cell — one compile per policy per cell.
+
+The decomposition per scenario/mode:
+  * mutation penalty = metric(Δ=0)   − metric(no cache)    (cache churn)
+  * lag penalty(Δ)   = metric(Δ)     − metric(Δ=0)         (coherence)
+plus the stale-serve rate each coherence mode actually pays once views can
+lag — lease mode's "staleness is zero by construction" only holds at Δ=0.
+
+Emits ``experiments/sim/fleet_matrix.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import SimConfig, make_workload, simulate_sweep
+
+T = 900            # 45 s at dt=50 ms — covers the storm cycles
+M = 8
+P = 8
+SEED = 0
+POLICY = "midas"
+GOSSIP_MS = (0.0, 100.0, 400.0)
+MODES = ("lease", "ttl_aggregate", "ttl_per_key")
+SCENARIOS = ("rename_storm", "job_startup", "flash_crowd", "skewed")
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
+
+
+def _row(r) -> dict:
+    fc = r.final_cache
+    out = {
+        "mean_queue": round(r.mean_queue(), 3),
+        "worst_case_queue": round(r.worst_case_queue(), 2),
+        "dispersion": round(r.dispersion(), 4),
+    }
+    if fc is None:
+        return out
+    hits, misses = int(fc.hits), int(fc.misses)
+    stale = int(fc.stale_serves)
+    hits_p = np.asarray(fc.hits_p, dtype=np.float64)
+    out.update({
+        "hits": hits,
+        "misses": misses,
+        "hit_rate": round(hits / max(hits + misses, 1), 4),
+        "stale_serves": stale,
+        "stale_rate": round(stale / max(hits, 1), 6),
+        "bypasses": int(fc.bypasses),
+        # telemetry divergence the shared table hides: per-proxy hit CV
+        "proxy_hit_cv": round(
+            float(hits_p.std() / max(hits_p.mean(), 1e-9)), 4),
+    })
+    return out
+
+
+def run() -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    wls = [make_workload(n, T=T, m=M, seed=SEED) for n in SCENARIOS]
+
+    # reference: MIDAS with no cache at all (mutation-penalty baseline).
+    # fleet_routing matches the cells so the decomposition isolates the
+    # cache — otherwise the routing-model switch would be misattributed
+    # to mutation churn; fixed control targets keep cells like-for-like
+    bare, us = timed(
+        simulate_sweep,
+        SimConfig(m=M, P=P, policy=POLICY, fleet_routing=True),
+        wls, policies=(POLICY,), seeds=(SEED,), do_warmup=False)
+    reference = {n: _row(bare[POLICY][n][0]) for n in SCENARIOS}
+    emit("fleet/reference_no_cache", us, f"scenarios={len(SCENARIOS)}")
+
+    cells: dict = {mode: {} for mode in MODES}
+    for mode in MODES:
+        for gossip in GOSSIP_MS:
+            cfg = SimConfig(m=M, P=P, policy=POLICY,
+                            middleware=("fleet_cache",), cache_mode=mode,
+                            gossip_ms=gossip, fleet_routing=True)
+            sweep, us = timed(simulate_sweep, cfg, wls,
+                              policies=(POLICY,), seeds=(SEED,),
+                              do_warmup=False)
+            cells[mode][str(gossip)] = {
+                n: _row(sweep[POLICY][n][0]) for n in SCENARIOS}
+            emit(f"fleet/{mode}/gossip_{gossip:g}ms", us,
+                 f"scenarios={len(SCENARIOS)}")
+
+    # decomposition: how much of each scenario's cache effect is mutation
+    # churn (already there at Δ=0) vs propagation lag (grows with Δ)
+    decomposition: dict = {}
+    for mode in MODES:
+        decomposition[mode] = {}
+        for n in SCENARIOS:
+            zero = cells[mode][str(GOSSIP_MS[0])][n]
+            decomposition[mode][n] = {
+                "mutation_penalty_mean_queue": round(
+                    zero["mean_queue"] - reference[n]["mean_queue"], 3),
+                "lag_penalty_mean_queue": {
+                    str(g): round(
+                        cells[mode][str(g)][n]["mean_queue"]
+                        - zero["mean_queue"], 3)
+                    for g in GOSSIP_MS[1:]},
+                "stale_rate_by_delay": {
+                    str(g): cells[mode][str(g)][n]["stale_rate"]
+                    for g in GOSSIP_MS},
+            }
+
+    doc = {
+        "T": T, "m": M, "P": P, "seed": SEED, "policy": POLICY,
+        "gossip_ms": list(GOSSIP_MS), "modes": list(MODES),
+        "scenarios": list(SCENARIOS),
+        "reference_no_cache": reference,
+        "cells": cells,
+        "decomposition": decomposition,
+    }
+    (OUT / "fleet_matrix.json").write_text(json.dumps(doc, indent=1))
+
+    for mode in MODES:
+        d = decomposition[mode]["rename_storm"]
+        lag = d["lag_penalty_mean_queue"]
+        emit(f"fleet/{mode}/rename_storm_decomposition", 0.0,
+             f"mutation={d['mutation_penalty_mean_queue']};"
+             f"lag={';'.join(f'{g}ms:{v}' for g, v in lag.items())}")

@@ -19,6 +19,7 @@ SECTIONS = {
     "moe": "benchmarks.moe_balance",           # E6
     "ckpt": "benchmarks.ckpt_storm",           # E7
     "scenario_matrix": "benchmarks.scenario_matrix",  # E8
+    "fleet": "benchmarks.fleet",               # E9 (gossip × coherence)
     "serving": "benchmarks.serving",
     "kernels": "benchmarks.kernels_bench",
     "ablations": "benchmarks.ablations",       # §IV-E stability guards

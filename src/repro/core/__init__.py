@@ -7,8 +7,9 @@
 # Routing policies live in the pluggable registry (repro.core.policies);
 # batch stages such as the cooperative cache compose via the middleware
 # pipeline (repro.core.middleware).  See DESIGN.md for the API.
-from repro.core import (cache, control, hashring, middleware,  # noqa: F401
-                        policies, routing, sim, telemetry, theory, workloads)
+from repro.core import (cache, control, fleet, hashring,  # noqa: F401
+                        middleware, policies, routing, sim, telemetry,
+                        theory, workloads)
 from repro.core.sim import (SimConfig, SimResult, simulate,  # noqa: F401
                             simulate_sweep)
 from repro.core.workloads import WORKLOADS, make_workload  # noqa: F401

@@ -21,10 +21,23 @@ Semantics (paper §IV-C):
                           write traffic, where the aggregate estimator
                           underestimates hot-key invalidation hazards.
 
-The proxy-side cooperative table is modeled per-namespace-key (the paper's
-space bound is O(m + C)); gossip makes entries visible to all proxies — we
-model the converged shared table directly.
+Write-pressure guard: when the write-mix signal (slow-loop EWMA or the
+live window once it has samples, see :func:`write_pressure`) exceeds
+``W_HIGH``, the cache stops *installing* new entries (serve-through)
+instead of merely shrinking TTLs — under mutation-dominated traffic
+(rename storms) installs are invalidated before they can be reused, so
+caching only adds staleness risk and churn.  Bypassed installs are
+counted in ``CacheState.bypasses``.
+
+This module holds the *converged shared table*: the state every proxy
+agrees on once gossip has propagated (the paper's space bound is
+O(m + C) per-namespace-key).  ``lookup_batch`` processes a tick against
+that table directly — the Δ=0 gossip limit.  The multi-proxy view, where
+announcements and invalidations take ``gossip_ms`` to travel, lives in
+:mod:`repro.core.fleet`, which reuses :func:`classify` /
+:func:`apply_batch` so the two models are bit-for-bit identical at Δ=0.
 """
+
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
@@ -36,23 +49,25 @@ GAMMA = 0.5
 W_HIGH = 0.3
 P_STAR = 1e-4
 TTL_CAP_MS = 60_000.0
+GUARD_MIN_EVENTS = 64.0
 MODES = ("lease", "ttl_aggregate", "ttl_per_key")
 
 
 class CacheState(NamedTuple):
-    expiry_ms: jnp.ndarray        # (N,) float32 absolute expiry time
-    cached_version: jnp.ndarray   # (N,) int32 version stored at insert
-    global_version: jnp.ndarray   # (N,) int32 authoritative version
-    last_write_ms: jnp.ndarray    # (N,) float32 last write time per key
-    key_hazard: jnp.ndarray       # (N,) float32 per-key ĥ (1/ms)
-    ttl_ms: jnp.ndarray           # () float32 aggregate adaptive TTL
-    hazard: jnp.ndarray           # () float32 aggregate ĥ
-    write_frac: jnp.ndarray       # () float32 EWMA of write mix W_c
-    win_writes: jnp.ndarray       # () float32 slow-window writes
-    win_reads: jnp.ndarray        # () float32 slow-window reads
-    hits: jnp.ndarray             # () int32
-    misses: jnp.ndarray           # () int32
-    stale_serves: jnp.ndarray     # () int32
+    expiry_ms: jnp.ndarray       # (N,) float32 absolute expiry time
+    cached_version: jnp.ndarray  # (N,) int32 version stored at insert
+    global_version: jnp.ndarray  # (N,) int32 authoritative version
+    last_write_ms: jnp.ndarray   # (N,) float32 last write time per key
+    key_hazard: jnp.ndarray      # (N,) float32 per-key ĥ (1/ms)
+    ttl_ms: jnp.ndarray          # () float32 aggregate adaptive TTL
+    hazard: jnp.ndarray          # () float32 aggregate ĥ
+    write_frac: jnp.ndarray      # () float32 EWMA of write mix W_c
+    win_writes: jnp.ndarray      # () float32 slow-window writes
+    win_reads: jnp.ndarray       # () float32 slow-window reads
+    hits: jnp.ndarray            # () int32
+    misses: jnp.ndarray          # () int32
+    stale_serves: jnp.ndarray    # () int32
+    bypasses: jnp.ndarray        # () int32 installs skipped by the guard
 
 
 def init_cache(N: int, ttl_init_ms: float = 100.0) -> CacheState:
@@ -66,52 +81,123 @@ def init_cache(N: int, ttl_init_ms: float = 100.0) -> CacheState:
         key_hazard=jnp.zeros((N,), jnp.float32),
         ttl_ms=jnp.asarray(ttl_init_ms, jnp.float32),
         hazard=jnp.asarray(1e-6, jnp.float32),
-        write_frac=zf, win_writes=zf, win_reads=zf,
-        hits=z32, misses=z32, stale_serves=z32)
+        write_frac=zf,
+        win_writes=zf,
+        win_reads=zf,
+        hits=z32,
+        misses=z32,
+        stale_serves=z32,
+        bypasses=z32,
+    )
 
 
-def lookup_batch(cache: CacheState, keys: jnp.ndarray, mask: jnp.ndarray,
-                 is_write: jnp.ndarray, now_ms: jnp.ndarray, *,
-                 mode: str = "lease", lease_ms: float = 5000.0,
-                 rtt_ms: float = 2.0, p_star: float = P_STAR,
-                 ) -> Tuple[CacheState, jnp.ndarray]:
-    """Process one tick of requests against the cooperative cache.
+def write_pressure(cache: CacheState) -> jnp.ndarray:
+    """Write-mix signal the install guard compares against ``W_HIGH``.
 
-    Reads hitting a valid entry are served at the proxy (no server load).
-    Writes always reach the server, bump the authoritative version and, in
-    lease mode, invalidate the proxy entry.  Returns
-    (new_cache, served_locally: (R,) bool).
+    The slow-loop EWMA (β=0.1 per T_slow window) carries hysteresis
+    across windows but needs minutes to cross W_HIGH; a rename storm is
+    over before it reacts.  So the guard also listens to the *live*
+    window's mix once it holds enough events to be meaningful —
+    whichever signal is higher wins.
+    """
+    n = cache.win_writes + cache.win_reads
+    wf_window = cache.win_writes / jnp.maximum(n, 1.0)
+    live = jnp.where(n >= GUARD_MIN_EVENTS, wf_window, 0.0)
+    return jnp.maximum(cache.write_frac, live)
+
+
+class BatchEffects(NamedTuple):
+    """Per-request effect vectors of one ``apply_batch`` tick — the
+    single source both models derive counters and gossip events from."""
+
+    inv_keys: jnp.ndarray  # (R,) invalidation-event keys (sentinel N)
+    ins_keys: jnp.ndarray  # (R,) install-event keys (sentinel N)
+    miss: jnp.ndarray      # (R,) bool valid read misses
+    bypassed: jnp.ndarray  # (R,) bool misses the guard served through
+
+
+def classify(
+    expiry_view: jnp.ndarray,
+    version_view: jnp.ndarray,
+    gv_view: jnp.ndarray,
+    mask: jnp.ndarray,
+    is_write: jnp.ndarray,
+    now_ms: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Classify one tick's requests against a *view* of the table.
+
+    ``expiry_view`` / ``version_view`` are the per-request (R,) entry
+    fields as the serving proxy sees them (the converged table in the
+    shared model; possibly gossip-lagged in the fleet model).  ``gv_view``
+    is the authoritative version — staleness is an omniscient metric, so
+    it is never lagged.  Returns ``(valid, hit, stale)`` bool vectors.
+    """
+    valid = mask & ~is_write
+    live = (expiry_view > now_ms) & (version_view >= 0)
+    hit = valid & live
+    stale = hit & (version_view < gv_view)
+    return valid, hit, stale
+
+
+def apply_batch(
+    cache: CacheState,
+    keys: jnp.ndarray,
+    mask: jnp.ndarray,
+    is_write: jnp.ndarray,
+    hit: jnp.ndarray,
+    stale: jnp.ndarray,
+    now_ms: jnp.ndarray,
+    *,
+    mode: str = "lease",
+    lease_ms: float = 5000.0,
+    rtt_ms: float = 2.0,
+    p_star: float = P_STAR,
+) -> Tuple[CacheState, BatchEffects]:
+    """Apply one tick's effects to the converged table, given hit flags.
+
+    Writes always reach the server: they bump the authoritative version,
+    feed the hazard estimators and, in lease mode, invalidate the entry.
+    Misses install an entry with the mode's validity horizon — unless the
+    write-pressure guard is active, in which case installs are bypassed
+    and counted.
+
+    Returns ``(new_cache, effects)``: the event-key vectors in
+    ``effects`` (sentinel ``N`` where no event) are the gossip payload
+    the fleet model propagates between proxies, and its flag vectors are
+    what per-proxy counters must be derived from so they always sum to
+    the aggregate counters updated here.
     """
     assert mode in MODES, mode
     N = cache.expiry_ms.shape[0]
     valid = mask & ~is_write
-    entry_live = ((cache.expiry_ms[keys] > now_ms)
-                  & (cache.cached_version[keys] >= 0))
-    hit = valid & entry_live
-    stale = hit & (cache.cached_version[keys] < cache.global_version[keys])
 
-    # --- writes: version bump + hazard update (+ lease invalidation) ------
+    # --- writes: version bump + hazard update (+ lease invalidation) -----
     # sentinel must be OOB (N): negative indices wrap in JAX; mode="drop"
     # only drops genuinely out-of-bounds scatters.
     w = is_write & mask
     wk = jnp.where(w, keys, N)
+    wk_safe = jnp.minimum(wk, N - 1)
     gv = cache.global_version.at[wk].add(1, mode="drop")
-    dt = jnp.maximum(now_ms - cache.last_write_ms[jnp.minimum(wk, N - 1)],
-                     1.0)
-    seen = cache.last_write_ms[jnp.minimum(wk, N - 1)] >= 0.0
-    upd = jnp.where(seen,
-                    (1.0 - BETA) * cache.key_hazard[jnp.minimum(wk, N - 1)]
-                    + BETA / dt,
-                    1.0 / jnp.maximum(dt, 1.0))
+    dt = jnp.maximum(now_ms - cache.last_write_ms[wk_safe], 1.0)
+    seen = cache.last_write_ms[wk_safe] >= 0.0
+    decayed = (1.0 - BETA) * cache.key_hazard[wk_safe] + BETA / dt
+    upd = jnp.where(seen, decayed, 1.0 / jnp.maximum(dt, 1.0))
     key_hazard = cache.key_hazard.at[wk].set(upd, mode="drop")
     last_write = cache.last_write_ms.at[wk].set(now_ms, mode="drop")
     expiry = cache.expiry_ms
     if mode == "lease":
-        expiry = expiry.at[wk].set(0.0, mode="drop")   # immediate invalidation
+        # immediate invalidation at the (converged) proxy table
+        expiry = expiry.at[wk].set(0.0, mode="drop")
+        inv_k = wk
+    else:
+        inv_k = jnp.full_like(wk, N)  # TTL modes: expiry-only, no events
 
-    # --- misses install the entry with the mode's validity horizon --------
+    # --- misses install the entry with the mode's validity horizon -------
+    # ... unless the write-pressure guard trips: serve-through, no install
     miss = valid & ~hit
-    mk = jnp.where(miss, keys, N)
+    bypass = write_pressure(cache) > W_HIGH
+    install = miss & ~bypass
+    mk = jnp.where(install, keys, N)
     mk_safe = jnp.minimum(mk, N - 1)
     if mode == "lease":
         ttl_k = jnp.full(keys.shape, lease_ms, jnp.float32)
@@ -119,41 +205,101 @@ def lookup_batch(cache: CacheState, keys: jnp.ndarray, mask: jnp.ndarray,
         ttl_k = jnp.full(keys.shape, 1.0, jnp.float32) * cache.ttl_ms
     else:  # ttl_per_key
         # hierarchical: per-key hazard when observed, class hazard as the
-        # conservative prior for keys with no write history yet ("TTLs err
-        # on freshness", §IV-C).
-        h = jnp.maximum(key_hazard[mk_safe],
-                        jnp.maximum(cache.hazard, 1e-9))
+        # conservative prior for keys with no write history yet ("TTLs
+        # err on freshness", §IV-C).
+        h = jnp.maximum(key_hazard[mk_safe], jnp.maximum(cache.hazard, 1e-9))
         ttl_k = -jnp.log1p(-p_star) / h
         ttl_k = jnp.clip(ttl_k, rtt_ms, TTL_CAP_MS)
     expiry = expiry.at[mk].set(now_ms + ttl_k, mode="drop")
     cached_v = cache.cached_version.at[mk].set(gv[mk_safe], mode="drop")
 
     new = cache._replace(
-        expiry_ms=expiry, cached_version=cached_v, global_version=gv,
-        last_write_ms=last_write, key_hazard=key_hazard,
+        expiry_ms=expiry,
+        cached_version=cached_v,
+        global_version=gv,
+        last_write_ms=last_write,
+        key_hazard=key_hazard,
         win_writes=cache.win_writes + jnp.sum(w),
         win_reads=cache.win_reads + jnp.sum(valid),
         hits=cache.hits + jnp.sum(hit).astype(jnp.int32),
         misses=cache.misses + jnp.sum(miss).astype(jnp.int32),
-        stale_serves=cache.stale_serves + jnp.sum(stale).astype(jnp.int32))
+        stale_serves=cache.stale_serves + jnp.sum(stale).astype(jnp.int32),
+        bypasses=cache.bypasses + jnp.sum(miss & bypass).astype(jnp.int32),
+    )
+    eff = BatchEffects(
+        inv_keys=inv_k, ins_keys=mk, miss=miss, bypassed=miss & bypass
+    )
+    return new, eff
+
+
+def lookup_batch(
+    cache: CacheState,
+    keys: jnp.ndarray,
+    mask: jnp.ndarray,
+    is_write: jnp.ndarray,
+    now_ms: jnp.ndarray,
+    *,
+    mode: str = "lease",
+    lease_ms: float = 5000.0,
+    rtt_ms: float = 2.0,
+    p_star: float = P_STAR,
+) -> Tuple[CacheState, jnp.ndarray]:
+    """Process one tick of requests against the converged shared table.
+
+    Reads hitting a valid entry are served at the proxy (no server load).
+    Writes always reach the server, bump the authoritative version and,
+    in lease mode, invalidate the proxy entry.  Returns
+    (new_cache, served_locally: (R,) bool).
+    """
+    assert mode in MODES, mode
+    _, hit, stale = classify(
+        cache.expiry_ms[keys],
+        cache.cached_version[keys],
+        cache.global_version[keys],
+        mask,
+        is_write,
+        now_ms,
+    )
+    new, _ = apply_batch(
+        cache,
+        keys,
+        mask,
+        is_write,
+        hit,
+        stale,
+        now_ms,
+        mode=mode,
+        lease_ms=lease_ms,
+        rtt_ms=rtt_ms,
+        p_star=p_star,
+    )
     return new, hit
 
 
-def slow_update(cache: CacheState, window_ms: float, rtt_ms: float,
-                lease_remaining_ms: float = jnp.inf,
-                p_star: float = P_STAR) -> CacheState:
+def slow_update(
+    cache: CacheState,
+    window_ms: float,
+    rtt_ms: float,
+    lease_remaining_ms: float = jnp.inf,
+    p_star: float = P_STAR,
+) -> CacheState:
     """T_slow retune of the aggregate TTL from the hazard estimator."""
     n_cached = jnp.maximum(jnp.sum(cache.cached_version >= 0), 1)
-    rate = cache.win_writes / n_cached / window_ms   # invalidations/entry/ms
+    rate = cache.win_writes / n_cached / window_ms  # invalidations/entry/ms
     hazard = (1.0 - BETA) * cache.hazard + BETA * rate
     hazard = jnp.maximum(hazard, 1e-9)
     ttl = -jnp.log1p(-p_star) / hazard
     ttl = jnp.minimum(ttl, lease_remaining_ms)
-    wf = cache.win_writes / jnp.maximum(cache.win_writes + cache.win_reads,
-                                        1.0)
+    n_events = jnp.maximum(cache.win_writes + cache.win_reads, 1.0)
+    wf = cache.win_writes / n_events
     write_frac = (1.0 - BETA) * cache.write_frac + BETA * wf
     ttl = jnp.where(write_frac > W_HIGH, ttl * GAMMA, ttl)
     ttl = jnp.clip(ttl, rtt_ms, TTL_CAP_MS)  # transport floor: >= one RTT
     zf = jnp.zeros((), jnp.float32)
-    return cache._replace(ttl_ms=ttl, hazard=hazard, write_frac=write_frac,
-                          win_writes=zf, win_reads=zf)
+    return cache._replace(
+        ttl_ms=ttl,
+        hazard=hazard,
+        write_frac=write_frac,
+        win_writes=zf,
+        win_reads=zf,
+    )

@@ -27,6 +27,7 @@ DELTA_L_INIT, DELTA_L_MIN, DELTA_L_MAX = 4.0, 2.0, 8.0
 H_DOWN, H_UP = 0.02, 0.10
 K_UP, K_DOWN = 3, 8
 F_CAP = 0.10
+F_MAX_HIGH = 1.0
 W_WINDOW_MS = 1000.0
 PIN_C_MS = 300.0
 W1, W2 = 1.0, 1.0
@@ -62,6 +63,15 @@ def init_control(rtt_ms: float, b_tgt: float = 0.15,
     )
 
 
+def consensus_view(views_p: jnp.ndarray) -> jnp.ndarray:
+    """Collapse (P, m) per-proxy telemetry views into the single view the
+    one control loop consumes (fleet mode).  The paper runs one logical
+    controller over P proxies' reports; the mean is its consensus — each
+    proxy's staleness phase shifts the aggregate, it does not fork the
+    loop."""
+    return jnp.mean(views_p, axis=0)
+
+
 def warmup_targets(B_series: jnp.ndarray, p99_warm: jnp.ndarray,
                    rtt_ms: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """§III-B target selection from the warmup window."""
@@ -84,6 +94,15 @@ def fast_update(ctrl: ControlState, B: jnp.ndarray, p99: jnp.ndarray,
 
     ``jitter`` is uniform in [-1, 1]; applied as ±0.1·RTT on Δ_t to avoid
     lockstep moves across proxies.
+
+    The steering bucket cap ``f_max`` moves with the same hysteresis as
+    d/Δ_L: a bounded multiplicative step (×2 up, ×½ down) inside
+    [F_CAP, F_MAX_HIGH].  A fixed cap deadlocks under write-hot storms —
+    writes are uncacheable, so when mutations dominate, the only relief
+    valve is steering, and pinning 90% of hot-key traffic to its primary
+    (f_max = 0.10 forever) is exactly the E8 rename_storm collapse.  Under
+    calm load K_DOWN shrinks the cap back, restoring the paper's 10%
+    churn bound.
     """
     P = pressure_score(B, p99, ctrl)
     above = jnp.where(P > H_UP, ctrl.above_cnt + 1, 0)
@@ -98,13 +117,17 @@ def fast_update(ctrl: ControlState, B: jnp.ndarray, p99: jnp.ndarray,
         go_up, jnp.maximum(ctrl.delta_l - 1.0, DELTA_L_MIN),
         jnp.where(go_down, jnp.minimum(ctrl.delta_l + 1.0, DELTA_L_MAX),
                   ctrl.delta_l))
+    f_max = jnp.where(
+        go_up, jnp.minimum(ctrl.f_max * 2.0, F_MAX_HIGH),
+        jnp.where(go_down, jnp.maximum(ctrl.f_max * 0.5, F_CAP),
+                  ctrl.f_max))
     # reset the counter that fired
     above = jnp.where(go_up, 0, above)
     below = jnp.where(go_down, 0, below)
 
     delta_t = jnp.asarray(rtt_ms, jnp.float32) + 0.1 * rtt_ms * jitter
 
-    return ctrl._replace(d=d, delta_l=delta_l, delta_t=delta_t,
+    return ctrl._replace(d=d, delta_l=delta_l, delta_t=delta_t, f_max=f_max,
                          above_cnt=above, below_cnt=below, pressure=P)
 
 

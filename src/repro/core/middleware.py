@@ -7,10 +7,11 @@ their mask bits, and carries its own state through the scan.  Stages also
 get a slow-loop hook on the paper's T_slow cadence.
 
 ``SimConfig.middleware`` is a tuple of registered stage names applied in
-order; the cooperative cache is the first (and reference) stage.  Writing a
-new stage — admission control, QoS throttling (PADLL-style), in-network
-caching (Fletch-style) — means subclassing :class:`Middleware`, registering
-it, and naming it in the config; the simulator core never changes.
+order; the cooperative cache is the first (and reference) stage.  Writing
+a new stage — admission control, QoS throttling (PADLL-style), in-network
+caching (Fletch-style) — means subclassing :class:`Middleware`,
+registering it, and naming it in the config; the simulator core never
+changes.
 
     from repro.core import middleware
 
@@ -23,6 +24,7 @@ it, and naming it in the config; the simulator core never changes.
 
     SimConfig(middleware=("drop_writes", "cache"))
 """
+
 from __future__ import annotations
 
 from typing import Any, Dict, NamedTuple, Tuple, Type
@@ -31,10 +33,12 @@ import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
 from repro.core import control as ctl
+from repro.core import fleet as fleet_lib
 
 
 class BatchView(NamedTuple):
     """One tick's request batch, as seen by a middleware stage."""
+
     keys: jnp.ndarray      # (R,) int32 namespace keys
     mask: jnp.ndarray      # (R,) bool validity (may be narrowed upstream)
     is_write: jnp.ndarray  # (R,) bool metadata-mutating ops
@@ -46,10 +50,11 @@ class Middleware:
     """Base class for registered pipeline stages.
 
     ``init(cfg) -> state`` builds the stage's carried pytree.
-    ``on_batch(state, batch, cfg) -> (state, mask, absorbed)`` processes one
-    tick: the returned mask replaces ``batch.mask`` for downstream stages
-    and routing; ``absorbed`` is the () float32 count of requests served at
-    the proxy.  ``on_slow(state, cfg) -> state`` runs on the T_slow cadence.
+    ``on_batch(state, batch, cfg) -> (state, mask, absorbed)`` processes
+    one tick: the returned mask replaces ``batch.mask`` for downstream
+    stages and routing; ``absorbed`` is the () float32 count of requests
+    served at the proxy.  ``on_slow(state, cfg) -> state`` runs on the
+    T_slow cadence.
     """
 
     name: str = "?"
@@ -57,8 +62,9 @@ class Middleware:
     def init(self, cfg) -> Any:
         return ()
 
-    def on_batch(self, state: Any, batch: BatchView, cfg
-                 ) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+    def on_batch(
+        self, state: Any, batch: BatchView, cfg
+    ) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
         return state, batch.mask, jnp.zeros((), jnp.float32)
 
     def on_slow(self, state: Any, cfg) -> Any:
@@ -70,14 +76,18 @@ _REGISTRY: Dict[str, Type[Middleware]] = {}
 
 def register(name: str):
     """Class decorator registering a Middleware stage under ``name``."""
+
     def deco(cls: Type[Middleware]) -> Type[Middleware]:
         prev = _REGISTRY.get(name)
         if prev is not None and prev is not cls:
-            raise ValueError(f"middleware {name!r} already registered "
-                             f"({prev.__module__}.{prev.__qualname__})")
+            raise ValueError(
+                f"middleware {name!r} already registered "
+                f"({prev.__module__}.{prev.__qualname__})"
+            )
         cls.name = name
         _REGISTRY[name] = cls
         return cls
+
     return deco
 
 
@@ -95,7 +105,8 @@ def get_class(name: str) -> Type[Middleware]:
     except KeyError:
         raise ValueError(
             f"unknown middleware {name!r}; available: "
-            f"{', '.join(available())}") from None
+            f"{', '.join(available())}"
+        ) from None
 
 
 def get(name: str) -> Middleware:
@@ -106,10 +117,11 @@ def get(name: str) -> Middleware:
 class CooperativeCache(Middleware):
     """The paper's cooperative metadata cache as a pipeline stage.
 
-    Read hits within the validity horizon are absorbed at the proxy; writes
-    always pass through (bumping versions / invalidating leases).  The slow
-    hook retunes the aggregate TTL from the invalidation-hazard estimator.
-    Coherence semantics live unchanged in :mod:`repro.core.cache`.
+    Read hits within the validity horizon are absorbed at the proxy;
+    writes always pass through (bumping versions / invalidating leases).
+    The slow hook retunes the aggregate TTL from the invalidation-hazard
+    estimator.  Coherence semantics live unchanged in
+    :mod:`repro.core.cache`.
     """
 
     def init(self, cfg) -> cache_lib.CacheState:
@@ -117,13 +129,63 @@ class CooperativeCache(Middleware):
 
     def on_batch(self, state: cache_lib.CacheState, batch: BatchView, cfg):
         state, hit = cache_lib.lookup_batch(
-            state, batch.keys, batch.mask, batch.is_write, batch.now_ms,
-            mode=cfg.cache_mode, lease_ms=cfg.lease_ms, rtt_ms=cfg.rtt_ms,
-            p_star=cfg.p_star)
+            state,
+            batch.keys,
+            batch.mask,
+            batch.is_write,
+            batch.now_ms,
+            mode=cfg.cache_mode,
+            lease_ms=cfg.lease_ms,
+            rtt_ms=cfg.rtt_ms,
+            p_star=cfg.p_star,
+        )
         # hits never reach the servers
         return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
 
     def on_slow(self, state: cache_lib.CacheState, cfg):
         lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
-        return cache_lib.slow_update(state, ctl.T_SLOW_MS, cfg.rtt_ms,
-                                     lease, cfg.p_star)
+        return cache_lib.slow_update(
+            state, ctl.T_SLOW_MS, cfg.rtt_ms, lease, cfg.p_star
+        )
+
+
+@register("fleet_cache")
+class FleetCache(Middleware):
+    """The cooperative cache as ``cfg.P`` real proxies with gossip.
+
+    Requests are sharded across the fleet per tick (slot r → proxy
+    (r+tick)%P); each proxy decides hits against its own gossip-delayed
+    view (``cfg.gossip_ms`` propagation, see :mod:`repro.core.fleet`),
+    while effects land on the converged table.  At ``gossip_ms=0`` this
+    stage reproduces ``"cache"`` bit-for-bit — the Δ=0 equivalence
+    contract.
+    """
+
+    def init(self, cfg) -> fleet_lib.FleetState:
+        D = fleet_lib.delay_ticks(cfg.gossip_ms, cfg.dt_ms)
+        return fleet_lib.init_fleet(cfg.N, cfg.P, D)
+
+    def on_batch(self, state: fleet_lib.FleetState, batch: BatchView, cfg):
+        R = batch.keys.shape[0]
+        proxy = fleet_lib.proxy_assign(R, cfg.P, state.tick)
+        state, hit = fleet_lib.lookup_fleet(
+            state,
+            batch.keys,
+            batch.mask,
+            batch.is_write,
+            proxy,
+            batch.now_ms,
+            mode=cfg.cache_mode,
+            lease_ms=cfg.lease_ms,
+            rtt_ms=cfg.rtt_ms,
+            p_star=cfg.p_star,
+            gossip_ms=cfg.gossip_ms,
+        )
+        # hits are served by their proxy and never reach the servers
+        return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
+
+    def on_slow(self, state: fleet_lib.FleetState, cfg):
+        lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
+        return fleet_lib.slow_fleet(
+            state, ctl.T_SLOW_MS, cfg.rtt_ms, lease, cfg.p_star
+        )

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import cache as cache_lib
 from repro.core import control as ctl
 from repro.core import hashring, telemetry
 from repro.core import middleware as mw_lib
@@ -42,7 +43,7 @@ POLICIES = policy_lib.available()
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     m: int = 8                     # metadata servers
-    P: int = 8                     # independent proxies (RR phases)
+    P: int = 8                     # independent proxies (fleet size)
     N: int = 4096                  # namespace size (keys)
     dt_ms: float = 50.0
     service_ms: float = 100.0      # paper: constant 100 ms per RPC
@@ -56,9 +57,40 @@ class SimConfig:
     cache_mode: str = "lease"      # lease | ttl_aggregate | ttl_per_key
     lease_ms: float = 5000.0
     p_star: float = 1e-4
+    # fleet knobs (repro.core.fleet): gossip propagation delay for the
+    # "fleet_cache" stage, and per-proxy routing (one wave per proxy, own
+    # staggered telemetry view, no within-tick sharing across proxies —
+    # replaces the n_groups waves when enabled)
+    gossip_ms: float = 0.0
+    fleet_routing: bool = False
     fixed_d: int = 2               # d for power_of_d policy
     ablate: str = ""               # "no_margin" | "no_pin" | "no_bucket"
     seed: int = 0
+
+    def __post_init__(self):
+        """Eager validation: bad names/sizes fail at construction with the
+        alternatives spelled out, not deep inside the jitted scan."""
+        for name in ("m", "P", "N", "V", "n_groups", "d_max", "fixed_d"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                raise ValueError(
+                    f"SimConfig.{name} must be a positive int, got {v!r}")
+        if self.policy not in policy_lib.available():
+            raise ValueError(
+                f"unknown policy {self.policy!r}; available: "
+                f"{', '.join(policy_lib.available())}")
+        for stage in self.middleware:
+            if stage not in mw_lib.available():
+                raise ValueError(
+                    f"unknown middleware stage {stage!r}; available: "
+                    f"{', '.join(mw_lib.available())}")
+        if self.cache_mode not in cache_lib.MODES:
+            raise ValueError(
+                f"unknown cache_mode {self.cache_mode!r}; available: "
+                f"{', '.join(cache_lib.MODES)}")
+        if self.gossip_ms < 0:
+            raise ValueError(
+                f"SimConfig.gossip_ms must be >= 0, got {self.gossip_ms!r}")
 
     @property
     def t_fast_ticks(self) -> int:
@@ -89,6 +121,7 @@ class SimState(NamedTuple):
     tick: jnp.ndarray            # () int32
     L: jnp.ndarray               # (m,) float32 queue length
     L_hat: jnp.ndarray           # (m,) float32 EWMA of observed L
+    L_hat_p: jnp.ndarray         # (P, m) float32 per-proxy views (fleet)
     p50_hat: jnp.ndarray         # (m,) float32 EWMA p50 (ms)
     p99_hat: jnp.ndarray         # (m,) float32 EWMA p99 (ms)
     sketch: telemetry.LatencySketch
@@ -104,6 +137,7 @@ class TickOut(NamedTuple):
     lat_pred: jnp.ndarray        # (m,) predicted latency of a new arrival (ms)
     d: jnp.ndarray               # () int32 control knob
     delta_l: jnp.ndarray         # ()
+    f_max: jnp.ndarray           # () steering-bucket cap this tick
     pressure: jnp.ndarray        # ()
     steered: jnp.ndarray         # ()
     eligible: jnp.ndarray        # ()
@@ -123,6 +157,7 @@ class SimResult(NamedTuple):
     cache_hits: np.ndarray       # (T,)
     final_cache: Optional[object]
     config: SimConfig
+    f_max_timeline: Optional[np.ndarray] = None   # (T,) bucket cap
 
     # ---- paper metrics -------------------------------------------------
     def mean_queue(self) -> float:
@@ -203,12 +238,25 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
         absorbed = absorbed + took
     state = state._replace(mw=tuple(mw_states))
 
-    # --- route in waves; later waves see earlier waves' own assignments ---
+    # --- route in waves ---------------------------------------------------
+    # Legacy: n_groups sequential waves, later waves seeing earlier waves'
+    # own assignments (a proxy knows what it already sent).  Fleet: one
+    # wave per proxy — wave g holds slots r ≡ g (mod P), served by proxy
+    # (g + tick) % P to match fleet.proxy_assign — each routing from its
+    # OWN staggered telemetry view with no within-tick sharing:
+    # independent proxies cannot see each other's sends until telemetry
+    # reports them.
     R = keys.shape[0]
-    G = cfg.n_groups
-    pad = (-R) % G
-    keysg = jnp.pad(keys, (0, pad)).reshape(G, -1)
-    maskg = jnp.pad(mask, (0, pad)).reshape(G, -1)
+    if cfg.fleet_routing:
+        G = cfg.P
+        pad = (-R) % G
+        keysg = jnp.pad(keys, (0, pad)).reshape(-1, G).T
+        maskg = jnp.pad(mask, (0, pad)).reshape(-1, G).T
+    else:
+        G = cfg.n_groups
+        pad = (-R) % G
+        keysg = jnp.pad(keys, (0, pad)).reshape(G, -1)
+        maskg = jnp.pad(mask, (0, pad)).reshape(G, -1)
 
     knobs = _knob_view(cfg, state.ctrl)
     ps = state.policy
@@ -218,10 +266,16 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
     eligible = jnp.zeros((), jnp.float32)
     dV = jnp.zeros((), jnp.float32)
     for g in range(G):
+        # fleet: wave g holds slots r ≡ g (mod P), which fleet_cache
+        # serves as proxy (g + tick) % P — rotate to that proxy's view
+        if cfg.fleet_routing:
+            L_view = state.L_hat_p[(g + state.tick) % G]
+        else:
+            L_view = state.L_hat + L_self
         ctx = RouteContext(
             keys=keysg[g], mask=maskg[g],
             feas=hashring.feasible_set(ring, keysg[g], cfg.d_max),
-            L_view=state.L_hat + L_self, p50_view=state.p50_hat,
+            L_view=L_view, p50_view=state.p50_hat,
             knobs=knobs, now_ms=now_ms,
             rng=jax.random.fold_in(r_route, g),
             m=cfg.m, fixed_d=cfg.fixed_d)
@@ -249,8 +303,19 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
     sketch = telemetry.sketch_add(state.sketch, lat_pred)
     p50_o, p99_o = telemetry.sketch_quantiles(sketch)
 
+    if cfg.fleet_routing:
+        # per-proxy views: each proxy polls on its own staggered phase, so
+        # the P views carry genuinely different staleness at any instant
+        state = state._replace(L_hat_p=telemetry.ewma_staggered(
+            state.L_hat_p, state.L, state.tick, cfg.t_fast_ticks,
+            ctl.ALPHA_FAST))
+
     def ingest(s: SimState) -> SimState:
-        L_hat = telemetry.ewma(s.L_hat, s.L, ctl.ALPHA_FAST)
+        if cfg.fleet_routing:
+            # one control loop fed by the fleet's consensus view
+            L_hat = ctl.consensus_view(s.L_hat_p)
+        else:
+            L_hat = telemetry.ewma(s.L_hat, s.L, ctl.ALPHA_FAST)
         p50 = telemetry.ewma(s.p50_hat, p50_o, ctl.ALPHA_FAST)
         p99 = telemetry.ewma(s.p99_hat, p99_o, ctl.ALPHA_FAST)
         B = telemetry.imbalance(L_hat)
@@ -273,6 +338,7 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
 
     out = TickOut(L=L, arrivals=arrivals, lat_pred=lat_pred,
                   d=state.ctrl.d, delta_l=state.ctrl.delta_l,
+                  f_max=state.ctrl.f_max,
                   pressure=state.ctrl.pressure, steered=steered,
                   eligible=eligible, cache_hits=absorbed, dV=dV)
     return state, out
@@ -286,6 +352,7 @@ def init_state(cfg: SimConfig, b_tgt: float = 0.15,
         tick=jnp.zeros((), jnp.int32),
         L=jnp.zeros((cfg.m,), jnp.float32),
         L_hat=jnp.zeros((cfg.m,), jnp.float32),
+        L_hat_p=jnp.zeros((cfg.P, cfg.m), jnp.float32),
         p50_hat=jnp.zeros((cfg.m,), jnp.float32),
         p99_hat=jnp.zeros((cfg.m,), jnp.float32),
         sketch=telemetry.make_sketch(cfg.m),
@@ -355,10 +422,13 @@ def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
 
 
 def _final_cache(cfg: SimConfig, final: SimState):
+    """Final cache pytree: the shared-table CacheState for "cache", the
+    FleetState (converged table + per-proxy counters) for "fleet_cache"."""
     chain = cfg.middleware_chain
-    if "cache" not in chain:
-        return None
-    return jax.device_get(final.mw[chain.index("cache")])
+    for name in ("cache", "fleet_cache"):
+        if name in chain:
+            return jax.device_get(final.mw[chain.index(name)])
+    return None
 
 
 def _to_result(cfg: SimConfig, outs: TickOut, final_cache) -> SimResult:
@@ -373,7 +443,8 @@ def _to_result(cfg: SimConfig, outs: TickOut, final_cache) -> SimResult:
         eligible=np.asarray(outs.eligible),
         cache_hits=np.asarray(outs.cache_hits),
         final_cache=final_cache,
-        config=cfg)
+        config=cfg,
+        f_max_timeline=np.asarray(outs.f_max))
 
 
 def _targets(cfg: SimConfig, do_warmup: bool) -> Tuple[float, float]:

@@ -17,6 +17,25 @@ def ewma(prev: jnp.ndarray, x: jnp.ndarray, alpha: float) -> jnp.ndarray:
     return (1.0 - alpha) * prev + alpha * x
 
 
+def staggered_phases(P: int, period_ticks: int) -> jnp.ndarray:
+    """(P,) ingest phases spreading P proxies evenly over one fast
+    interval.  Independent proxies poll server telemetry on their own
+    clocks; staggering is what makes their smoothed views *diverge* —
+    proxy p's view is up to ``period·(P-1)/P`` ticks staler than proxy
+    p+1's at any instant (fleet mode, §IV-E assumption 1 per proxy)."""
+    return (jnp.arange(P, dtype=jnp.int32) * period_ticks) // P
+
+
+def ewma_staggered(views: jnp.ndarray, obs: jnp.ndarray,
+                   tick: jnp.ndarray, period_ticks: int,
+                   alpha: float) -> jnp.ndarray:
+    """Update the (P, m) per-proxy EWMA views: proxy p ingests ``obs``
+    only on its own staggered phase this tick; other views keep aging."""
+    P = views.shape[0]
+    due = (tick % period_ticks) == staggered_phases(P, period_ticks)
+    return jnp.where(due[:, None], ewma(views, obs[None, :], alpha), views)
+
+
 class LatencySketch(NamedTuple):
     buf: jnp.ndarray    # (m, K) float32 latency observations (ms)
     idx: jnp.ndarray    # () int32 next write slot (shared across servers)

@@ -96,3 +96,16 @@ def test_lyapunov_negative_iff_margin_at_least_two():
     L2 = jnp.asarray([10.0, 9.0])
     dv2 = float(ctl.lyapunov_delta_v(L2, jnp.asarray(0), jnp.asarray(1)))
     assert dv2 == 0.0
+
+
+def test_f_max_adapts_with_hysteresis_and_stays_bounded():
+    """The steering cap doubles under sustained pressure (the rename_storm
+    relief valve), saturates at F_MAX_HIGH, and decays back to the
+    paper's 10% floor under calm load."""
+    c = _ctrl()
+    c = step_n(c, B=5.0, p99=0.0, n=ctl.K_UP)      # one escalation
+    assert np.isclose(float(c.f_max), 2 * ctl.F_CAP)
+    c = step_n(c, B=5.0, p99=0.0, n=40)            # saturate
+    assert np.isclose(float(c.f_max), ctl.F_MAX_HIGH)
+    c = step_n(c, B=0.0, p99=0.0, n=200)           # calm: decay to floor
+    assert np.isclose(float(c.f_max), ctl.F_CAP)

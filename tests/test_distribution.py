@@ -74,7 +74,10 @@ def test_mini_dryrun_train_and_decode_compile():
                               out_shardings=(named(state_spec), None)
                               ).lower(ss, batch)
             compiled = lowered.compile()
-            assert compiled.cost_analysis().get("flops", 0) > 0
+            ca = compiled.cost_analysis()
+            # jax < 0.5 returns a per-computation list; newer, one dict
+            ca = ca[0] if isinstance(ca, list) else ca
+            assert ca.get("flops", 0) > 0
             print("TRAIN_OK")
 
         srules = R.make_rules("serve", mesh)

@@ -8,6 +8,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cache as cache_lib
 from repro.core import control as ctl
+from repro.core import fleet as fleet_lib
 from repro.core import hashring, telemetry
 
 SETTINGS = dict(max_examples=30, deadline=None)
@@ -81,6 +82,42 @@ def test_lease_mode_never_serves_stale(ops):
                                       mode="lease", lease_ms=500.0)
         now += 7.0
     assert int(c.stale_serves) == 0
+
+
+@given(ops=st.lists(st.tuples(st.integers(0, 15), st.booleans()),
+                    min_size=1, max_size=40),
+       P=st.sampled_from([1, 2, 8]),
+       mode=st.sampled_from(cache_lib.MODES))
+@settings(**SETTINGS)
+def test_fleet_gossip_zero_matches_shared_table(ops, P, mode):
+    """Δ=0 equivalence contract: with instant gossip the fleet reproduces
+    the converged shared-table cache bit-for-bit — same hit decisions,
+    same counters, same table trajectory — for any P and coherence mode."""
+    N = 16
+    shared = cache_lib.init_cache(N)
+    fl = fleet_lib.init_fleet(N, P, D=1)
+    now = 0.0
+    for t, (key, is_write) in enumerate(ops):
+        keys = jnp.asarray([key], jnp.int32)
+        mask = jnp.asarray([True])
+        w = jnp.asarray([is_write])
+        shared, hit_s = cache_lib.lookup_batch(
+            shared, keys, mask, w, jnp.asarray(now), mode=mode,
+            lease_ms=300.0)
+        proxy = fleet_lib.proxy_assign(1, P, t)
+        fl, hit_f = fleet_lib.lookup_fleet(
+            fl, keys, mask, w, proxy, jnp.asarray(now), mode=mode,
+            lease_ms=300.0, gossip_ms=0.0)
+        assert bool(hit_s[0]) == bool(hit_f[0])
+        now += 13.0
+    for field in ("hits", "misses", "stale_serves", "bypasses"):
+        assert int(getattr(shared, field)) == int(getattr(fl.shared, field))
+    assert int(fl.hits_p.sum()) == int(shared.hits)
+    for field in ("expiry_ms", "cached_version", "global_version",
+                  "key_hazard"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(shared, field)),
+            np.asarray(getattr(fl.shared, field)))
 
 
 @given(writes=st.lists(st.floats(1.0, 1000.0), min_size=2, max_size=30))
