@@ -1,0 +1,233 @@
+"""E10 — engine performance: compile time vs steady-state ticks/sec.
+
+Two measurements back DESIGN.md §9 and the README perf quick-look:
+
+* ``engine/*``: per-config compile time, lowered-HLO size, and steady
+  ticks/sec of the wave-scan engine vs the unrolled reference across
+  policy × middleware × n_groups × P × fleet — the O(1)-vs-O(G) trace
+  contract as a number.
+* ``e8_sweep``: the E8 scenario-matrix configuration (full workload
+  registry × 8 seeds per policy stack) run by the pre-PR engine — flat
+  vmap over ``jnp.repeat``-duplicated grids, Python-unrolled waves, a
+  *carried* (hence vmap-batched) tick counter that degrades every
+  cadence ``lax.cond`` to a both-branches ``select``, full TickOut
+  timelines, per-combo device slicing — versus the current engine:
+  nested vmap sharing grids across seeds, scan-over-waves, unbatched
+  tick clock, hoisted feasible sets, streaming summary metrics.  The
+  "before" number is recorded in the JSON next to "after" and the
+  speedup: the repo's first perf-trajectory artifact.
+
+Emits ``experiments/sim/BENCH_engine.json`` (written incrementally, so a
+CI timeout still leaves a valid artifact) and CSV rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+# the "e8_sweep" section must measure exactly the E8 configuration —
+# import it rather than re-declaring, so the two can never drift
+from benchmarks.scenario_matrix import M, POLICY_STACKS as E8_STACKS
+from benchmarks.scenario_matrix import SEED, SEEDS as SWEEP_SEEDS
+from benchmarks.scenario_matrix import T as T_SWEEP
+from repro.core import SimConfig, hashring, make_workload, workloads
+from repro.core import policies as policy_lib
+from repro.core import sim as sim_lib
+
+T_ENGINE = 400          # single-run horizon (compile + steady timing)
+REPEAT = 3
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
+
+# single-run configs: policy × middleware × n_groups × P × fleet
+CONFIGS = (
+    ("rr_g8", dict(policy="round_robin")),
+    ("pod_g8", dict(policy="power_of_d")),
+    ("midas_cache_g8", dict(policy="midas", middleware=("cache",))),
+    ("midas_cache_g32", dict(policy="midas", middleware=("cache",),
+                             n_groups=32)),
+    ("midas_fleet_p8", dict(policy="midas", middleware=("fleet_cache",),
+                            fleet_routing=True, P=8, gossip_ms=100.0)),
+)
+
+
+def _write(doc: dict) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_engine.json").write_text(json.dumps(doc, indent=1))
+
+
+def _time_run(fn, *args):
+    """(compile_s, steady_s): first call vs best of REPEAT warm calls."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_s = time.perf_counter() - t0
+    steady = []
+    for _ in range(REPEAT):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        steady.append(time.perf_counter() - t0)
+    return compile_s, min(steady)
+
+
+def _bench_engine(name: str, overrides: dict) -> dict:
+    """Compile / steady / HLO size for scan vs unrolled on one config."""
+    wl = make_workload("bursty", T=T_ENGINE, m=M, seed=SEED)
+    row: dict = {"name": name, "T": T_ENGINE, "m": M, **{
+        k: (list(v) if isinstance(v, tuple) else v)
+        for k, v in overrides.items()}}
+    for engine, unroll in (("scan", False), ("unrolled", True)):
+        cfg = SimConfig(m=M, unroll_waves=unroll, **overrides)
+        st = sim_lib.init_state(cfg)
+        args = (cfg, st, wl.keys, wl.mask, wl.is_write)
+        hlo_chars = len(
+            sim_lib._run_scan.lower(*args).as_text())
+        compile_s, steady_s = _time_run(sim_lib._run_scan, *args)
+        row[engine] = {
+            "hlo_chars": hlo_chars,
+            "compile_s": round(compile_s, 3),
+            "steady_s": round(steady_s, 4),
+            "ticks_per_s": round(T_ENGINE / steady_s),
+        }
+        emit(f"engine_perf/{name}/{engine}", steady_s * 1e6,
+             f"compile={compile_s:.2f}s "
+             f"ticks/s={T_ENGINE / steady_s:,.0f} hlo={hlo_chars}")
+    row["hlo_ratio_unrolled_over_scan"] = round(
+        row["unrolled"]["hlo_chars"] / row["scan"]["hlo_chars"], 2)
+    return row
+
+
+# --------------------------------------------------------------------------
+# The pre-PR sweep engine, reconstructed for the "before" number
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _legacy_sweep(cfg: SimConfig, states, tick0, keys, mask, is_write):
+    """Pre-PR sweep semantics: one flat vmap over all (workload, seed)
+    combos (grids jnp.repeat-duplicated by the caller), Python-unrolled
+    waves (cfg.unroll_waves=True), and the tick counter CARRIED through
+    the scan — under vmap it is batched, so every cadence ``lax.cond``
+    runs both branches as a ``select``, exactly as the pre-PR engine
+    compiled."""
+    ring = hashring.make_ring(cfg.m, cfg.V)
+    step = functools.partial(
+        sim_lib._tick, cfg, ring, policy_lib.get(cfg.policy),
+        sim_lib._middlewares(cfg))
+
+    def one(st, t0, k, mk, w):
+        def body(carry, xs):
+            s, tick = carry
+            kk, mm, ww = xs
+            s, out = step(s, (tick, kk, mm, ww))
+            return (s, tick + 1), out
+
+        (final, _), outs = jax.lax.scan(body, (st, t0), (k, mk, w))
+        return final, outs
+
+    return jax.vmap(one)(states, tick0, keys, mask, is_write)
+
+
+def _bench_e8_before(policy: str, mw, wls) -> dict:
+    cfg = SimConfig(m=M, policy=policy, middleware=mw, unroll_waves=True)
+    S, W = len(SWEEP_SEEDS), len(wls)
+    keys = jnp.repeat(jnp.stack([w.keys for w in wls]), S, axis=0)
+    mask = jnp.repeat(jnp.stack([w.mask for w in wls]), S, axis=0)
+    isw = jnp.repeat(jnp.stack([w.is_write for w in wls]), S, axis=0)
+    per_seed = [
+        sim_lib.init_state(dataclasses.replace(cfg, seed=s))
+        for s in SWEEP_SEEDS]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_seed)
+    states = jax.tree_util.tree_map(
+        lambda x: jnp.tile(x, (W,) + (1,) * (x.ndim - 1)), stacked)
+    tick0 = jnp.zeros((W * S,), jnp.int32)
+
+    def run():
+        final, outs = _legacy_sweep(cfg, states, tick0, keys, mask, isw)
+        # pre-PR per-combo slicing: B × fields tiny device transfers
+        rows = []
+        for b in range(W * S):
+            outs_b = jax.tree_util.tree_map(lambda x: x[b], outs)
+            rows.append(sim_lib._to_result(cfg, outs_b, None))
+        return rows
+
+    compile_s, steady_s = _time_run(run)
+    return {"compile_s": compile_s, "steady_s": steady_s}
+
+
+def _bench_e8_after(policy: str, mw, wls) -> dict:
+    cfg = SimConfig(m=M, policy=policy, middleware=mw)
+
+    def run():
+        return sim_lib.simulate_sweep(
+            cfg, wls, seeds=SWEEP_SEEDS, do_warmup=False, metrics="summary")
+
+    compile_s, steady_s = _time_run(run)
+    return {"compile_s": compile_s, "steady_s": steady_s}
+
+
+def run() -> None:
+    doc: dict = {
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "T_engine": T_ENGINE,
+            "T_sweep": T_SWEEP,
+            "m": M,
+            "sweep_seeds": len(SWEEP_SEEDS),
+            "repeat": REPEAT,
+        },
+        "engine": [],
+    }
+    for name, overrides in CONFIGS:
+        doc["engine"].append(_bench_engine(name, overrides))
+        _write(doc)  # incremental: a timeout still leaves an artifact
+
+    # ---- E8 sweep config, before (pre-PR engine) vs after ---------------
+    names = workloads.available()
+    wls = [make_workload(n, T=T_SWEEP, m=M, seed=SEED) for n in names]
+    ticks = len(wls) * len(SWEEP_SEEDS) * T_SWEEP
+    sweep: dict = {
+        "workloads": len(wls), "seeds": len(SWEEP_SEEDS), "T": T_SWEEP,
+        "policies": {}, "before": {}, "after": {},
+    }
+    doc["e8_sweep"] = sweep
+    tot_b = tot_a = 0.0
+    for policy, mw in E8_STACKS.items():
+        after = _bench_e8_after(policy, mw, wls)
+        before = _bench_e8_before(policy, mw, wls)
+        tot_b += before["steady_s"]
+        tot_a += after["steady_s"]
+        sweep["policies"][policy] = {
+            "before_ticks_per_s": round(ticks / before["steady_s"]),
+            "after_ticks_per_s": round(ticks / after["steady_s"]),
+            "speedup_steady": round(
+                before["steady_s"] / after["steady_s"], 2),
+            "before_compile_s": round(before["compile_s"], 2),
+            "after_compile_s": round(after["compile_s"], 2),
+        }
+        emit(f"engine_perf/e8_sweep/{policy}", after["steady_s"] * 1e6,
+             f"{sweep['policies'][policy]['speedup_steady']}x steady "
+             f"({ticks / before['steady_s']:,.0f} -> "
+             f"{ticks / after['steady_s']:,.0f} ticks/s)")
+        _write(doc)
+    total = ticks * len(E8_STACKS)
+    sweep["before"] = {"steady_s": round(tot_b, 2),
+                       "ticks_per_s": round(total / tot_b)}
+    sweep["after"] = {"steady_s": round(tot_a, 2),
+                      "ticks_per_s": round(total / tot_a)}
+    sweep["speedup_steady"] = round(tot_b / tot_a, 2)
+    _write(doc)
+    emit("engine_perf/e8_sweep/total", tot_a * 1e6,
+         f"{sweep['speedup_steady']}x steady over pre-PR engine "
+         f"({sweep['before']['ticks_per_s']:,} -> "
+         f"{sweep['after']['ticks_per_s']:,} ticks/s)")
+
+
+if __name__ == "__main__":
+    run()

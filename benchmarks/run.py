@@ -20,6 +20,7 @@ SECTIONS = {
     "ckpt": "benchmarks.ckpt_storm",           # E7
     "scenario_matrix": "benchmarks.scenario_matrix",  # E8
     "fleet": "benchmarks.fleet",               # E9 (gossip × coherence)
+    "engine": "benchmarks.engine_perf",        # E10 (compile + ticks/sec)
     "serving": "benchmarks.serving",
     "kernels": "benchmarks.kernels_bench",
     "ablations": "benchmarks.ablations",       # §IV-E stability guards

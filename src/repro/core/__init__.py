@@ -10,6 +10,7 @@
 from repro.core import (cache, control, fleet, hashring,  # noqa: F401
                         middleware, policies, routing, sim, telemetry,
                         theory, workloads)
-from repro.core.sim import (SimConfig, SimResult, simulate,  # noqa: F401
-                            simulate_sweep)
+from repro.core.sim import (SimConfig, SimResult,  # noqa: F401
+                            SummaryResult, simulate, simulate_sweep,
+                            summarize)
 from repro.core.workloads import WORKLOADS, make_workload  # noqa: F401

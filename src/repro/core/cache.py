@@ -178,12 +178,19 @@ def apply_batch(
     wk = jnp.where(w, keys, N)
     wk_safe = jnp.minimum(wk, N - 1)
     gv = cache.global_version.at[wk].add(1, mode="drop")
-    dt = jnp.maximum(now_ms - cache.last_write_ms[wk_safe], 1.0)
-    seen = cache.last_write_ms[wk_safe] >= 0.0
-    decayed = (1.0 - BETA) * cache.key_hazard[wk_safe] + BETA / dt
-    upd = jnp.where(seen, decayed, 1.0 / jnp.maximum(dt, 1.0))
-    key_hazard = cache.key_hazard.at[wk].set(upd, mode="drop")
-    last_write = cache.last_write_ms.at[wk].set(now_ms, mode="drop")
+    if mode == "ttl_per_key":
+        dt = jnp.maximum(now_ms - cache.last_write_ms[wk_safe], 1.0)
+        seen = cache.last_write_ms[wk_safe] >= 0.0
+        decayed = (1.0 - BETA) * cache.key_hazard[wk_safe] + BETA / dt
+        upd = jnp.where(seen, decayed, 1.0 / jnp.maximum(dt, 1.0))
+        key_hazard = cache.key_hazard.at[wk].set(upd, mode="drop")
+        last_write = cache.last_write_ms.at[wk].set(now_ms, mode="drop")
+    else:
+        # the per-key hazard log feeds only the ttl_per_key horizon;
+        # lease / ttl_aggregate leave both (N,) tables untouched — two
+        # fewer full-table scatters on every tick of the hot path
+        key_hazard = cache.key_hazard
+        last_write = cache.last_write_ms
     expiry = cache.expiry_ms
     if mode == "lease":
         # immediate invalidation at the (converged) proxy table

@@ -113,6 +113,17 @@ def proxy_assign(
     return ((jnp.arange(R, dtype=jnp.int32) + tick) % P).astype(jnp.int32)
 
 
+def wave_views(L_hat_p: jnp.ndarray, tick: jnp.ndarray) -> jnp.ndarray:
+    """(P, m) telemetry views reordered so row g is the view of the
+    proxy serving routing wave g this tick — proxy (g + tick) % P, the
+    same rotation as :func:`proxy_assign`.  One gather up front lets the
+    engine feed per-wave views to its wave scan instead of issuing P
+    dynamic row reads (bit-for-bit the same rows)."""
+    P = L_hat_p.shape[0]
+    idx = (jnp.arange(P, dtype=jnp.int32) + jnp.asarray(tick, jnp.int32)) % P
+    return L_hat_p[idx]
+
+
 def init_fleet(
     N: int, P: int, D: int, ttl_init_ms: float = 100.0
 ) -> FleetState:

@@ -97,6 +97,13 @@ def primary(ring: Ring, keys: jnp.ndarray) -> jnp.ndarray:
     return ring.owners[idx]
 
 
+@functools.lru_cache(maxsize=None)
+def _strict_lower(scan_width: int) -> np.ndarray:
+    """Strict lower-triangular mask, built host-side once per width so it
+    enters every trace as a ready constant."""
+    return np.tril(np.ones((scan_width, scan_width), bool), k=-1)
+
+
 def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
                  scan_width: int = 16) -> jnp.ndarray:
     """F(r): the first ``d_max`` distinct servers clockwise of each key.
@@ -105,6 +112,11 @@ def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
     ``scan_width`` consecutive ring slots, keeps first occurrences, and (in
     the degenerate case of fewer distinct owners than d_max within the
     window) pads deterministically with (primary + i) mod m.
+
+    Every op is elementwise in ``keys``, so arbitrary leading batch axes
+    are supported — the engine exploits this to gather all G routing
+    waves in ONE call per tick (a (G, R/G) key matrix) instead of G
+    per-wave calls, with identical per-key results.
     """
     n = ring.positions.shape[0]
     pos = key_position(keys)
@@ -114,7 +126,7 @@ def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
     cand = ring.owners[idx]                                   # (..., W)
     # first-occurrence mask: cand[j] not among cand[:j]
     eq = cand[..., None, :] == cand[..., :, None]             # (..., W, W)
-    lower = jnp.tril(jnp.ones((scan_width, scan_width), bool), k=-1)
+    lower = jnp.asarray(_strict_lower(scan_width))
     seen_before = jnp.any(eq & lower, axis=-1)                # (..., W)
     fresh = ~seen_before
     # rank among fresh entries

@@ -13,6 +13,13 @@ caching (Fletch-style) — means subclassing :class:`Middleware`,
 registering it, and naming it in the config; the simulator core never
 changes.
 
+Scan contract (DESIGN.md §9): ``on_batch``/``on_slow`` execute inside the
+engine's jitted tick scan, so a stage's state must keep a stable pytree
+structure (same leaves, shapes, dtypes) across calls, and per-tick Python
+side effects will only run at trace time.  The stage loop itself is
+Python-unrolled — pipelines are short and heterogeneous — but each
+stage's body is traced once per compile, independent of the horizon.
+
     from repro.core import middleware
 
     @middleware.register("drop_writes")

@@ -19,6 +19,15 @@ and validity mask, the namespace-feasible set from the consistent-hash ring
 (slot 0 is the primary), the stale telemetry views (L̂, p̃50), the control
 knobs, the tick clock, and a per-wave PRNG key.  Policies read what they
 need; XLA dead-code-eliminates the rest.
+
+Scan contract (DESIGN.md §9).  The engine runs a tick's routing waves as
+a single ``jax.lax.scan`` whose carry threads the policy state: the
+feasible sets and per-wave PRNG keys in ``RouteContext`` are gathered /
+pre-split for all waves up front, and ``route`` is traced ONCE per
+compile regardless of ``n_groups``/``P``.  Two obligations follow:
+``route`` must return a state pytree with the same structure and leaf
+shapes it received (it is a scan carry), and it must not branch on a
+Python-level wave index (waves are indistinguishable at trace time).
 """
 from __future__ import annotations
 
@@ -66,6 +75,13 @@ class RouteStats(NamedTuple):
     def zeros(cls) -> "RouteStats":
         z = jnp.zeros((), jnp.float32)
         return cls(steered=z, eligible=z, dV=z)
+
+    def __add__(self, other: "RouteStats") -> "RouteStats":
+        """Fieldwise accumulation (replaces tuple concatenation): the
+        wave scan's carry reduction across a tick's routing waves."""
+        return RouteStats(steered=self.steered + other.steered,
+                          eligible=self.eligible + other.eligible,
+                          dV=self.dV + other.dV)
 
 
 def steering_dv(ctx: RouteContext, assign: jnp.ndarray) -> jnp.ndarray:

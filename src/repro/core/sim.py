@@ -12,12 +12,22 @@ Within a tick, requests are processed in ``n_groups`` sequential waves:
 every wave sees the stale EWMA telemetry *plus* the proxies' own
 assignments from earlier waves (a proxy knows what it already sent), which
 is the honest middle ground between full per-request sequencing and pure
-batch routing.
+batch routing.  The waves themselves run as an inner ``jax.lax.scan``
+(DESIGN.md §9): the feasible-set gather is one batched
+``hashring.feasible_set`` call per tick, per-wave RNG keys are pre-split,
+and the policy state threads through the wave carry — so trace/HLO size
+and compile time are O(1) in ``n_groups`` and ``P`` instead of O(G).
+``SimConfig(unroll_waves=True)`` keeps the pre-scan Python-loop engine as
+the bit-for-bit parity reference (tests) and the E10 "before" baseline.
 
-``simulate`` runs one config; ``simulate_sweep`` batches seeds with
-``jax.vmap`` (one compiled scan per policy, regardless of seed count) and
-fans out across policies — the API the benchmark suite uses.
+``simulate`` runs one config; ``simulate_sweep`` batches seeds and
+workload grids with nested ``jax.vmap`` (one compiled scan per policy)
+and fans out across policies — the API the benchmark suite uses.  Its
+``metrics="summary"`` mode carries O(m) streaming accumulators
+(:class:`SummaryResult`) through the scan instead of stacking (T, m)
+timelines, collapsing sweep memory from O(B·T·m) to O(B·m).
 """
+
 from __future__ import annotations
 
 import dataclasses
@@ -30,31 +40,34 @@ import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.core import control as ctl
+from repro.core import fleet as fleet_lib
 from repro.core import hashring, telemetry
 from repro.core import middleware as mw_lib
 from repro.core import policies as policy_lib
-from repro.core.policies.base import ControlKnobs, RouteContext
+from repro.core.policies.base import ControlKnobs, RouteContext, RouteStats
 from repro.core.workloads import Workload
 
 # Snapshot of the registry at import time; prefer policies.available().
 POLICIES = policy_lib.available()
 
+METRICS_MODES = ("full", "summary")
+
 
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
-    m: int = 8                     # metadata servers
-    P: int = 8                     # independent proxies (fleet size)
-    N: int = 4096                  # namespace size (keys)
+    m: int = 8  # metadata servers
+    P: int = 8  # independent proxies (fleet size)
+    N: int = 4096  # namespace size (keys)
     dt_ms: float = 50.0
-    service_ms: float = 100.0      # paper: constant 100 ms per RPC
-    policy: str = "midas"          # any name in policies.available()
+    service_ms: float = 100.0  # paper: constant 100 ms per RPC
+    policy: str = "midas"  # any name in policies.available()
     d_max: int = 4
-    V: int = 64                    # virtual nodes per server
+    V: int = 64  # virtual nodes per server
     rtt_ms: float = 2.0
-    n_groups: int = 8              # routing waves per tick
+    n_groups: int = 8  # routing waves per tick
     middleware: Tuple[str, ...] = ()  # pipeline stages, applied in order
-    cache_enabled: bool = False    # legacy alias for middleware=("cache",)
-    cache_mode: str = "lease"      # lease | ttl_aggregate | ttl_per_key
+    cache_enabled: bool = False  # legacy alias for middleware=("cache",)
+    cache_mode: str = "lease"  # lease | ttl_aggregate | ttl_per_key
     lease_ms: float = 5000.0
     p_star: float = 1e-4
     # fleet knobs (repro.core.fleet): gossip propagation delay for the
@@ -63,8 +76,12 @@ class SimConfig:
     # replaces the n_groups waves when enabled)
     gossip_ms: float = 0.0
     fleet_routing: bool = False
-    fixed_d: int = 2               # d for power_of_d policy
-    ablate: str = ""               # "no_margin" | "no_pin" | "no_bucket"
+    fixed_d: int = 2  # d for power_of_d policy
+    ablate: str = ""  # "no_margin" | "no_pin" | "no_bucket"
+    # reference engine: unroll the routing waves as a Python loop (the
+    # pre-scan semantics, O(G) trace size) — parity tests and the E10
+    # "before" baseline; production always uses the wave scan
+    unroll_waves: bool = False
     seed: int = 0
 
     def __post_init__(self):
@@ -74,23 +91,28 @@ class SimConfig:
             v = getattr(self, name)
             if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
                 raise ValueError(
-                    f"SimConfig.{name} must be a positive int, got {v!r}")
+                    f"SimConfig.{name} must be a positive int, got {v!r}"
+                )
         if self.policy not in policy_lib.available():
             raise ValueError(
                 f"unknown policy {self.policy!r}; available: "
-                f"{', '.join(policy_lib.available())}")
+                f"{', '.join(policy_lib.available())}"
+            )
         for stage in self.middleware:
             if stage not in mw_lib.available():
                 raise ValueError(
                     f"unknown middleware stage {stage!r}; available: "
-                    f"{', '.join(mw_lib.available())}")
+                    f"{', '.join(mw_lib.available())}"
+                )
         if self.cache_mode not in cache_lib.MODES:
             raise ValueError(
                 f"unknown cache_mode {self.cache_mode!r}; available: "
-                f"{', '.join(cache_lib.MODES)}")
+                f"{', '.join(cache_lib.MODES)}"
+            )
         if self.gossip_ms < 0:
             raise ValueError(
-                f"SimConfig.gossip_ms must be >= 0, got {self.gossip_ms!r}")
+                f"SimConfig.gossip_ms must be >= 0, got {self.gossip_ms!r}"
+            )
 
     @property
     def t_fast_ticks(self) -> int:
@@ -118,46 +140,45 @@ class SimConfig:
 
 
 class SimState(NamedTuple):
-    tick: jnp.ndarray            # () int32
-    L: jnp.ndarray               # (m,) float32 queue length
-    L_hat: jnp.ndarray           # (m,) float32 EWMA of observed L
-    L_hat_p: jnp.ndarray         # (P, m) float32 per-proxy views (fleet)
-    p50_hat: jnp.ndarray         # (m,) float32 EWMA p50 (ms)
-    p99_hat: jnp.ndarray         # (m,) float32 EWMA p99 (ms)
+    L: jnp.ndarray  # (m,) float32 queue length
+    L_hat: jnp.ndarray  # (m,) float32 EWMA of observed L
+    L_hat_p: jnp.ndarray  # (P, m) float32 per-proxy views (fleet)
+    p50_hat: jnp.ndarray  # (m,) float32 EWMA p50 (ms)
+    p99_hat: jnp.ndarray  # (m,) float32 EWMA p99 (ms)
     sketch: telemetry.LatencySketch
-    policy: tuple                # policy-owned pytree (see policies.base)
+    policy: tuple  # policy-owned pytree (see policies.base)
     ctrl: ctl.ControlState
-    mw: tuple                    # per-stage middleware pytrees, chain order
+    mw: tuple  # per-stage middleware pytrees, chain order
     rng: jnp.ndarray
 
 
 class TickOut(NamedTuple):
-    L: jnp.ndarray               # (m,) queue snapshot after tick
-    arrivals: jnp.ndarray        # (m,) arrivals routed this tick
-    lat_pred: jnp.ndarray        # (m,) predicted latency of a new arrival (ms)
-    d: jnp.ndarray               # () int32 control knob
-    delta_l: jnp.ndarray         # ()
-    f_max: jnp.ndarray           # () steering-bucket cap this tick
-    pressure: jnp.ndarray        # ()
-    steered: jnp.ndarray         # ()
-    eligible: jnp.ndarray        # ()
-    cache_hits: jnp.ndarray      # () requests absorbed by the pipeline
-    dV: jnp.ndarray              # () potential change from steering this tick
+    L: jnp.ndarray  # (m,) queue snapshot after tick
+    arrivals: jnp.ndarray  # (m,) arrivals routed this tick
+    lat_pred: jnp.ndarray  # (m,) predicted latency of a new arrival (ms)
+    d: jnp.ndarray  # () int32 control knob
+    delta_l: jnp.ndarray  # ()
+    f_max: jnp.ndarray  # () steering-bucket cap this tick
+    pressure: jnp.ndarray  # ()
+    steered: jnp.ndarray  # ()
+    eligible: jnp.ndarray  # ()
+    cache_hits: jnp.ndarray  # () requests absorbed by the pipeline
+    dV: jnp.ndarray  # () potential change from steering this tick
 
 
 class SimResult(NamedTuple):
-    queue_timeline: np.ndarray   # (T, m)
-    arrivals: np.ndarray         # (T, m)
-    lat_pred: np.ndarray         # (T, m)
-    d_timeline: np.ndarray       # (T,)
+    queue_timeline: np.ndarray  # (T, m)
+    arrivals: np.ndarray  # (T, m)
+    lat_pred: np.ndarray  # (T, m)
+    d_timeline: np.ndarray  # (T,)
     delta_l_timeline: np.ndarray
-    pressure: np.ndarray         # (T,)
-    steered: np.ndarray          # (T,)
-    eligible: np.ndarray         # (T,)
-    cache_hits: np.ndarray       # (T,)
+    pressure: np.ndarray  # (T,)
+    steered: np.ndarray  # (T,)
+    eligible: np.ndarray  # (T,)
+    cache_hits: np.ndarray  # (T,)
     final_cache: Optional[object]
     config: SimConfig
-    f_max_timeline: Optional[np.ndarray] = None   # (T,) bucket cap
+    f_max_timeline: Optional[np.ndarray] = None  # (T,) bucket cap
 
     # ---- paper metrics -------------------------------------------------
     def mean_queue(self) -> float:
@@ -188,19 +209,179 @@ class SimResult(NamedTuple):
 
     def latency_quantiles(self, qs=(50, 99)) -> Tuple[float, ...]:
         """Arrival-weighted request latency quantiles (ms)."""
-        lat = self.lat_pred.reshape(-1)
-        w = self.arrivals.reshape(-1)
-        if w.sum() <= 0:
-            return tuple(0.0 for _ in qs)
-        order = np.argsort(lat)
-        lat, w = lat[order], w[order]
-        cum = np.cumsum(w) / w.sum()
-        # fp rounding can leave cum[-1] < 1.0, pushing searchsorted past the
-        # last index — clip.
-        last = lat.size - 1
-        return tuple(
-            float(lat[min(int(np.searchsorted(cum, q / 100.0)), last)])
-            for q in qs)
+        return telemetry.weighted_quantiles(self.lat_pred, self.arrivals, qs)
+
+
+# ---------------------------------------------------------------------------
+# Streaming summary metrics (metrics="summary")
+# ---------------------------------------------------------------------------
+
+
+class SummaryAcc(NamedTuple):
+    """O(m) accumulators carried through the tick scan instead of a
+    stacked (T, m) ``TickOut`` timeline (DESIGN.md §9)."""
+
+    n_ticks: jnp.ndarray  # () int32
+    queue_sum: jnp.ndarray  # (m,) per-server queue-length sums
+    queue_max: jnp.ndarray  # ()
+    cv_sum: jnp.ndarray  # () sum of instantaneous CV over ok ticks
+    cv_count: jnp.ndarray  # () number of ok ticks
+    queue_hist: telemetry.HistSketch  # all (t, server) queue samples
+    lat_hist: telemetry.HistSketch  # lat_pred weighted by arrivals
+    arrivals: jnp.ndarray  # ()
+    steered: jnp.ndarray  # ()
+    eligible: jnp.ndarray  # ()
+    cache_hits: jnp.ndarray  # ()
+
+
+def _summary_init(m: int) -> SummaryAcc:
+    z = jnp.zeros((), jnp.float32)
+    return SummaryAcc(
+        n_ticks=jnp.zeros((), jnp.int32),
+        queue_sum=jnp.zeros((m,), jnp.float32),
+        queue_max=z,
+        cv_sum=z,
+        cv_count=z,
+        queue_hist=telemetry.make_hist(),
+        lat_hist=telemetry.make_hist(),
+        arrivals=z,
+        steered=z,
+        eligible=z,
+        cache_hits=z,
+    )
+
+
+def _summary_update(acc: SummaryAcc, out: TickOut) -> SummaryAcc:
+    L = out.L
+    mu = jnp.mean(L)
+    ok = mu > 1e-9
+    cv = jnp.where(ok, jnp.std(L) / jnp.where(ok, mu, 1.0), 0.0)
+    return SummaryAcc(
+        n_ticks=acc.n_ticks + 1,
+        queue_sum=acc.queue_sum + L,
+        queue_max=jnp.maximum(acc.queue_max, jnp.max(L)),
+        cv_sum=acc.cv_sum + cv,
+        cv_count=acc.cv_count + ok.astype(jnp.float32),
+        queue_hist=telemetry.hist_add(acc.queue_hist, L, jnp.ones_like(L)),
+        lat_hist=telemetry.hist_add(acc.lat_hist, out.lat_pred, out.arrivals),
+        arrivals=acc.arrivals + jnp.sum(out.arrivals),
+        steered=acc.steered + out.steered,
+        eligible=acc.eligible + out.eligible,
+        cache_hits=acc.cache_hits + out.cache_hits,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SummaryResult:
+    """Streaming summary of one (policy, workload, seed) run.
+
+    Exposes the same paper-metric API as :class:`SimResult` so benchmark
+    code is agnostic to ``metrics=``.  Mean / max / dispersion are exact
+    up to fp accumulation order; worst-case and latency quantiles come
+    from :class:`telemetry.HistSketch` (bin-resolution approximations).
+    The parity contract — a summary row equals :func:`summarize` of the
+    corresponding full-timeline row — is tested in tests/test_engine.py.
+    """
+
+    n_ticks: int
+    queue_sum: np.ndarray  # (m,)
+    queue_max_v: float
+    cv_sum: float
+    cv_count: float
+    queue_hist: np.ndarray  # (HIST_BINS + 2,)
+    lat_hist: np.ndarray  # (HIST_BINS + 2,)
+    arrivals_total: float
+    steered_total: float
+    eligible_total: float
+    cache_hits_total: float
+    config: SimConfig
+
+    # ---- paper metrics (SimResult-compatible) --------------------------
+    def mean_queue(self) -> float:
+        n = max(self.n_ticks * self.queue_sum.shape[0], 1)
+        return float(self.queue_sum.sum() / n)
+
+    def max_queue(self) -> float:
+        return float(self.queue_max_v)
+
+    def worst_case_queue(self, q: float = 99.9) -> float:
+        return telemetry.hist_quantile(self.queue_hist, q)
+
+    def dispersion(self) -> float:
+        """CV of per-server time-averaged queue length (paper §VI-C)."""
+        per_server = self.queue_sum / max(self.n_ticks, 1)
+        mu = per_server.mean()
+        if mu < 1e-9:
+            return 0.0
+        return float(per_server.std() / mu)
+
+    def dispersion_t(self) -> float:
+        """Time-average of instantaneous CV across servers."""
+        if self.cv_count <= 0:
+            return 0.0
+        return float(self.cv_sum / self.cv_count)
+
+    def latency_quantiles(self, qs=(50, 99)) -> Tuple[float, ...]:
+        """Arrival-weighted latency quantiles (ms), sketch resolution."""
+        return tuple(telemetry.hist_quantile(self.lat_hist, q) for q in qs)
+
+
+def _to_summary(cfg: SimConfig, acc: SummaryAcc) -> SummaryResult:
+    """Host-side SummaryResult from a (device or host) SummaryAcc."""
+    return SummaryResult(
+        n_ticks=int(acc.n_ticks),
+        queue_sum=np.asarray(acc.queue_sum),
+        queue_max_v=float(acc.queue_max),
+        cv_sum=float(acc.cv_sum),
+        cv_count=float(acc.cv_count),
+        queue_hist=np.asarray(acc.queue_hist.counts),
+        lat_hist=np.asarray(acc.lat_hist.counts),
+        arrivals_total=float(acc.arrivals),
+        steered_total=float(acc.steered),
+        eligible_total=float(acc.eligible),
+        cache_hits_total=float(acc.cache_hits),
+        config=cfg,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _reduce_ticks(m: int, outs: TickOut) -> SummaryAcc:
+    """Fold a stacked (T, ...) TickOut through the summary accumulators —
+    the same per-tick updates the streaming mode applies in-scan."""
+
+    def step(acc, out):
+        return _summary_update(acc, out), None
+
+    acc, _ = jax.lax.scan(step, _summary_init(m), outs)
+    return acc
+
+
+def summarize(result: SimResult) -> SummaryResult:
+    """Post-hoc reduction of a full-timeline result through the SAME
+    streaming accumulators as ``metrics="summary"`` — the reference side
+    of the summary parity contract (tests/test_engine.py)."""
+    T, m = result.queue_timeline.shape
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    zeros = jnp.zeros((T,), jnp.float32)
+    outs = TickOut(
+        L=f32(result.queue_timeline),
+        arrivals=f32(result.arrivals),
+        lat_pred=f32(result.lat_pred),
+        d=jnp.zeros((T,), jnp.int32),
+        delta_l=zeros,
+        f_max=zeros,
+        pressure=zeros,
+        steered=f32(result.steered),
+        eligible=f32(result.eligible),
+        cache_hits=f32(result.cache_hits),
+        dV=zeros,
+    )
+    return _to_summary(result.config, jax.device_get(_reduce_ticks(m, outs)))
+
+
+# ---------------------------------------------------------------------------
+# The tick: middleware pipeline -> wave-scanned routing -> dynamics
+# ---------------------------------------------------------------------------
 
 
 def _middlewares(cfg: SimConfig) -> Tuple[mw_lib.Middleware, ...]:
@@ -210,107 +391,254 @@ def _middlewares(cfg: SimConfig) -> Tuple[mw_lib.Middleware, ...]:
 def _knob_view(cfg: SimConfig, ctrl: ctl.ControlState) -> ControlKnobs:
     """Control knobs as policies see them, with stability-mechanism
     ablations (benchmarks/ablations.py) applied uniformly."""
-    delta_l = (jnp.zeros(()) if "no_margin" in cfg.ablate else ctrl.delta_l)
-    delta_t = (jnp.zeros(()) - 1e9 if "no_margin" in cfg.ablate
-               else ctrl.delta_t)
-    f_max = (jnp.ones(()) if "no_bucket" in cfg.ablate else ctrl.f_max)
+    delta_l = jnp.zeros(()) if "no_margin" in cfg.ablate else ctrl.delta_l
+    delta_t = (
+        jnp.zeros(()) - 1e9 if "no_margin" in cfg.ablate else ctrl.delta_t
+    )
+    f_max = jnp.ones(()) if "no_bucket" in cfg.ablate else ctrl.f_max
     pin_ms = 0.0 if "no_pin" in cfg.ablate else ctl.PIN_C_MS
-    return ControlKnobs(d=ctrl.d, delta_l=delta_l, delta_t=delta_t,
-                        f_max=f_max, pin_ms=pin_ms)
+    return ControlKnobs(
+        d=ctrl.d, delta_l=delta_l, delta_t=delta_t, f_max=f_max, pin_ms=pin_ms
+    )
 
 
-def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
-          mws: Tuple[mw_lib.Middleware, ...], state: SimState,
-          inputs) -> Tuple[SimState, TickOut]:
-    keys, mask, is_write = inputs
-    now_ms = state.tick.astype(jnp.float32) * cfg.dt_ms
+def _wave_split(cfg: SimConfig, x):
+    """Reshape a (..., R) batch into (..., G, R/G) routing waves.
+
+    Legacy: G = n_groups contiguous waves.  Fleet: one wave per proxy —
+    wave g holds slots r ≡ g (mod P), served by proxy (g + tick) % P to
+    match fleet.proxy_assign.  Works on one tick's (R,) vector or a whole
+    (T, R) grid — the scan engine hoists the key split (and the feasible
+    gather on it) out of the tick loop entirely.
+    """
+    R = x.shape[-1]
+    G = cfg.P if cfg.fleet_routing else cfg.n_groups
+    pad = (-R) % G
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    if cfg.fleet_routing:
+        xg = xp.reshape(xp.shape[:-1] + (-1, G))
+        return jnp.swapaxes(xg, -1, -2)
+    return xp.reshape(xp.shape[:-1] + (G, -1))
+
+
+def _wave_counts(m: int, mask, assign) -> jnp.ndarray:
+    """(m,) routed-arrival counts of one wave (masked scatter-add)."""
+    sink = jnp.where(mask, assign, 0)
+    return jnp.zeros((m,), jnp.float32).at[sink].add(
+        jnp.where(mask, 1.0, 0.0)
+    )
+
+
+# Trace counter for the wave-scan body: increments once per (re)trace of
+# the body — NOT once per wave — letting tests assert that trace size
+# stays O(1) in n_groups/P (the unrolled reference executes its loop body
+# G times per trace instead).
+_WAVE_TRACES = [0]
+
+
+def _route_waves_scan(
+    cfg: SimConfig,
+    ring: hashring.Ring,
+    policy: policy_lib.Policy,
+    state: SimState,
+    knobs: ControlKnobs,
+    t,
+    now_ms,
+    r_route,
+    keysg,
+    maskg,
+    feasg,
+):
+    """Route a tick's G waves as one ``jax.lax.scan`` over waves.
+
+    Hoisted out of the wave loop: the feasible sets (ONE batched
+    ``hashring.feasible_set`` gather over the whole horizon, riding the
+    tick scan's inputs), the per-wave RNG keys (vmapped fold_in —
+    bitwise identical to the unrolled engine's per-wave fold_in), and,
+    in fleet mode, the wave-rotation gather of per-proxy telemetry views
+    (fleet.wave_views).  The wave carry threads the policy state, the
+    within-tick own-sends accumulator, and the RouteStats sum.
+    """
+    G = keysg.shape[0]
+    rngs = jax.vmap(lambda g: jax.random.fold_in(r_route, g))(jnp.arange(G))
+
+    def wave(carry, xs):
+        _WAVE_TRACES[0] += 1
+        ps, sent, stats = carry
+        if cfg.fleet_routing:
+            k, mk, feas, rng, L_view = xs
+        else:
+            k, mk, feas, rng = xs
+            # own sends this tick on top of the stale EWMA view
+            L_view = state.L_hat + sent
+        ctx = RouteContext(
+            keys=k,
+            mask=mk,
+            feas=feas,
+            L_view=L_view,
+            p50_view=state.p50_hat,
+            knobs=knobs,
+            now_ms=now_ms,
+            rng=rng,
+            m=cfg.m,
+            fixed_d=cfg.fixed_d,
+        )
+        ps, assign, st = policy.route(ps, ctx)
+        counts = _wave_counts(cfg.m, mk, assign)
+        return (ps, sent + counts, stats + st), None
+
+    xs = (keysg, maskg, feasg, rngs)
+    if cfg.fleet_routing:
+        # each proxy routes from its OWN staggered telemetry view, with
+        # no within-tick sharing across proxies
+        xs = xs + (fleet_lib.wave_views(state.L_hat_p, t),)
+    init = (
+        state.policy,
+        jnp.zeros((cfg.m,), jnp.float32),
+        RouteStats.zeros(),
+    )
+    (ps, arrivals, stats), _ = jax.lax.scan(wave, init, xs)
+    return ps, arrivals, stats
+
+
+def _route_waves_unrolled(
+    cfg: SimConfig,
+    ring: hashring.Ring,
+    policy: policy_lib.Policy,
+    state: SimState,
+    knobs: ControlKnobs,
+    t,
+    now_ms,
+    r_route,
+    keysg,
+    maskg,
+):
+    """Reference engine: the pre-scan Python loop over waves, O(G) trace
+    size, per-wave feasible-set gathers and fold_ins.  Kept for the
+    bit-for-bit parity contract and as the E10 "before" baseline."""
+    G = keysg.shape[0]
+    ps = state.policy
+    arrivals = jnp.zeros((cfg.m,), jnp.float32)
+    stats = RouteStats.zeros()
+    for g in range(G):
+        if cfg.fleet_routing:
+            L_view = state.L_hat_p[(g + t) % G]
+        else:
+            L_view = state.L_hat + arrivals
+        ctx = RouteContext(
+            keys=keysg[g],
+            mask=maskg[g],
+            feas=hashring.feasible_set(ring, keysg[g], cfg.d_max),
+            L_view=L_view,
+            p50_view=state.p50_hat,
+            knobs=knobs,
+            now_ms=now_ms,
+            rng=jax.random.fold_in(r_route, g),
+            m=cfg.m,
+            fixed_d=cfg.fixed_d,
+        )
+        ps, assign, st = policy.route(ps, ctx)
+        arrivals = arrivals + _wave_counts(cfg.m, maskg[g], assign)
+        stats = stats + st
+    return ps, arrivals, stats
+
+
+def _tick(
+    cfg: SimConfig,
+    ring: hashring.Ring,
+    policy: policy_lib.Policy,
+    mws: Tuple[mw_lib.Middleware, ...],
+    state: SimState,
+    inputs,
+) -> Tuple[SimState, TickOut]:
+    # ``t`` rides the scan's xs (an unbatched arange) rather than the
+    # carried state: under the sweep's vmap a carried counter would be
+    # batched, degrading every ``lax.cond`` below to a both-branches
+    # ``select`` — with t unbatched the fast/slow cadence work really
+    # runs only on its cadence, even inside vmapped sweeps.  The scan
+    # engine additionally receives the tick's pre-gathered feasible sets
+    # (computed for the whole horizon before the scan — keys don't
+    # depend on middleware, so the gather hoists); the unrolled
+    # reference keeps its in-tick per-wave gathers, as pre-PR.
+    if cfg.unroll_waves:
+        t, keys, mask, is_write = inputs
+        feasg = None
+    else:
+        t, feasg, keys, mask, is_write = inputs
+    now_ms = t.astype(jnp.float32) * cfg.dt_ms
     rng, r_mw, r_route = jax.random.split(state.rng, 3)
     state = state._replace(rng=rng)
 
-    # --- middleware pipeline: stages may absorb requests at the proxy -----
+    # --- middleware pipeline: stages may absorb requests at the proxy ----
     absorbed = jnp.zeros((), jnp.float32)
     mw_states = list(state.mw)
     for i, mw in enumerate(mws):
-        batch = mw_lib.BatchView(keys=keys, mask=mask, is_write=is_write,
-                                 now_ms=now_ms,
-                                 rng=jax.random.fold_in(r_mw, i))
+        batch = mw_lib.BatchView(
+            keys=keys,
+            mask=mask,
+            is_write=is_write,
+            now_ms=now_ms,
+            rng=jax.random.fold_in(r_mw, i),
+        )
         mw_states[i], mask, took = mw.on_batch(mw_states[i], batch, cfg)
         absorbed = absorbed + took
     state = state._replace(mw=tuple(mw_states))
 
-    # --- route in waves ---------------------------------------------------
-    # Legacy: n_groups sequential waves, later waves seeing earlier waves'
-    # own assignments (a proxy knows what it already sent).  Fleet: one
-    # wave per proxy — wave g holds slots r ≡ g (mod P), served by proxy
-    # (g + tick) % P to match fleet.proxy_assign — each routing from its
-    # OWN staggered telemetry view with no within-tick sharing:
-    # independent proxies cannot see each other's sends until telemetry
-    # reports them.
-    R = keys.shape[0]
-    if cfg.fleet_routing:
-        G = cfg.P
-        pad = (-R) % G
-        keysg = jnp.pad(keys, (0, pad)).reshape(-1, G).T
-        maskg = jnp.pad(mask, (0, pad)).reshape(-1, G).T
-    else:
-        G = cfg.n_groups
-        pad = (-R) % G
-        keysg = jnp.pad(keys, (0, pad)).reshape(G, -1)
-        maskg = jnp.pad(mask, (0, pad)).reshape(G, -1)
-
+    # --- route in waves (scan engine; unrolled reference on request) -----
+    keysg = _wave_split(cfg, keys)
+    maskg = _wave_split(cfg, mask)
     knobs = _knob_view(cfg, state.ctrl)
-    ps = state.policy
-    L_self = jnp.zeros((cfg.m,), jnp.float32)   # own sends this tick
-    arrivals = jnp.zeros((cfg.m,), jnp.float32)
-    steered = jnp.zeros((), jnp.float32)
-    eligible = jnp.zeros((), jnp.float32)
-    dV = jnp.zeros((), jnp.float32)
-    for g in range(G):
-        # fleet: wave g holds slots r ≡ g (mod P), which fleet_cache
-        # serves as proxy (g + tick) % P — rotate to that proxy's view
-        if cfg.fleet_routing:
-            L_view = state.L_hat_p[(g + state.tick) % G]
-        else:
-            L_view = state.L_hat + L_self
-        ctx = RouteContext(
-            keys=keysg[g], mask=maskg[g],
-            feas=hashring.feasible_set(ring, keysg[g], cfg.d_max),
-            L_view=L_view, p50_view=state.p50_hat,
-            knobs=knobs, now_ms=now_ms,
-            rng=jax.random.fold_in(r_route, g),
-            m=cfg.m, fixed_d=cfg.fixed_d)
-        ps, assign, stats = policy.route(ps, ctx)
-        counts = jnp.zeros((cfg.m,), jnp.float32).at[
-            jnp.where(maskg[g], assign, 0)].add(
-            jnp.where(maskg[g], 1.0, 0.0))
-        L_self = L_self + counts
-        arrivals = arrivals + counts
-        steered = steered + stats.steered
-        eligible = eligible + stats.eligible
-        dV = dV + stats.dV
+    if cfg.unroll_waves:
+        ps, arrivals, stats = _route_waves_unrolled(
+            cfg, ring, policy, state, knobs, t, now_ms, r_route, keysg, maskg
+        )
+    else:
+        ps, arrivals, stats = _route_waves_scan(
+            cfg,
+            ring,
+            policy,
+            state,
+            knobs,
+            t,
+            now_ms,
+            r_route,
+            keysg,
+            maskg,
+            feasg,
+        )
     state = state._replace(policy=ps)
 
     # --- queue dynamics: constant-rate servers, work-conserving ----------
     L = state.L + arrivals
     served = jnp.minimum(L, cfg.serve_per_tick)
     L = L - served
-    lat_pred = (state.L + arrivals) * cfg.service_ms  # wait of a new arrival
+    lat_pred = (state.L + arrivals) * cfg.service_ms  # wait of new arrival
 
-    state = state._replace(L=L, tick=state.tick + 1)
+    state = state._replace(L=L)
+    t1 = t + 1  # post-tick clock, the cadence the control loops count on
 
     # --- telemetry ingest + fast control (every T_fast) ------------------
-    is_fast = (state.tick % cfg.t_fast_ticks) == 0
+    is_fast = (t1 % cfg.t_fast_ticks) == 0
     sketch = telemetry.sketch_add(state.sketch, lat_pred)
-    p50_o, p99_o = telemetry.sketch_quantiles(sketch)
 
     if cfg.fleet_routing:
         # per-proxy views: each proxy polls on its own staggered phase, so
         # the P views carry genuinely different staleness at any instant
-        state = state._replace(L_hat_p=telemetry.ewma_staggered(
-            state.L_hat_p, state.L, state.tick, cfg.t_fast_ticks,
-            ctl.ALPHA_FAST))
+        state = state._replace(
+            L_hat_p=telemetry.ewma_staggered(
+                state.L_hat_p,
+                state.L,
+                t1,
+                cfg.t_fast_ticks,
+                ctl.ALPHA_FAST,
+            )
+        )
 
     def ingest(s: SimState) -> SimState:
+        # quantile extraction (a per-server sort) lives INSIDE the fast
+        # branch: with t unbatched the sort really runs once per fast
+        # interval, not every tick
+        p50_o, p99_o = telemetry.sketch_quantiles(s.sketch)
         if cfg.fleet_routing:
             # one control loop fed by the fleet's consensus view
             L_hat = ctl.consensus_view(s.L_hat_p)
@@ -319,8 +647,9 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
         p50 = telemetry.ewma(s.p50_hat, p50_o, ctl.ALPHA_FAST)
         p99 = telemetry.ewma(s.p99_hat, p99_o, ctl.ALPHA_FAST)
         B = telemetry.imbalance(L_hat)
-        jit = jax.random.uniform(jax.random.fold_in(s.rng, 3), (),
-                                 minval=-1.0, maxval=1.0)
+        jit = jax.random.uniform(
+            jax.random.fold_in(s.rng, 3), (), minval=-1.0, maxval=1.0
+        )
         ctrl = ctl.fast_update(s.ctrl, B, jnp.max(p99), cfg.rtt_ms, jit)
         return s._replace(L_hat=L_hat, p50_hat=p50, p99_hat=p99, ctrl=ctrl)
 
@@ -328,28 +657,37 @@ def _tick(cfg: SimConfig, ring: hashring.Ring, policy: policy_lib.Policy,
     state = jax.lax.cond(is_fast, ingest, lambda s: s, state)
 
     if mws:
-        is_slow = (state.tick % cfg.t_slow_ticks) == 0
+        is_slow = (t1 % cfg.t_slow_ticks) == 0
 
         def slow(s: SimState) -> SimState:
-            return s._replace(mw=tuple(
-                mw.on_slow(ms, cfg) for mw, ms in zip(mws, s.mw)))
+            return s._replace(
+                mw=tuple(mw.on_slow(ms, cfg) for mw, ms in zip(mws, s.mw))
+            )
 
         state = jax.lax.cond(is_slow, slow, lambda s: s, state)
 
-    out = TickOut(L=L, arrivals=arrivals, lat_pred=lat_pred,
-                  d=state.ctrl.d, delta_l=state.ctrl.delta_l,
-                  f_max=state.ctrl.f_max,
-                  pressure=state.ctrl.pressure, steered=steered,
-                  eligible=eligible, cache_hits=absorbed, dV=dV)
+    out = TickOut(
+        L=L,
+        arrivals=arrivals,
+        lat_pred=lat_pred,
+        d=state.ctrl.d,
+        delta_l=state.ctrl.delta_l,
+        f_max=state.ctrl.f_max,
+        pressure=state.ctrl.pressure,
+        steered=stats.steered,
+        eligible=stats.eligible,
+        cache_hits=absorbed,
+        dV=stats.dV,
+    )
     return state, out
 
 
-def init_state(cfg: SimConfig, b_tgt: float = 0.15,
-               p99_tgt: float = 500.0) -> SimState:
-    policy = policy_lib.get(cfg.policy)     # raises with available() names
+def init_state(
+    cfg: SimConfig, b_tgt: float = 0.15, p99_tgt: float = 500.0
+) -> SimState:
+    policy = policy_lib.get(cfg.policy)  # raises with available() names
     ring = hashring.make_ring(cfg.m, cfg.V)
     return SimState(
-        tick=jnp.zeros((), jnp.int32),
         L=jnp.zeros((cfg.m,), jnp.float32),
         L_hat=jnp.zeros((cfg.m,), jnp.float32),
         L_hat_p=jnp.zeros((cfg.P, cfg.m), jnp.float32),
@@ -359,15 +697,34 @@ def init_state(cfg: SimConfig, b_tgt: float = 0.15,
         policy=policy.init(cfg, ring),
         ctrl=ctl.init_control(cfg.rtt_ms, b_tgt, p99_tgt),
         mw=tuple(mw.init(cfg) for mw in _middlewares(cfg)),
-        rng=jax.random.PRNGKey(cfg.seed))
+        rng=jax.random.PRNGKey(cfg.seed),
+    )
+
+
+def _scan_inputs(cfg: SimConfig, ring: hashring.Ring, keys, mask, is_write):
+    """Per-tick scan inputs for one (T, R) workload grid.
+
+    The tick clock is an unbatched arange (see ``_tick``).  For the scan
+    engine, the feasible sets for the ENTIRE horizon are gathered here in
+    one batched call — (T, G, R/G, d_max) riding the scan's xs — so key
+    hashing and the first-occurrence scan leave the per-tick path
+    completely.  The unrolled reference keeps its in-tick gathers.
+    """
+    ticks = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    if cfg.unroll_waves:
+        return (ticks, keys, mask, is_write)
+    feasg = hashring.feasible_set(ring, _wave_split(cfg, keys), cfg.d_max)
+    return (ticks, feasg, keys, mask, is_write)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
     ring = hashring.make_ring(cfg.m, cfg.V)
-    step = functools.partial(_tick, cfg, ring, policy_lib.get(cfg.policy),
-                             _middlewares(cfg))
-    return jax.lax.scan(step, state, (keys, mask, is_write))
+    step = functools.partial(
+        _tick, cfg, ring, policy_lib.get(cfg.policy), _middlewares(cfg)
+    )
+    xs = _scan_inputs(cfg, ring, keys, mask, is_write)
+    return jax.lax.scan(step, state, xs)
 
 
 # Trace counter for _run_scan_sweep: increments only when the sweep scan is
@@ -375,45 +732,86 @@ def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
 _SWEEP_TRACES = [0]
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _run_scan_sweep(cfg: SimConfig, states: SimState, keys, mask, is_write):
-    """Batched scan: ``states`` and the workload grids both carry a leading
-    batch axis (seed × workload combos flattened)."""
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def _run_scan_sweep(
+    cfg: SimConfig,
+    states: SimState,
+    keys,
+    mask,
+    is_write,
+    metrics: str = "full",
+):
+    """Batched scan: ``states`` carries a leading seed axis (S, ...) and
+    the workload grids a leading workload axis (W, T, R).
+
+    The seed axis rides an INNER vmap with the grids held constant
+    (closed over, i.e. ``in_axes=None`` semantics), so per-tick work
+    that does not depend on the seed — key hashing, the batched
+    feasible-set gather — is computed once per workload, not once per
+    (workload, seed) combo, and nothing is ``jnp.repeat``-duplicated.
+    Returns ``(final, outs)`` pytrees with leading (W, S) axes; ``outs``
+    is the stacked TickOut timeline under ``metrics="full"`` and the
+    O(m) :class:`SummaryAcc` under ``"summary"``.
+    """
     _SWEEP_TRACES[0] += 1
     ring = hashring.make_ring(cfg.m, cfg.V)
-    step = functools.partial(_tick, cfg, ring, policy_lib.get(cfg.policy),
-                             _middlewares(cfg))
+    step = functools.partial(
+        _tick, cfg, ring, policy_lib.get(cfg.policy), _middlewares(cfg)
+    )
+
+    def run(st, k, mk, w):
+        # unbatched tick clock + per-workload hoisted feasible sets: both
+        # stay unbatched under the seed vmap (computed once per workload)
+        grids = _scan_inputs(cfg, ring, k, mk, w)
+        if metrics == "summary":
+
+            def tick(carry, xs):
+                s, acc = carry
+                s, out = step(s, xs)
+                return (s, _summary_update(acc, out)), None
+
+            (final, acc), _ = jax.lax.scan(
+                tick, (st, _summary_init(cfg.m)), grids
+            )
+            return final, acc
+        return jax.lax.scan(step, st, grids)
+
     return jax.vmap(
-        lambda st, k, mk, w: jax.lax.scan(step, st, (k, mk, w)))(
-        states, keys, mask, is_write)
+        lambda k, mk, w: jax.vmap(lambda st: run(st, k, mk, w))(states)
+    )(keys, mask, is_write)
 
 
-def warmup(cfg: SimConfig, T: int = 1200, seed: int = 99
-           ) -> Tuple[float, float]:
-    """§III-B: run at ≤30% utilization with no middleware, derive targets."""
+def warmup(
+    cfg: SimConfig, T: int = 1200, seed: int = 99
+) -> Tuple[float, float]:
+    """§III-B: run at ≤30% utilization with no middleware, derive
+    targets."""
     from repro.core.workloads import make_workload
-    wl = make_workload("light", T=T, m=cfg.m, seed=seed, dt_ms=cfg.dt_ms,
-                       service_ms=cfg.service_ms, N=cfg.N)
-    warm_cfg = dataclasses.replace(cfg, policy="hash", cache_enabled=False,
-                                   middleware=())
+
+    wl = make_workload(
+        "light",
+        T=T,
+        m=cfg.m,
+        seed=seed,
+        dt_ms=cfg.dt_ms,
+        service_ms=cfg.service_ms,
+        N=cfg.N,
+    )
+    warm_cfg = dataclasses.replace(
+        cfg, policy="hash", cache_enabled=False, middleware=()
+    )
     st = init_state(warm_cfg)
     _, outs = _run_scan(warm_cfg, st, wl.keys, wl.mask, wl.is_write)
     L = np.asarray(outs.L)
-    # EWMA'd imbalance series, same smoothing as the controller
-    L_hat = np.zeros_like(L)
-    acc = np.zeros(L.shape[1])
-    for t in range(L.shape[0]):
-        acc = (1 - ctl.ALPHA_FAST) * acc + ctl.ALPHA_FAST * L[t]
-        L_hat[t] = acc
+    # EWMA'd imbalance series, same smoothing as the controller —
+    # vectorized closed-form filter (was an O(T) host-side Python loop)
+    L_hat = telemetry.ewma_series(L, ctl.ALPHA_FAST)
     B = L_hat.std(axis=1) / (L_hat.mean(axis=1) + ctl.EPS)
-    lat = np.asarray(outs.lat_pred)
     w = np.asarray(outs.arrivals)
-    flat, fw = lat.reshape(-1), w.reshape(-1)
-    if fw.sum() > 0:
-        order = np.argsort(flat)
-        cum = np.cumsum(fw[order]) / fw.sum()
-        idx = min(int(np.searchsorted(cum, 0.99)), flat.size - 1)  # fp clip
-        p99_warm = float(flat[order][idx])
+    if w.sum() > 0:
+        (p99_warm,) = telemetry.weighted_quantiles(
+            np.asarray(outs.lat_pred), w, (99,)
+        )
     else:
         p99_warm = cfg.service_ms
     b_tgt = float(np.median(B) + 0.05)
@@ -444,7 +842,8 @@ def _to_result(cfg: SimConfig, outs: TickOut, final_cache) -> SimResult:
         cache_hits=np.asarray(outs.cache_hits),
         final_cache=final_cache,
         config=cfg,
-        f_max_timeline=np.asarray(outs.f_max))
+        f_max_timeline=np.asarray(outs.f_max),
+    )
 
 
 def _targets(cfg: SimConfig, do_warmup: bool) -> Tuple[float, float]:
@@ -453,8 +852,9 @@ def _targets(cfg: SimConfig, do_warmup: bool) -> Tuple[float, float]:
     return 0.15, 5.0 * cfg.service_ms
 
 
-def simulate(cfg: SimConfig, wl: Workload,
-             do_warmup: bool = True) -> SimResult:
+def simulate(
+    cfg: SimConfig, wl: Workload, do_warmup: bool = True
+) -> SimResult:
     b_tgt, p99_tgt = _targets(cfg, do_warmup)
     state = init_state(cfg, b_tgt, p99_tgt)
     final, outs = _run_scan(cfg, state, wl.keys, wl.mask, wl.is_write)
@@ -462,71 +862,98 @@ def simulate(cfg: SimConfig, wl: Workload,
 
 
 # per-seed rows for one (policy, workload) combo
-SweepRows = Tuple[SimResult, ...]
+SweepRows = Tuple[Union[SimResult, SummaryResult], ...]
 
 
-def simulate_sweep(cfg: SimConfig, wl: Union[Workload, Sequence[Workload]],
-                   policies: Optional[Tuple[str, ...]] = None,
-                   seeds: Tuple[int, ...] = (0,),
-                   do_warmup: bool = True,
-                   ) -> Union[Dict[str, SweepRows],
-                              Dict[str, Dict[str, SweepRows]]]:
+def simulate_sweep(
+    cfg: SimConfig,
+    wl: Union[Workload, Sequence[Workload]],
+    policies: Optional[Tuple[str, ...]] = None,
+    seeds: Tuple[int, ...] = (0,),
+    do_warmup: bool = True,
+    metrics: str = "full",
+) -> Union[Dict[str, SweepRows], Dict[str, Dict[str, SweepRows]]]:
     """Batched simulation: fan-out over ``policies × workloads × seeds``.
 
     ``wl`` is a single :class:`Workload` or a sequence of them (same grid
-    shape, e.g. built under one set of ``make_workload`` params).  For each
-    policy the scan is traced and compiled exactly once: seeds *and*
-    workload grids are batched onto a leading ``vmap`` axis — the grids
-    ride along as scan inputs, so sweeping the whole scenario registry
-    costs one compile per policy (per-seed/per-workload ``simulate`` calls
-    would each retrace, since ``cfg.seed`` is static).
+    shape, e.g. built under one set of ``make_workload`` params).  For
+    each policy the scan is traced and compiled exactly once: workload
+    grids ride an outer ``vmap`` axis and seeds an inner one that shares
+    the grids (so seed-independent work — key hashing, the feasible-set
+    gather — runs once per workload; per-seed/per-workload ``simulate``
+    calls would each retrace, since ``cfg.seed`` is static).
 
-    Returns ``{policy: (SimResult per seed, ...)}`` for a single workload
-    (the legacy shape) and ``{policy: {workload_name: (SimResult per seed,
-    ...)}}`` for a sequence; per-combo results match individual
+    ``metrics="full"`` (default) returns :class:`SimResult` rows with
+    complete (T, m) timelines.  ``metrics="summary"`` carries O(m)
+    streaming accumulators through the scan instead and returns
+    :class:`SummaryResult` rows — same paper-metric API, sweep memory
+    O(B·m) instead of O(B·T·m), which is what lets E8/E9-scale matrices
+    run many seeds per cell (DESIGN.md §9).
+
+    Returns ``{policy: (row per seed, ...)}`` for a single workload (the
+    legacy shape) and ``{policy: {workload_name: (row per seed, ...)}}``
+    for a sequence; per-combo full-metrics results match individual
     ``simulate`` runs.
     """
     single = isinstance(wl, Workload)
     wls: Tuple[Workload, ...] = (wl,) if single else tuple(wl)
     if not wls:
         raise ValueError("simulate_sweep needs at least one workload")
+    if metrics not in METRICS_MODES:
+        raise ValueError(
+            f"unknown metrics mode {metrics!r}; available: "
+            f"{', '.join(METRICS_MODES)}"
+        )
     shapes = {w.keys.shape for w in wls}
     if len(shapes) > 1:
-        raise ValueError(f"simulate_sweep workloads must share one grid "
-                         f"shape; got {sorted(shapes)}")
+        raise ValueError(
+            f"simulate_sweep workloads must share one grid "
+            f"shape; got {sorted(shapes)}"
+        )
     wl_names = [w.name for w in wls]
     if len(set(wl_names)) != len(wl_names):
-        raise ValueError(f"simulate_sweep workload names must be unique; "
-                         f"got {wl_names}")
+        raise ValueError(
+            f"simulate_sweep workload names must be unique; "
+            f"got {wl_names}"
+        )
     names = tuple(policies) if policies is not None else (cfg.policy,)
     seeds = tuple(seeds)
     if not seeds:
         raise ValueError("simulate_sweep needs at least one seed")
-    S, W = len(seeds), len(wls)
-    # grids batched workload-major: combo b = i_wl * S + i_seed
-    keys = jnp.repeat(jnp.stack([w.keys for w in wls]), S, axis=0)
-    mask = jnp.repeat(jnp.stack([w.mask for w in wls]), S, axis=0)
-    is_write = jnp.repeat(jnp.stack([w.is_write for w in wls]), S, axis=0)
+    # (W, T, R) grids — shared across the seed axis, never duplicated
+    keys = jnp.stack([w.keys for w in wls])
+    mask = jnp.stack([w.mask for w in wls])
+    is_write = jnp.stack([w.is_write for w in wls])
     results: Dict[str, dict] = {}
     for name in names:
         pcfg = dataclasses.replace(cfg, policy=name)
         b_tgt, p99_tgt = _targets(pcfg, do_warmup)
-        per_seed = [init_state(dataclasses.replace(pcfg, seed=s),
-                               b_tgt, p99_tgt) for s in seeds]
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                         *per_seed)
-        states = jax.tree_util.tree_map(
-            lambda x: jnp.tile(x, (W,) + (1,) * (x.ndim - 1)), stacked)
-        final, outs = _run_scan_sweep(pcfg, states, keys, mask, is_write)
-        per_wl: Dict[str, Tuple[SimResult, ...]] = {}
+        per_seed = [
+            init_state(dataclasses.replace(pcfg, seed=s), b_tgt, p99_tgt)
+            for s in seeds
+        ]
+        states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_seed)
+        final, outs = _run_scan_sweep(
+            pcfg, states, keys, mask, is_write, metrics
+        )
+        # one transfer for the whole sweep, sliced on host — per-combo
+        # device slicing used to issue B × fields tiny transfers
+        outs = jax.device_get(outs)
+        if metrics == "full":
+            final = jax.device_get(final)
+        per_wl: Dict[str, SweepRows] = {}
         for j, w in enumerate(wls):
             rows = []
             for i, s in enumerate(seeds):
-                b = j * S + i
-                outs_b = jax.tree_util.tree_map(lambda x: x[b], outs)
-                final_b = jax.tree_util.tree_map(lambda x: x[b], final)
-                rows.append(_to_result(dataclasses.replace(pcfg, seed=s),
-                                       outs_b, _final_cache(pcfg, final_b)))
+                scfg = dataclasses.replace(pcfg, seed=s)
+                row = jax.tree_util.tree_map(lambda x: x[j, i], outs)
+                if metrics == "summary":
+                    rows.append(_to_summary(scfg, row))
+                else:
+                    final_b = jax.tree_util.tree_map(lambda x: x[j, i], final)
+                    rows.append(
+                        _to_result(scfg, row, _final_cache(pcfg, final_b))
+                    )
             per_wl[w.name] = tuple(rows)
         results[name] = per_wl[wls[0].name] if single else per_wl
     return results

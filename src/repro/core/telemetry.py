@@ -1,20 +1,94 @@
-"""Telemetry: EWMA smoothing and windowed latency sketches (p50/p99).
+"""Telemetry: EWMA smoothing, latency sketches, streaming accumulators.
 
 Proxies observe *server-reported* telemetry — in-flight queue length and
 recent latency quantiles — with at most one fast-interval of delay (paper
-§IV-E assumption 1).  The sketch is a per-server ring buffer of recent
-latency observations; quantiles are computed over the valid window.
+§IV-E assumption 1).  The windowed :class:`LatencySketch` is a per-server
+ring buffer of recent latency observations; quantiles are computed over
+the valid window.
+
+Three helpers back the engine's hot path (DESIGN.md §9):
+
+* :class:`HistSketch` — a fixed-bin log-histogram that accumulates
+  weighted samples in O(bins) memory and answers arbitrary quantiles
+  post-hoc; the accumulator behind ``simulate_sweep(metrics="summary")``.
+* :func:`weighted_quantiles` — the one exact arrival-weighted quantile
+  implementation (host-side), shared by ``SimResult`` and warmup (both
+  previously carried their own copy of the same fp-clip workaround).
+* :func:`ewma_series` — a vectorized closed-form EWMA filter over a
+  timeline, replacing the O(T) Python loop that dominated warmup
+  wall-time on long horizons.
 """
+
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import functools
+from typing import NamedTuple, Sequence, Tuple
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def ewma(prev: jnp.ndarray, x: jnp.ndarray, alpha: float) -> jnp.ndarray:
     """x̂_t = (1-α)·x̂_{t-1} + α·x_t   (paper eq., α=0.2 fast loop)."""
     return (1.0 - alpha) * prev + alpha * x
+
+
+def ewma_series(x: np.ndarray, alpha: float, block: int = 512) -> np.ndarray:
+    """EWMA-smooth a (T, ...) series along axis 0 (host-side, float64).
+
+    Closed form per block: with decay ρ = 1-α and p_t = ρ^(t+1),
+    x̂_t = p_t · (x̂_init + Σ_{j≤t} α·x_j / p_j), so one cumsum replaces
+    the per-step recurrence.  Blocks bound the rescaling's dynamic range
+    to ρ^(-block); contributions older than a block have decayed by the
+    same factor they are scaled by, so relative precision is preserved
+    for any horizon.  Starts from x̂ = 0, like the controller.
+    """
+    x = np.asarray(x, np.float64)
+    if x.ndim == 0 or x.shape[0] == 0:
+        return x.copy()
+    rho = 1.0 - alpha
+    if rho <= 0.0:
+        return alpha * x
+    # keep ρ^block well above the float64 underflow floor: past it the
+    # rescale divides by 0 and poisons the tail with inf/NaN (fast-decay
+    # alphas like 0.9 would underflow ρ^512)
+    block = min(block, max(int(-575.0 / np.log(rho)), 1))
+    out = np.empty_like(x)
+    acc = np.zeros(x.shape[1:], np.float64)
+    for s in range(0, x.shape[0], block):
+        xb = x[s : s + block]
+        n = xb.shape[0]
+        p = rho ** np.arange(1, n + 1, dtype=np.float64)
+        pb = p.reshape((n,) + (1,) * (x.ndim - 1))
+        out[s : s + n] = pb * (acc + np.cumsum(alpha * xb / pb, axis=0))
+        acc = out[s + n - 1]
+    return out
+
+
+def weighted_quantiles(
+    values: np.ndarray, weights: np.ndarray, qs: Sequence[float]
+) -> Tuple[float, ...]:
+    """Exact weight-CDF quantiles of ``values`` (host-side numpy).
+
+    Sorts by value and returns, for each q, the first value whose
+    normalized cumulative weight reaches q/100.  fp rounding can leave
+    the final cumulative weight below 1.0, which would push
+    ``searchsorted`` past the last index — clip (regression-tested).
+    Zero (or negative) total weight returns 0.0 for every q.
+    """
+    v = np.asarray(values, np.float64).reshape(-1)
+    w = np.asarray(weights, np.float64).reshape(-1)
+    total = w.sum()
+    if total <= 0:
+        return tuple(0.0 for _ in qs)
+    order = np.argsort(v, kind="stable")
+    v, w = v[order], w[order]
+    cum = np.cumsum(w) / total
+    last = v.size - 1
+    return tuple(
+        float(v[min(int(np.searchsorted(cum, q / 100.0)), last)])
+        for q in qs
+    )
 
 
 def staggered_phases(P: int, period_ticks: int) -> jnp.ndarray:
@@ -26,9 +100,13 @@ def staggered_phases(P: int, period_ticks: int) -> jnp.ndarray:
     return (jnp.arange(P, dtype=jnp.int32) * period_ticks) // P
 
 
-def ewma_staggered(views: jnp.ndarray, obs: jnp.ndarray,
-                   tick: jnp.ndarray, period_ticks: int,
-                   alpha: float) -> jnp.ndarray:
+def ewma_staggered(
+    views: jnp.ndarray,
+    obs: jnp.ndarray,
+    tick: jnp.ndarray,
+    period_ticks: int,
+    alpha: float,
+) -> jnp.ndarray:
     """Update the (P, m) per-proxy EWMA views: proxy p ingests ``obs``
     only on its own staggered phase this tick; other views keep aging."""
     P = views.shape[0]
@@ -37,15 +115,17 @@ def ewma_staggered(views: jnp.ndarray, obs: jnp.ndarray,
 
 
 class LatencySketch(NamedTuple):
-    buf: jnp.ndarray    # (m, K) float32 latency observations (ms)
-    idx: jnp.ndarray    # () int32 next write slot (shared across servers)
+    buf: jnp.ndarray  # (m, K) float32 latency observations (ms)
+    idx: jnp.ndarray  # () int32 next write slot (shared across servers)
     count: jnp.ndarray  # () int32 total observations so far
 
 
 def make_sketch(m: int, K: int = 64) -> LatencySketch:
-    return LatencySketch(buf=jnp.zeros((m, K), jnp.float32),
-                         idx=jnp.zeros((), jnp.int32),
-                         count=jnp.zeros((), jnp.int32))
+    return LatencySketch(
+        buf=jnp.zeros((m, K), jnp.float32),
+        idx=jnp.zeros((), jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+    )
 
 
 def sketch_add(sk: LatencySketch, obs: jnp.ndarray) -> LatencySketch:
@@ -81,3 +161,65 @@ def sketch_quantiles(sk: LatencySketch) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def imbalance(L_hat: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     """B(t) = std(L̂)/(mean(L̂)+ε)  — the paper's smoothed imbalance."""
     return jnp.std(L_hat) / (jnp.mean(L_hat) + eps)
+
+
+# ---------------------------------------------------------------------------
+# Streaming histogram sketch (metrics="summary" accumulator)
+# ---------------------------------------------------------------------------
+
+HIST_BINS = 512
+HIST_LO = 1e-2
+HIST_HI = 1e6
+
+
+@functools.lru_cache(maxsize=None)
+def _hist_edges() -> np.ndarray:
+    """Log-spaced bin edges shared by every sketch (host constant)."""
+    return np.geomspace(HIST_LO, HIST_HI, HIST_BINS + 1)
+
+
+class HistSketch(NamedTuple):
+    """Streaming weighted histogram over a fixed log-spaced grid.
+
+    ``counts[0]`` is the underflow bin (values ≤ HIST_LO, including the
+    exact zeros a queue timeline is full of; represented as 0.0) and
+    ``counts[-1]`` the overflow bin.  Memory is O(HIST_BINS) no matter
+    how many samples stream through, which is what lets a sweep carry
+    its quantiles instead of materializing (T, m) timelines.  Quantile
+    answers are bin-resolution approximations (geometric bin midpoints,
+    ≤ ~2% relative error over the 8-decade range); the exact reference
+    is :func:`weighted_quantiles` over a full timeline.
+    """
+
+    counts: jnp.ndarray  # (HIST_BINS + 2,) float32 weighted bin counts
+
+
+def make_hist() -> HistSketch:
+    return HistSketch(counts=jnp.zeros((HIST_BINS + 2,), jnp.float32))
+
+
+def hist_add(
+    sk: HistSketch, values: jnp.ndarray, weights: jnp.ndarray
+) -> HistSketch:
+    """Scatter-add ``weights`` at the bins of ``values`` (any shape)."""
+    edges = jnp.asarray(_hist_edges())
+    b = jnp.searchsorted(edges, values.reshape(-1), side="right")
+    counts = sk.counts.at[b].add(weights.reshape(-1).astype(jnp.float32))
+    return HistSketch(counts=counts)
+
+
+def hist_quantile(counts: np.ndarray, q: float) -> float:
+    """Approximate weight-CDF quantile from sketch counts (host-side):
+    the geometric midpoint of the first bin whose cumulative weight
+    reaches q/100.  Zero total weight returns 0.0."""
+    counts = np.asarray(counts, np.float64)
+    total = counts.sum()
+    if total <= 0:
+        return 0.0
+    edges = _hist_edges()
+    reps = np.concatenate(
+        ([0.0], np.sqrt(edges[:-1] * edges[1:]), [edges[-1]])
+    )
+    cum = np.cumsum(counts)
+    idx = int(np.searchsorted(cum, (q / 100.0) * total))
+    return float(reps[min(idx, reps.size - 1)])

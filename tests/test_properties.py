@@ -131,3 +131,43 @@ def test_ttl_never_exceeds_lease_or_cap(writes):
                                lease_remaining_ms=lease)
     assert float(c2.ttl_ms) <= min(lease, cache_lib.TTL_CAP_MS) + 1e-3
     assert float(c2.ttl_ms) >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Engine parity (DESIGN.md §9): scan-over-waves == unrolled reference
+# ---------------------------------------------------------------------------
+
+_PARITY_WL = None
+
+
+def _parity_wl():
+    global _PARITY_WL
+    if _PARITY_WL is None:
+        from repro.core import make_workload
+        _PARITY_WL = make_workload("bursty", T=40, m=4, seed=9, N=128)
+    return _PARITY_WL
+
+
+@given(policy=st.sampled_from(("round_robin", "uniform", "power_of_d",
+                               "midas", "jsq", "chbl")),
+       mw=st.sampled_from(((), ("cache",), ("fleet_cache",))),
+       n_groups=st.sampled_from((1, 3, 8)),
+       fleet=st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_wave_scan_parity_any_policy_middleware(policy, mw, n_groups,
+                                                fleet):
+    """Bit-for-bit: the wave scan equals the unrolled Python loop for any
+    (policy, middleware chain, wave count, routing mode) draw."""
+    import dataclasses
+
+    from repro.core import SimConfig, simulate
+    cfg = SimConfig(m=4, N=128, P=4, policy=policy, middleware=mw,
+                    n_groups=n_groups, fleet_routing=fleet, gossip_ms=50.0)
+    ref = dataclasses.replace(cfg, unroll_waves=True)
+    wl = _parity_wl()
+    a = simulate(cfg, wl, do_warmup=False)
+    b = simulate(ref, wl, do_warmup=False)
+    np.testing.assert_array_equal(a.queue_timeline, b.queue_timeline)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.steered, b.steered)
+    np.testing.assert_array_equal(a.cache_hits, b.cache_hits)
