@@ -5,6 +5,14 @@ self-stabilizing guards and measure what breaks.
               violates the Lyapunov condition, expect steering churn
   no_pin    — re-evaluate every request (C = 0); expect key flapping
   no_bucket — uncapped steering (f_max = 1); expect steering bursts
+
+``SimConfig.ablate`` resolves to the controller-registry ablation
+decorators (``controllers.wrap_ablations``): the configured controller's
+dynamics run untouched while the knob view it EMITS has the named
+mechanism removed — ablations compose with any registered controller,
+not just the default hysteresis loop (sim.py no longer special-cases
+them).  The full control-plane ablation — no adaptive loop at all — is
+``SimConfig(controller="static")``, reported by E4's stability matrix.
 """
 from __future__ import annotations
 

@@ -1,31 +1,145 @@
-"""E4 — self-stabilizing control loop under bursty load: knob bounds,
-oscillation rate, Lyapunov ΔV of admitted steers, steering-cap compliance."""
+"""E4 — the controller × scenario stability matrix.
+
+The paper's §IV-E stability story, measured across the whole controller
+registry instead of a single hardcoded loop: every registered controller
+(`hysteresis` reference, `aimd`, `deadband_pid`, `static` baseline) runs
+the full MIDAS stack over composed scenarios, one batched
+``simulate_sweep`` per controller (scenarios and seeds ride the vmapped
+scan — ONE compile per controller), under ``metrics="summary"``, whose
+:class:`repro.core.sim.KnobTrace` ys keep the knob trajectories that
+stability metrics need without materializing (T, m) timelines.
+
+Per (controller, scenario) cell:
+  * oscillation_per_min — d-knob flips per minute (the paper's measure);
+  * settle_ms           — LAST pressure onset to the last knob change
+                          (anchored on the final burst so recurring-burst
+                          scenarios don't saturate at the horizon);
+  * knob_churn          — mean per-tick |Δknob| / range, summed knobs;
+  * steer_rate / f_max_mean / f_max_granted / cap_utilization —
+                          aggregate steering vs the time-mean and peak
+                          cap; ``cap_compliant`` checks the sound
+                          aggregate bound (steered/eligible ≤ peak
+                          f_max).  The exact per-window leaky-bucket
+                          invariant needs full timelines and is
+                          asserted in tests/test_core_sim.py;
+  * mean_queue / worst_case_queue — what stability buys.
+
+The §III-B warmup targets are controller-independent (warmup runs the
+``hash`` policy bare), so they are derived ONCE and shared across every
+cell via ``simulate_sweep(..., targets=...)`` — one warmup compile for
+the whole matrix instead of one per controller.
+
+Emits ``experiments/sim/control_matrix.json`` incrementally (the doc is
+rewritten after every controller, so a CI timeout still uploads a valid
+partial artifact) plus CSV rows.
+"""
 from __future__ import annotations
+
+import json
+from pathlib import Path
 
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import SimConfig, make_workload, simulate
+from repro.core import (SimConfig, controllers, make_workload,
+                        simulate_sweep)
+from repro.core.sim import warmup
+
+T = 1200           # 60 s at dt=50 ms — several burst/storm cycles
+M = 8
+SEEDS = (0, 1, 2, 3)
+POLICY = "midas"
+MIDDLEWARE = ("cache",)
+SCENARIOS = ("bursty", "rename_storm", "flash_crowd", "job_startup")
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
+DT_MS = 50.0
+
+
+def _cell(rows) -> dict:
+    """Seed-averaged stability + queue metrics for one (ctrl, scenario)."""
+    stats = [
+        controllers.trajectory_stats(
+            r.d_timeline, r.delta_l_timeline, r.f_max_timeline,
+            r.pressure, DT_MS)
+        for r in rows
+    ]
+    steered = float(np.sum([r.steered_total for r in rows]))
+    eligible = float(max(np.sum([r.eligible_total for r in rows]), 1.0))
+    f_granted = float(np.max([r.f_max_timeline.max() for r in rows]))
+    f_mean = float(np.mean([r.f_max_timeline.mean() for r in rows]))
+    steer_rate = steered / eligible
+    return {
+        "oscillation_per_min": round(
+            float(np.mean([s["oscillation_per_min"] for s in stats])), 2),
+        "settle_ms": round(
+            float(np.mean([s["settle_ms"] for s in stats])), 0),
+        "knob_churn": round(
+            float(np.mean([s["knob_churn"] for s in stats])), 5),
+        "settled_frac": round(
+            float(np.mean([s["settled"] for s in stats])), 2),
+        "steer_rate": round(steer_rate, 4),
+        "f_max_mean": round(f_mean, 4),
+        "f_max_granted": round(f_granted, 2),
+        "cap_utilization": round(steer_rate / max(f_mean, 1e-9), 3),
+        "cap_compliant": bool(steer_rate <= f_granted + 1e-3),
+        "mean_queue": round(
+            float(np.mean([r.mean_queue() for r in rows])), 3),
+        "worst_case_queue": round(
+            float(np.mean([r.worst_case_queue() for r in rows])), 2),
+        "pressure_p99": round(
+            float(np.mean(
+                [np.percentile(r.pressure, 99) for r in rows])), 3),
+    }
 
 
 def run() -> None:
-    wl = make_workload("bursty", T=3000, m=8, seed=5)
-    cfg = SimConfig(m=8, policy="midas", middleware=("cache",),
-                    cache_mode="lease")
-    res, us = timed(simulate, cfg, wl)
-    d = res.d_timeline
-    flips = int(np.sum(np.abs(np.diff(d)) > 0))
-    minutes = 3000 * 0.05 / 60
-    steered, eligible = res.steered.sum(), max(res.eligible.sum(), 1)
-    emit("control/knob_bounds", us,
-         f"d_in[{d.min()},{d.max()}];dL_in[{res.delta_l_timeline.min():.0f},"
-         f"{res.delta_l_timeline.max():.0f}] (paper: d 1-4, dL 2-8)")
-    emit("control/oscillation", 0.0,
-         f"d_flips_per_min={flips / minutes:.1f}")
-    f = res.f_max_timeline
-    emit("control/steering_cap", 0.0,
-         f"steered/eligible={steered / eligible:.3f} "
-         f"(adaptive f_max in [{f.min():.2f},{f.max():.2f}], "
-         f"floor 0.10)")
-    emit("control/pressure_p99", 0.0,
-         f"{np.percentile(res.pressure, 99):.3f}")
+    OUT.mkdir(parents=True, exist_ok=True)
+    ctrl_names = controllers.available()
+    wls = [make_workload(n, T=T, m=M, seed=0) for n in SCENARIOS]
+    # one §III-B warmup for the whole matrix (controller-independent)
+    targets, warm_us = timed(
+        warmup, SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE)
+    )
+    emit("control/warmup_targets", warm_us,
+         f"b_tgt={targets[0]:.3f};p99_tgt={targets[1]:.1f}ms (shared)")
+    doc = {
+        "T": T, "m": M, "dt_ms": DT_MS, "seeds": list(SEEDS),
+        "policy": POLICY, "middleware": list(MIDDLEWARE),
+        "controllers": list(ctrl_names), "scenarios": list(SCENARIOS),
+        "knob_specs": [
+            {"name": s.name, "lo": s.lo, "hi": s.hi, "init": s.init,
+             "step": s.step}
+            for s in controllers.KNOB_SPECS
+        ],
+        "cells": {},
+    }
+    path = OUT / "control_matrix.json"
+    for ctrl in ctrl_names:
+        cfg = SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE,
+                        controller=ctrl)
+        # scenarios × seeds batched onto one compiled sweep per
+        # controller; summary metrics carry the knob trajectories
+        sweep, us = timed(simulate_sweep, cfg, wls, policies=(POLICY,),
+                          seeds=SEEDS, metrics="summary",
+                          targets=targets)
+        doc["cells"][ctrl] = {
+            name: _cell(rows) for name, rows in sweep[POLICY].items()
+        }
+        # incremental artifact: a timeout still leaves valid JSON
+        path.write_text(json.dumps(doc, indent=1))
+        for name in SCENARIOS:
+            c = doc["cells"][ctrl][name]
+            emit(f"control/{ctrl}/{name}", us,
+                 f"osc/min={c['oscillation_per_min']};"
+                 f"settle_ms={c['settle_ms']:.0f};"
+                 f"churn={c['knob_churn']};"
+                 f"cap_ok={int(c['cap_compliant'])};"
+                 f"mean_q={c['mean_queue']}")
+
+    # headline: stability across the registry under the storm scenario
+    for ctrl in ctrl_names:
+        c = doc["cells"][ctrl]["rename_storm"]
+        emit(f"control/summary/{ctrl}", 0.0,
+             f"rename_storm: osc/min={c['oscillation_per_min']} "
+             f"settle={c['settle_ms']:.0f}ms churn={c['knob_churn']} "
+             f"mean_q={c['mean_queue']}")

@@ -118,7 +118,7 @@ def _legacy_sweep(cfg: SimConfig, states, tick0, keys, mask, is_write):
     ring = hashring.make_ring(cfg.m, cfg.V)
     step = functools.partial(
         sim_lib._tick, cfg, ring, policy_lib.get(cfg.policy),
-        sim_lib._middlewares(cfg))
+        sim_lib._middlewares(cfg), sim_lib._controller(cfg))
 
     def one(st, t0, k, mk, w):
         def body(carry, xs):

@@ -6,10 +6,12 @@
 #
 # Routing policies live in the pluggable registry (repro.core.policies);
 # batch stages such as the cooperative cache compose via the middleware
-# pipeline (repro.core.middleware).  See DESIGN.md for the API.
-from repro.core import (cache, control, fleet, hashring,  # noqa: F401
-                        middleware, policies, routing, sim, telemetry,
-                        theory, workloads)
+# pipeline (repro.core.middleware); control-plane implementations live
+# in the controller registry (repro.core.controllers — control.py is the
+# pre-PR5 migration shim).  See DESIGN.md for the API.
+from repro.core import (cache, control, controllers,  # noqa: F401
+                        fleet, hashring, middleware, policies, routing,
+                        sim, telemetry, theory, workloads)
 from repro.core.sim import (SimConfig, SimResult,  # noqa: F401
                             SummaryResult, simulate, simulate_sweep,
                             summarize)

@@ -289,8 +289,17 @@ def slow_update(
     rtt_ms: float,
     lease_remaining_ms: float = jnp.inf,
     p_star: float = P_STAR,
+    ttl_scale=1.0,
 ) -> CacheState:
-    """T_slow retune of the aggregate TTL from the hazard estimator."""
+    """T_slow retune of the aggregate TTL from the hazard estimator.
+
+    ``ttl_scale`` is the controller-emitted TTL multiplier
+    (``Knobs.ttl_scale``, bounds in ``controllers.KNOB_SPECS``): the
+    hazard estimator owns the horizon, the control plane scales it —
+    applied before the transport floor/cap so a shrinking controller
+    can never push a TTL below one RTT.  The default (1.0) is exact
+    identity.
+    """
     n_cached = jnp.maximum(jnp.sum(cache.cached_version >= 0), 1)
     rate = cache.win_writes / n_cached / window_ms  # invalidations/entry/ms
     hazard = (1.0 - BETA) * cache.hazard + BETA * rate
@@ -301,6 +310,7 @@ def slow_update(
     wf = cache.win_writes / n_events
     write_frac = (1.0 - BETA) * cache.write_frac + BETA * wf
     ttl = jnp.where(write_frac > W_HIGH, ttl * GAMMA, ttl)
+    ttl = ttl * ttl_scale  # controller slow-loop retune (Knobs.ttl_scale)
     ttl = jnp.clip(ttl, rtt_ms, TTL_CAP_MS)  # transport floor: >= one RTT
     zf = jnp.zeros((), jnp.float32)
     return cache._replace(

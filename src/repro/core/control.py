@@ -1,55 +1,112 @@
-"""The MIDAS self-stabilizing control plane (paper §IV-E, Algorithm 1).
+"""Migration shim — the control plane now lives in ``repro.core.controllers``.
 
-Fast loop (every T_fast=250 ms): ingest telemetry, smooth with EWMA α=0.2,
-compute imbalance B and pressure
-    P = w1·[B − B_tgt]₊ + w2·[p̃99 − P99_tgt]₊,
-and under hysteresis (H↓=0.02 < H↑=0.10, K↑=3, K↓=8) move knobs in single
-bounded steps:  d ∈ {1..4},  Δ_L ∈ [Δ_L^min=2, Δ_L^max=8].
+The §IV-E fast/slow control loop used to be this module: a monolithic
+hysteresis update with module-level constants and an ad-hoc
+``ControlState`` that sim.py, the policies, and the cache all reached
+into.  PR 5 refactored it into the controller registry
+(``repro.core.controllers``): a ``Controller`` protocol with a typed
+``Knobs``/``KnobSpec`` schema and ``Signals`` telemetry bundle, the
+paper's hysteresis law migrated verbatim as the reference
+implementation (``controllers/hysteresis.py``), and ``aimd`` /
+``deadband_pid`` / ``static`` registered alongside it.
 
-Slow loop (every T_slow=30 s): retune per-class cache TTLs from the
-invalidation-hazard estimate (see cache.py).
-
-Targets come from a low-utilization warmup (§III-B):
-    B_tgt   = median_t B(t) + 0.05
-    P99_tgt = max(1.25 · p99_warm, RTT + 2 ms)
+Everything historical is re-exported here unchanged — constants, the
+legacy flat ``ControlState``, ``init_control`` / ``fast_update`` (thin
+adapters over the registered hysteresis controller), the pressure /
+warmup / consensus / Lyapunov helpers — so pre-PR5 call sites keep
+working bit-for-bit.  New code should import from
+``repro.core.controllers`` directly.
 """
+
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax.numpy as jnp
 
-# Paper defaults (Algorithm 1 lines 1–20)
-T_FAST_MS = 250.0
-T_SLOW_MS = 30_000.0
-D_INIT, D_MIN, D_MAX = 2, 1, 4
-DELTA_L_INIT, DELTA_L_MIN, DELTA_L_MAX = 4.0, 2.0, 8.0
-H_DOWN, H_UP = 0.02, 0.10
-K_UP, K_DOWN = 3, 8
-F_CAP = 0.10
-F_MAX_HIGH = 1.0
-W_WINDOW_MS = 1000.0
-PIN_C_MS = 300.0
-W1, W2 = 1.0, 1.0
-EPS = 1e-6
-ALPHA_FAST = 0.2
-BETA_SLOW = 0.1
+from repro.core.controllers import base as _base
+from repro.core.controllers import hysteresis as _hyst
+from repro.core.controllers.base import (  # noqa: F401
+    ALPHA_FAST,
+    BETA_SLOW,
+    D_INIT,
+    D_MAX,
+    D_MIN,
+    DELTA_L_INIT,
+    DELTA_L_MAX,
+    DELTA_L_MIN,
+    EPS,
+    F_CAP,
+    F_MAX_HIGH,
+    PIN_C_MS,
+    T_FAST_MS,
+    T_SLOW_MS,
+    W_WINDOW_MS,
+    W1,
+    W2,
+    lyapunov_delta_v,
+    lyapunov_potential,
+    warmup_targets,
+)
+from repro.core.controllers.hysteresis import (  # noqa: F401
+    H_DOWN,
+    H_UP,
+    K_DOWN,
+    K_UP,
+)
 
 
 class ControlState(NamedTuple):
-    d: jnp.ndarray            # () int32 in {1..4}
-    delta_l: jnp.ndarray      # () float32 in [2, 8]
-    delta_t: jnp.ndarray      # () float32 ms latency margin
-    f_max: jnp.ndarray        # () float32 steering cap
-    above_cnt: jnp.ndarray    # () int32 consecutive P > H_up
-    below_cnt: jnp.ndarray    # () int32 consecutive P < H_down
-    b_tgt: jnp.ndarray        # () float32
-    p99_tgt: jnp.ndarray      # () float32 ms
-    pressure: jnp.ndarray     # () float32 (last computed, for logging)
+    """Legacy flat control state (pre-registry layout)."""
+
+    d: jnp.ndarray  # () int32 in {1..4}
+    delta_l: jnp.ndarray  # () float32 in [2, 8]
+    delta_t: jnp.ndarray  # () float32 ms latency margin
+    f_max: jnp.ndarray  # () float32 steering cap
+    above_cnt: jnp.ndarray  # () int32 consecutive P > H_up
+    below_cnt: jnp.ndarray  # () int32 consecutive P < H_down
+    b_tgt: jnp.ndarray  # () float32
+    p99_tgt: jnp.ndarray  # () float32 ms
+    pressure: jnp.ndarray  # () float32 (last computed, for logging)
 
 
-def init_control(rtt_ms: float, b_tgt: float = 0.15,
-                 p99_tgt: float = 500.0) -> ControlState:
+def _to_registry(ctrl: ControlState) -> _base.ControlState:
+    """Legacy flat layout -> registry ControlState (hysteresis inner)."""
+    knobs = _base.init_knobs(0.0)._replace(
+        d=ctrl.d,
+        delta_l=ctrl.delta_l,
+        delta_t=ctrl.delta_t,
+        f_max=ctrl.f_max,
+    )
+    return _base.ControlState(
+        knobs=knobs,
+        b_tgt=ctrl.b_tgt,
+        p99_tgt=ctrl.p99_tgt,
+        pressure=ctrl.pressure,
+        inner=_hyst.HysteresisInner(
+            above_cnt=ctrl.above_cnt, below_cnt=ctrl.below_cnt
+        ),
+    )
+
+
+def _from_registry(st: _base.ControlState) -> ControlState:
+    k = st.knobs
+    return ControlState(
+        d=k.d,
+        delta_l=k.delta_l,
+        delta_t=k.delta_t,
+        f_max=k.f_max,
+        above_cnt=st.inner.above_cnt,
+        below_cnt=st.inner.below_cnt,
+        b_tgt=st.b_tgt,
+        p99_tgt=st.p99_tgt,
+        pressure=st.pressure,
+    )
+
+
+def init_control(
+    rtt_ms: float, b_tgt: float = 0.15, p99_tgt: float = 500.0
+) -> ControlState:
     return ControlState(
         d=jnp.asarray(D_INIT, jnp.int32),
         delta_l=jnp.asarray(DELTA_L_INIT, jnp.float32),
@@ -63,80 +120,29 @@ def init_control(rtt_ms: float, b_tgt: float = 0.15,
     )
 
 
-def consensus_view(views_p: jnp.ndarray) -> jnp.ndarray:
-    """Collapse (P, m) per-proxy telemetry views into the single view the
-    one control loop consumes (fleet mode).  The paper runs one logical
-    controller over P proxies' reports; the mean is its consensus — each
-    proxy's staleness phase shifts the aggregate, it does not fork the
-    loop."""
-    return jnp.mean(views_p, axis=0)
+def consensus_view(
+    views_p: jnp.ndarray, reducer: str = "mean"
+) -> jnp.ndarray:
+    """See :func:`repro.core.controllers.consensus_view` (now reducer-
+    configurable via ``SimConfig.consensus``)."""
+    return _base.consensus_view(views_p, reducer)
 
 
-def warmup_targets(B_series: jnp.ndarray, p99_warm: jnp.ndarray,
-                   rtt_ms: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """§III-B target selection from the warmup window."""
-    b_tgt = jnp.median(B_series) + 0.05
-    p99_tgt = jnp.maximum(p99_warm * 1.25, rtt_ms + 2.0)
-    return b_tgt, p99_tgt
+def pressure_score(
+    B: jnp.ndarray, p99: jnp.ndarray, ctrl: ControlState
+) -> jnp.ndarray:
+    return _base.pressure_score(B, p99, ctrl.b_tgt, ctrl.p99_tgt)
 
 
-def pressure_score(B: jnp.ndarray, p99: jnp.ndarray,
-                   ctrl: ControlState) -> jnp.ndarray:
-    relu = lambda z: jnp.maximum(z, 0.0)
-    # p99 pressure normalized by target so both terms are O(1)
-    return (W1 * relu(B - ctrl.b_tgt)
-            + W2 * relu((p99 - ctrl.p99_tgt) / jnp.maximum(ctrl.p99_tgt, EPS)))
-
-
-def fast_update(ctrl: ControlState, B: jnp.ndarray, p99: jnp.ndarray,
-                rtt_ms: float, jitter: jnp.ndarray) -> ControlState:
-    """One fast-loop knob update (Alg. 1 lines 26–35).
-
-    ``jitter`` is uniform in [-1, 1]; applied as ±0.1·RTT on Δ_t to avoid
-    lockstep moves across proxies.
-
-    The steering bucket cap ``f_max`` moves with the same hysteresis as
-    d/Δ_L: a bounded multiplicative step (×2 up, ×½ down) inside
-    [F_CAP, F_MAX_HIGH].  A fixed cap deadlocks under write-hot storms —
-    writes are uncacheable, so when mutations dominate, the only relief
-    valve is steering, and pinning 90% of hot-key traffic to its primary
-    (f_max = 0.10 forever) is exactly the E8 rename_storm collapse.  Under
-    calm load K_DOWN shrinks the cap back, restoring the paper's 10%
-    churn bound.
-    """
-    P = pressure_score(B, p99, ctrl)
-    above = jnp.where(P > H_UP, ctrl.above_cnt + 1, 0)
-    below = jnp.where(P < H_DOWN, ctrl.below_cnt + 1, 0)
-
-    go_up = above >= K_UP
-    go_down = below >= K_DOWN
-
-    d = jnp.where(go_up, jnp.minimum(ctrl.d + 1, D_MAX),
-                  jnp.where(go_down, jnp.maximum(ctrl.d - 1, D_MIN), ctrl.d))
-    delta_l = jnp.where(
-        go_up, jnp.maximum(ctrl.delta_l - 1.0, DELTA_L_MIN),
-        jnp.where(go_down, jnp.minimum(ctrl.delta_l + 1.0, DELTA_L_MAX),
-                  ctrl.delta_l))
-    f_max = jnp.where(
-        go_up, jnp.minimum(ctrl.f_max * 2.0, F_MAX_HIGH),
-        jnp.where(go_down, jnp.maximum(ctrl.f_max * 0.5, F_CAP),
-                  ctrl.f_max))
-    # reset the counter that fired
-    above = jnp.where(go_up, 0, above)
-    below = jnp.where(go_down, 0, below)
-
-    delta_t = jnp.asarray(rtt_ms, jnp.float32) + 0.1 * rtt_ms * jitter
-
-    return ctrl._replace(d=d, delta_l=delta_l, delta_t=delta_t, f_max=f_max,
-                         above_cnt=above, below_cnt=below, pressure=P)
-
-
-def lyapunov_delta_v(L: jnp.ndarray, p: jnp.ndarray,
-                     j: jnp.ndarray) -> jnp.ndarray:
-    """ΔV for moving one request p→j:  2(L̂_j − L̂_p) + 2  (paper eq. 2)."""
-    return 2.0 * (L[j] - L[p]) + 2.0
-
-
-def lyapunov_potential(L: jnp.ndarray) -> jnp.ndarray:
-    """V(L̂) = Σ_i (L̂_i − L̄)²."""
-    return jnp.sum((L - jnp.mean(L)) ** 2)
+def fast_update(
+    ctrl: ControlState,
+    B: jnp.ndarray,
+    p99: jnp.ndarray,
+    rtt_ms: float,
+    jitter: jnp.ndarray,
+) -> ControlState:
+    """One fast-loop knob update (Alg. 1 lines 26-35) — delegates to the
+    registered ``hysteresis`` controller on the legacy flat state."""
+    sig = _base.make_signals(B=B, p99=p99, jitter=jitter, rtt_ms=rtt_ms)
+    st, _ = _hyst.Hysteresis().fast(_to_registry(ctrl), sig)
+    return _from_registry(st)

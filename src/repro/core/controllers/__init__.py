@@ -1,0 +1,141 @@
+"""Pluggable control-plane registry for the MIDAS middleware pipeline.
+
+The simulator resolves ``SimConfig.controller`` through this registry —
+there is no controller-name branching in ``sim.py`` — so third-party
+control laws plug in without touching the engine.  A complete
+registration looks like this (~15 lines):
+
+    import jax.numpy as jnp
+    from repro.core import controllers
+
+    @controllers.register("bang_bang")
+    class BangBang(controllers.Controller):
+        '''Max aggressiveness whenever pressure is positive, else min.'''
+
+        def fast(self, state, sig):
+            P = controllers.pressure_score(
+                sig.B, sig.p99, state.b_tgt, state.p99_tgt)
+            hot = P > 0.0
+            knobs = state.knobs._replace(
+                d=jnp.where(hot, controllers.D_MAX,
+                            controllers.D_MIN).astype(jnp.int32),
+                f_max=jnp.where(hot, controllers.F_MAX_HIGH,
+                                controllers.F_CAP))
+            state = state._replace(knobs=knobs, pressure=P)
+            return state, self.view(state)
+
+    # SimConfig(controller="bang_bang") now works everywhere:
+    # simulate(), simulate_sweep(), the E4 stability matrix, examples.
+
+Stateful controllers override ``init_inner(cfg)`` and thread their
+pytree through ``fast``/``slow`` (see ``hysteresis.py``); ablation
+decorators (``wrap_ablations``) mask the emitted knob view without
+touching dynamics.  ``available()`` lists everything registered;
+unknown names raise a ``ValueError`` naming the alternatives.  Every
+registered controller must keep its knobs inside their ``KnobSpec``
+bounds and must not sustain a limit cycle under constant load — both
+are enforced registry-wide by hypothesis properties in
+``tests/test_core_controllers.py``.
+"""
+
+from repro.core.controllers.base import (
+    ABLATIONS,
+    ALPHA_FAST,
+    BETA_SLOW,
+    D_INIT,
+    D_MAX,
+    D_MIN,
+    DELTA_L_INIT,
+    DELTA_L_MAX,
+    DELTA_L_MIN,
+    EPS,
+    F_CAP,
+    F_MAX_HIGH,
+    KNOB_SPECS,
+    PIN_C_MS,
+    T_FAST_MS,
+    T_SLOW_MS,
+    TTL_SCALE_MAX,
+    TTL_SCALE_MIN,
+    W_WINDOW_MS,
+    W1,
+    W2,
+    Ablated,
+    ControlState,
+    Controller,
+    KnobSpec,
+    Knobs,
+    Signals,
+    available,
+    clip_knobs,
+    consensus_view,
+    get,
+    get_class,
+    init_knobs,
+    lyapunov_delta_v,
+    lyapunov_potential,
+    make_signals,
+    parse_ablations,
+    pressure_score,
+    register,
+    spec,
+    trajectory_stats,
+    unregister,
+    warmup_targets,
+    wrap_ablations,
+)
+
+# Built-in controllers self-register on import.
+from repro.core.controllers import (  # noqa: F401, E402
+    aimd,
+    deadband_pid,
+    hysteresis,
+    static,
+)
+
+__all__ = [
+    "ABLATIONS",
+    "ALPHA_FAST",
+    "BETA_SLOW",
+    "Ablated",
+    "ControlState",
+    "Controller",
+    "D_INIT",
+    "D_MAX",
+    "D_MIN",
+    "DELTA_L_INIT",
+    "DELTA_L_MAX",
+    "DELTA_L_MIN",
+    "EPS",
+    "F_CAP",
+    "F_MAX_HIGH",
+    "KNOB_SPECS",
+    "KnobSpec",
+    "Knobs",
+    "PIN_C_MS",
+    "Signals",
+    "T_FAST_MS",
+    "T_SLOW_MS",
+    "TTL_SCALE_MAX",
+    "TTL_SCALE_MIN",
+    "W_WINDOW_MS",
+    "W1",
+    "W2",
+    "available",
+    "clip_knobs",
+    "consensus_view",
+    "get",
+    "get_class",
+    "init_knobs",
+    "lyapunov_delta_v",
+    "lyapunov_potential",
+    "make_signals",
+    "parse_ablations",
+    "pressure_score",
+    "register",
+    "spec",
+    "trajectory_stats",
+    "unregister",
+    "warmup_targets",
+    "wrap_ablations",
+]

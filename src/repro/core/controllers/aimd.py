@@ -1,0 +1,75 @@
+"""AIMD controller: additive-increase / multiplicative-decrease on one
+aggressiveness axis.
+
+The congestion-control classic mapped onto the MIDAS knob schema: the
+controller carries a single scalar ``a ∈ [0, 1]`` ("routing
+aggressiveness").  While the pressure score is positive, ``a`` ramps
+*additively* (+AI per fast tick); the moment pressure clears, ``a``
+collapses *multiplicatively* (×MD) — probe gently, back off hard, the
+inverse of hysteresis' fast-escalate / slow-release asymmetry.  Knobs
+derive declaratively from ``a`` along each spec's range:
+
+    d       = round(D_MIN     + a·(D_MAX − D_MIN))
+    Δ_L     = Δ_L_MAX         − a·(Δ_L_MAX − Δ_L_MIN)
+    f_max   = F_CAP           + a·(F_MAX_HIGH − F_CAP)
+
+so bounds hold by construction, and under constant load ``a`` converges
+(to the clamp under sustained pressure, geometrically to 0 when calm) —
+no sustained limit cycle.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.controllers import base
+from repro.core.controllers.base import (
+    ControlState,
+    Controller,
+    Knobs,
+    Signals,
+    register,
+)
+
+AI = 0.05  # additive aggressiveness step per pressured fast tick
+MD = 0.5  # multiplicative back-off once pressure clears
+
+
+def _knobs_from_axis(k: Knobs, a: jnp.ndarray, rtt_ms: float) -> Knobs:
+    """Affine map from the aggressiveness axis to every routing knob."""
+    d = jnp.round(
+        base.D_MIN + a * (base.D_MAX - base.D_MIN)
+    ).astype(jnp.int32)
+    delta_l = base.DELTA_L_MAX - a * (base.DELTA_L_MAX - base.DELTA_L_MIN)
+    f_max = base.F_CAP + a * (base.F_MAX_HIGH - base.F_CAP)
+    return k._replace(
+        d=d,
+        delta_l=delta_l.astype(jnp.float32),
+        delta_t=jnp.asarray(rtt_ms, jnp.float32),
+        f_max=f_max.astype(jnp.float32),
+    )
+
+
+@register("aimd")
+class Aimd(Controller):
+    """Probe additively under pressure, back off multiplicatively."""
+
+    def init_inner(self, cfg) -> jnp.ndarray:
+        return jnp.zeros((), jnp.float32)  # the aggressiveness axis a
+
+    def fast(
+        self, state: ControlState, sig: Signals
+    ) -> Tuple[ControlState, Knobs]:
+        P = base.pressure_score(sig.B, sig.p99, state.b_tgt, state.p99_tgt)
+        a = jnp.where(P > 0.0, state.inner + AI, state.inner * MD)
+        a = jnp.clip(a, 0.0, 1.0)
+        state = state._replace(
+            knobs=base.clip_knobs(
+                _knobs_from_axis(state.knobs, a, sig.rtt_ms)
+            ),
+            pressure=P,
+            inner=a,
+        )
+        return state, self.view(state)

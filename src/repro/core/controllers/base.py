@@ -1,0 +1,456 @@
+"""Controller protocol, knob/signal schema, and the controller registry.
+
+A *controller* is the control-plane stage of the MIDAS middleware: on the
+paper's fast cadence (T_fast = 250 ms) it ingests a :class:`Signals`
+bundle — the smoothed telemetry every proxy already maintains — and emits
+a :class:`Knobs` bundle, the single typed contract every knob consumer
+reads: the engine threads it through the scan carry, ``RouteContext``
+exposes it to routing policies, the cooperative cache's slow-loop TTL
+retune consumes ``ttl_scale``, and the fleet's consensus path feeds the
+per-proxy views it is computed from.  Controllers register by name and
+are selected with ``SimConfig(controller="name")``; the simulator never
+branches on controller names.
+
+Protocol
+--------
+``Controller.init(cfg, targets) -> ControlState`` builds the carried
+pytree: the knob bundle at its spec inits, the §III-B targets, and an
+``inner`` pytree the controller owns (hysteresis counters, integrators —
+``init_inner`` is the hook).  ``fast(state, signals) -> (state, Knobs)``
+runs one fast-loop update; ``slow(state, signals) -> (state, Knobs)``
+runs on the T_slow cadence (default: no-op).  ``view(state) -> Knobs``
+is the bundle consumers actually see each tick — ablation decorators
+(:func:`wrap_ablations`) override it to mask out a stability mechanism
+while leaving the controller's dynamics untouched, which is exactly what
+the §IV-E ablation study measures.
+
+Scan contract (DESIGN.md §9): all three hooks execute inside the jitted
+tick scan, so ``ControlState`` must keep a stable pytree structure, and
+``fast``/``slow`` must be pure.  Knob values must stay inside their
+:class:`KnobSpec` bounds — a registry-wide hypothesis property enforces
+this, along with freedom from sustained limit cycles under constant load
+(tests/test_core_controllers.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple, Type
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import telemetry
+
+# Paper cadences and shared control constants (Algorithm 1 lines 1-20).
+T_FAST_MS = 250.0
+T_SLOW_MS = 30_000.0
+W_WINDOW_MS = 1000.0
+PIN_C_MS = 300.0
+W1, W2 = 1.0, 1.0
+EPS = 1e-6
+ALPHA_FAST = 0.2
+BETA_SLOW = 0.1
+
+# Knob bound constants (paper §IV-E); the declarative source of truth is
+# KNOB_SPECS below — these names survive for formula-level readability.
+D_INIT, D_MIN, D_MAX = 2, 1, 4
+DELTA_L_INIT, DELTA_L_MIN, DELTA_L_MAX = 4.0, 2.0, 8.0
+F_CAP = 0.10
+F_MAX_HIGH = 1.0
+TTL_SCALE_MIN, TTL_SCALE_MAX = 0.25, 4.0
+
+
+class KnobSpec(NamedTuple):
+    """Declarative schema of one control knob: bounds, init, step rule."""
+
+    name: str
+    lo: float
+    hi: float
+    init: Optional[float]  # None: derived from config (delta_t <- rtt_ms)
+    step: str  # human-readable step rule (docs, E4 tables)
+    dtype: Any = jnp.float32
+
+
+class Knobs(NamedTuple):
+    """The typed knob bundle — one field per :class:`KnobSpec`, same
+    order.  Every consumer of control output reads this contract."""
+
+    d: jnp.ndarray  # () int32 sample width in {1..4}
+    delta_l: jnp.ndarray  # () float32 queue margin
+    delta_t: jnp.ndarray  # () float32 latency margin (ms)
+    f_max: jnp.ndarray  # () float32 steering-bucket cap
+    pin_ms: jnp.ndarray  # () float32 pin duration C (ms)
+    ttl_scale: jnp.ndarray  # () float32 slow-loop TTL multiplier
+
+
+KNOB_SPECS: Tuple[KnobSpec, ...] = (
+    KnobSpec("d", D_MIN, D_MAX, D_INIT,
+             "single +1/-1 steps under hysteresis", jnp.int32),
+    KnobSpec("delta_l", DELTA_L_MIN, DELTA_L_MAX, DELTA_L_INIT,
+             "single -1.0/+1.0 steps, opposite d"),
+    KnobSpec("delta_t", 0.0, float(np.inf), None,
+             "rtt·(1 ± 0.1·jitter) to avoid lockstep proxies"),
+    KnobSpec("f_max", F_CAP, F_MAX_HIGH, F_CAP,
+             "×2 up / ×0.5 down (bounded multiplicative)"),
+    KnobSpec("pin_ms", 0.0, float(np.inf), PIN_C_MS, "static"),
+    KnobSpec("ttl_scale", TTL_SCALE_MIN, TTL_SCALE_MAX, 1.0,
+             "controller slow-loop hook"),
+)
+
+assert tuple(s.name for s in KNOB_SPECS) == Knobs._fields
+
+
+def spec(name: str) -> KnobSpec:
+    """The :class:`KnobSpec` registered under ``name``."""
+    for s in KNOB_SPECS:
+        if s.name == name:
+            return s
+    raise ValueError(
+        f"unknown knob {name!r}; available: "
+        f"{', '.join(s.name for s in KNOB_SPECS)}"
+    )
+
+
+def init_knobs(rtt_ms: float) -> Knobs:
+    """Every knob at its spec init (delta_t derives from the RTT)."""
+    vals = {
+        s.name: jnp.asarray(
+            rtt_ms if s.init is None else s.init, s.dtype
+        )
+        for s in KNOB_SPECS
+    }
+    return Knobs(**vals)
+
+
+def clip_knobs(knobs: Knobs) -> Knobs:
+    """Clip every knob to its spec bounds (d stays int32)."""
+    return Knobs(**{
+        s.name: jnp.clip(v, s.lo, s.hi).astype(s.dtype)
+        for s, v in zip(KNOB_SPECS, knobs)
+    })
+
+
+class Signals(NamedTuple):
+    """Telemetry bundle handed to controllers on each control ingest.
+
+    Everything is the *smoothed, stale* view a real proxy would hold —
+    never instantaneous server state (§IV-E assumption 1).  Controllers
+    read what they need; XLA dead-code-eliminates the rest.
+    """
+
+    B: jnp.ndarray  # () float32 smoothed imbalance of the consensus view
+    p99: jnp.ndarray  # () float32 worst smoothed p99 across servers (ms)
+    L_hat: jnp.ndarray  # (m,) float32 consensus queue view
+    views_p: jnp.ndarray  # (P, m) float32 per-proxy views (fleet)
+    write_mix: jnp.ndarray  # () float32 write fraction of the current
+    #   T_slow window (windowed, resets each slow tick — never a
+    #   single-tick sample)
+    jitter: jnp.ndarray  # () float32 uniform in [-1, 1]
+    rtt_ms: float  # static transport RTT (ms)
+
+
+def make_signals(
+    B=0.0,
+    p99=0.0,
+    L_hat=None,
+    views_p=None,
+    write_mix=0.0,
+    jitter=0.0,
+    rtt_ms: float = 2.0,
+) -> Signals:
+    """Signals bundle with neutral fillers — unit tests and the legacy
+    ``control.fast_update`` shim drive controllers without an engine."""
+    L = jnp.zeros((1,), jnp.float32) if L_hat is None else L_hat
+    return Signals(
+        B=jnp.asarray(B, jnp.float32),
+        p99=jnp.asarray(p99, jnp.float32),
+        L_hat=L,
+        views_p=L[None, :] if views_p is None else views_p,
+        write_mix=jnp.asarray(write_mix, jnp.float32),
+        jitter=jnp.asarray(jitter, jnp.float32),
+        rtt_ms=rtt_ms,
+    )
+
+
+class ControlState(NamedTuple):
+    """Carried control-plane pytree: knobs + targets + controller-owned
+    ``inner`` state (counters, integrators, ...)."""
+
+    knobs: Knobs
+    b_tgt: jnp.ndarray  # () float32 imbalance target (§III-B)
+    p99_tgt: jnp.ndarray  # () float32 latency target (ms)
+    pressure: jnp.ndarray  # () float32 last computed (logging/TickOut)
+    inner: Any
+
+
+def pressure_score(
+    B: jnp.ndarray,
+    p99: jnp.ndarray,
+    b_tgt: jnp.ndarray,
+    p99_tgt: jnp.ndarray,
+) -> jnp.ndarray:
+    """P = w1·[B − B_tgt]₊ + w2·[(p̃99 − tgt)/tgt]₊ — the shared pressure
+    score every registered controller regulates on."""
+    relu = lambda z: jnp.maximum(z, 0.0)
+    return W1 * relu(B - b_tgt) + W2 * relu(
+        (p99 - p99_tgt) / jnp.maximum(p99_tgt, EPS)
+    )
+
+
+def warmup_targets(
+    B_series: jnp.ndarray, p99_warm: jnp.ndarray, rtt_ms: float
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """§III-B target selection from the low-utilization warmup window."""
+    b_tgt = jnp.median(B_series) + 0.05
+    p99_tgt = jnp.maximum(p99_warm * 1.25, rtt_ms + 2.0)
+    return b_tgt, p99_tgt
+
+
+def consensus_view(
+    views_p: jnp.ndarray, reducer: str = "mean"
+) -> jnp.ndarray:
+    """Collapse (P, m) per-proxy telemetry views into the single view the
+    one control loop consumes (fleet mode).  The paper runs one logical
+    controller over P proxies' reports; the reducer is its consensus —
+    ``median`` is the robust choice when one proxy's staggered view lags
+    badly, ``max`` the conservative one."""
+    return telemetry.reduce_views(views_p, reducer)
+
+
+# ---------------------------------------------------------------------------
+# Lyapunov stability helpers (paper §IV-E, eq. 2)
+# ---------------------------------------------------------------------------
+
+
+def lyapunov_delta_v(
+    L: jnp.ndarray, p: jnp.ndarray, j: jnp.ndarray
+) -> jnp.ndarray:
+    """ΔV for moving one request p→j:  2(L̂_j − L̂_p) + 2  (paper eq. 2)."""
+    return 2.0 * (L[j] - L[p]) + 2.0
+
+
+def lyapunov_potential(L: jnp.ndarray) -> jnp.ndarray:
+    """V(L̂) = Σ_i (L̂_i − L̄)²."""
+    return jnp.sum((L - jnp.mean(L)) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Controller base class + registry
+# ---------------------------------------------------------------------------
+
+
+class Controller:
+    """Base class for registered control-plane implementations.
+
+    Subclasses override :meth:`fast` (and :meth:`init_inner` /
+    :meth:`slow` when they carry state or retune slow-path knobs).
+    """
+
+    name: str = "?"
+
+    def init_inner(self, cfg) -> Any:
+        """Controller-owned pytree (default: stateless)."""
+        return ()
+
+    def init(self, cfg, targets: Tuple[float, float]) -> ControlState:
+        b_tgt, p99_tgt = targets
+        return ControlState(
+            knobs=init_knobs(cfg.rtt_ms),
+            b_tgt=jnp.asarray(b_tgt, jnp.float32),
+            p99_tgt=jnp.asarray(p99_tgt, jnp.float32),
+            pressure=jnp.zeros((), jnp.float32),
+            inner=self.init_inner(cfg),
+        )
+
+    def fast(
+        self, state: ControlState, sig: Signals
+    ) -> Tuple[ControlState, Knobs]:
+        raise NotImplementedError
+
+    def slow(
+        self, state: ControlState, sig: Signals
+    ) -> Tuple[ControlState, Knobs]:
+        return state, self.view(state)
+
+    def view(self, state: ControlState) -> Knobs:
+        """Knobs as consumers see them (decorators mask them here)."""
+        return state.knobs
+
+
+_REGISTRY: Dict[str, Type[Controller]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@controllers.register("my_ctrl")`` adds a
+    Controller subclass under ``name`` (``SimConfig(controller=name)``)."""
+
+    def deco(cls: Type[Controller]) -> Type[Controller]:
+        prev = _REGISTRY.get(name)
+        if prev is not None and prev is not cls:
+            raise ValueError(
+                f"controller {name!r} already registered "
+                f"({prev.__module__}.{prev.__qualname__})"
+            )
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def unregister(name: str) -> None:
+    """Remove a registered controller (intended for tests/plugins)."""
+    _REGISTRY.pop(name, None)
+
+
+def available() -> Tuple[str, ...]:
+    """Sorted names of every registered controller."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_class(name: str) -> Type[Controller]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown controller {name!r}; available: "
+            f"{', '.join(available())}"
+        ) from None
+
+
+def get(name: str) -> Controller:
+    """Instantiate the controller registered under ``name``."""
+    return get_class(name)()
+
+
+# ---------------------------------------------------------------------------
+# Ablation decorators (§IV-E stability mechanisms)
+# ---------------------------------------------------------------------------
+
+ABLATIONS = ("no_margin", "no_pin", "no_bucket")
+
+
+def parse_ablations(flags: str) -> Tuple[str, ...]:
+    """Split an ``ablate`` spec ("no_margin,no_pin") into known tokens;
+    unknown tokens raise with the alternatives listed."""
+    toks = tuple(t for t in (s.strip() for s in flags.split(",")) if t)
+    for t in toks:
+        if t not in ABLATIONS:
+            raise ValueError(
+                f"unknown ablation {t!r}; available: "
+                f"{', '.join(ABLATIONS)}"
+            )
+    return toks
+
+
+class Ablated(Controller):
+    """Decorator removing §IV-E stability mechanisms from the *emitted*
+    knob view while leaving the wrapped controller's dynamics untouched
+    — the ablation study measures what breaks without a guard, not a
+    differently-tuned controller.
+
+      no_margin — steer on any lighter candidate (Δ_L = 0, Δ_t = −∞)
+      no_pin    — re-evaluate every request (C = 0)
+      no_bucket — uncapped steering (f_max = 1)
+    """
+
+    def __init__(self, inner: Controller, flags: str):
+        self.inner = inner
+        self.flags = parse_ablations(flags)
+        self.name = f"{inner.name}[{','.join(self.flags)}]"
+
+    def init_inner(self, cfg) -> Any:
+        return self.inner.init_inner(cfg)
+
+    def init(self, cfg, targets: Tuple[float, float]) -> ControlState:
+        return self.inner.init(cfg, targets)
+
+    def fast(self, state, sig):
+        state, _ = self.inner.fast(state, sig)
+        return state, self.view(state)
+
+    def slow(self, state, sig):
+        state, _ = self.inner.slow(state, sig)
+        return state, self.view(state)
+
+    def view(self, state: ControlState) -> Knobs:
+        k = self.inner.view(state)
+        if "no_margin" in self.flags:
+            k = k._replace(
+                delta_l=jnp.zeros(()), delta_t=jnp.zeros(()) - 1e9
+            )
+        if "no_pin" in self.flags:
+            k = k._replace(pin_ms=jnp.zeros((), jnp.float32))
+        if "no_bucket" in self.flags:
+            k = k._replace(f_max=jnp.ones(()))
+        return k
+
+
+def wrap_ablations(ctrl: Controller, flags: str) -> Controller:
+    """``ctrl`` unchanged for an empty spec, else the :class:`Ablated`
+    decorator applying every named mechanism removal."""
+    return Ablated(ctrl, flags) if parse_ablations(flags) else ctrl
+
+
+# ---------------------------------------------------------------------------
+# Host-side trajectory stability metrics (E4 + tests)
+# ---------------------------------------------------------------------------
+
+
+def trajectory_stats(
+    d: np.ndarray,
+    delta_l: np.ndarray,
+    f_max: np.ndarray,
+    pressure: np.ndarray,
+    dt_ms: float,
+) -> Dict[str, float]:
+    """Stability metrics of one run's knob trajectories (host-side).
+
+    * ``oscillation_per_min`` — d-knob flips per minute (the paper's
+      oscillation measure);
+    * ``settle_ms`` — time from the LAST pressure onset (final rising
+      edge of P, i.e. the last burst the controller had to absorb) to
+      the last knob change at or after it; 0.0 if pressure never rose
+      or knobs never moved after that onset.  Anchoring on the final
+      onset keeps the metric informative for workloads with recurring
+      bursts, where measuring from the FIRST onset saturates at the
+      horizon (knobs legitimately respond to every new burst);
+    * ``knob_churn`` — mean per-tick |Δknob| normalized by each knob's
+      spec range, summed over (d, delta_l, f_max);
+    * ``settled`` — 1.0 when the final 10% of the horizon is change-free.
+    """
+    d = np.asarray(d, np.float64)
+    dl = np.asarray(delta_l, np.float64)
+    fm = np.asarray(f_max, np.float64)
+    pr = np.asarray(pressure, np.float64)
+    T = d.shape[0]
+    if T < 2:
+        return {"oscillation_per_min": 0.0, "settle_ms": 0.0,
+                "knob_churn": 0.0, "settled": 1.0}
+    minutes = T * dt_ms / 60_000.0
+    flips = int(np.sum(np.diff(d) != 0))
+    change = (
+        (np.diff(d) != 0) | (np.diff(dl) != 0) | (np.diff(fm) != 0)
+    )
+    rising = np.flatnonzero((pr[1:] > 0.0) & (pr[:-1] <= 0.0)) + 1
+    if pr[0] > 0.0:
+        rising = np.concatenate([[0], rising])
+    if rising.size == 0 or not change.any():
+        settle_ms = 0.0
+    else:
+        onset = int(rising[-1])
+        chg = np.flatnonzero(change) + 1  # tick indices of knob changes
+        after = chg[chg >= onset]
+        settle_ms = float(after[-1] - onset) * dt_ms if after.size else 0.0
+    churn = 0.0
+    for series, name in ((d, "d"), (dl, "delta_l"), (fm, "f_max")):
+        s = spec(name)
+        rng = (s.hi - s.lo) if np.isfinite(s.hi) else 1.0
+        churn += float(np.mean(np.abs(np.diff(series))) / max(rng, EPS))
+    tail = change[-max(T // 10, 1):]
+    return {
+        "oscillation_per_min": flips / minutes,
+        "settle_ms": settle_ms,
+        "knob_churn": churn,
+        "settled": float(not tail.any()),
+    }

@@ -1,0 +1,83 @@
+"""Deadband integral controller on the pressure score.
+
+Instead of hysteresis counters, an anti-windup integrator ``I ∈ [0, 1]``
+accumulates how far pressure sits OUTSIDE the deadband (the same
+[H↓, H↑] band the hysteresis controller uses, for comparability):
+
+    I ← clip(I + KI·[P − H↑]₊ − KR·[H↓ − P]₊, 0, 1)
+
+Inside the deadband the integrator — and therefore every knob — is
+exactly frozen; above it knobs ramp smoothly instead of stepping, and
+release (KR < KI) is deliberately slower than attack, mirroring
+K↓ > K↑.  Knobs derive from ``I`` with the same declarative affine map
+as the AIMD controller, so bounds hold by construction and constant
+load drives ``I`` to a fixed point (a clamp or the frozen band) — no
+limit cycle.
+
+The slow hook retunes ``ttl_scale`` from the write-mix signal: under
+mutation-dominated traffic TTL-mode cache entries die before reuse, so
+the controller halves the TTL multiplier (floor TTL_SCALE_MIN) and
+doubles it back toward 1 when reads dominate — the controller-side
+complement of the cache's own hazard estimator.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.core.controllers import base
+from repro.core.controllers.aimd import _knobs_from_axis
+from repro.core.controllers.base import (
+    ControlState,
+    Controller,
+    Knobs,
+    Signals,
+    register,
+)
+from repro.core.controllers.hysteresis import H_DOWN, H_UP
+
+KI = 0.10  # integral attack gain (per fast tick above the band)
+KR = 0.02  # integral release gain (per fast tick below the band)
+W_SHRINK = 0.3  # write-mix threshold for the slow TTL retune
+
+
+@register("deadband_pid")
+class DeadbandPid(Controller):
+    """Anti-windup integral control with a frozen deadband."""
+
+    def init_inner(self, cfg) -> jnp.ndarray:
+        return jnp.zeros((), jnp.float32)  # the integrator I
+
+    def fast(
+        self, state: ControlState, sig: Signals
+    ) -> Tuple[ControlState, Knobs]:
+        P = base.pressure_score(sig.B, sig.p99, state.b_tgt, state.p99_tgt)
+        relu = lambda z: jnp.maximum(z, 0.0)
+        i = jnp.clip(
+            state.inner + KI * relu(P - H_UP) - KR * relu(H_DOWN - P),
+            0.0,
+            1.0,
+        )
+        state = state._replace(
+            knobs=base.clip_knobs(
+                _knobs_from_axis(state.knobs, i, sig.rtt_ms)
+            ),
+            pressure=P,
+            inner=i,
+        )
+        return state, self.view(state)
+
+    def slow(
+        self, state: ControlState, sig: Signals
+    ) -> Tuple[ControlState, Knobs]:
+        k = state.knobs
+        scale = jnp.where(
+            sig.write_mix > W_SHRINK,
+            k.ttl_scale * 0.5,
+            jnp.minimum(k.ttl_scale * 2.0, 1.0),
+        )
+        scale = jnp.clip(scale, base.TTL_SCALE_MIN, base.TTL_SCALE_MAX)
+        state = state._replace(knobs=k._replace(ttl_scale=scale))
+        return state, self.view(state)

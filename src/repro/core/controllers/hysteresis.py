@@ -1,0 +1,100 @@
+"""The paper's hysteresis controller (§IV-E, Algorithm 1 lines 26-35).
+
+Reference implementation of the controller protocol, migrated verbatim
+from the pre-registry ``control.py`` monolith: pressure
+    P = w1·[B − B_tgt]₊ + w2·[(p̃99 − tgt)/tgt]₊
+is compared against a hysteresis band (H↓ = 0.02 < H↑ = 0.10); only
+after K↑ = 3 consecutive ticks above (K↓ = 8 below) do the knobs move,
+in single bounded steps — d ± 1, Δ_L ∓ 1, f_max ×2/×½ — and the counter
+that fired resets.  The asymmetric counters are what prevent limit
+cycles: escalation is fast, de-escalation deliberately sluggish.
+
+``SimConfig(controller="hysteresis")`` is the engine default and is
+bit-for-bit identical to the pre-refactor engine on CPU
+(tests/test_core_controllers.py golden contract).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.controllers import base
+from repro.core.controllers.base import (
+    ControlState,
+    Controller,
+    Knobs,
+    Signals,
+    register,
+)
+
+# Hysteresis thresholds and counters (paper defaults).
+H_DOWN, H_UP = 0.02, 0.10
+K_UP, K_DOWN = 3, 8
+
+
+class HysteresisInner(NamedTuple):
+    above_cnt: jnp.ndarray  # () int32 consecutive P > H_up
+    below_cnt: jnp.ndarray  # () int32 consecutive P < H_down
+
+
+@register("hysteresis")
+class Hysteresis(Controller):
+    """Counter-gated single-step knob moves inside a pressure deadband."""
+
+    def init_inner(self, cfg) -> HysteresisInner:
+        return HysteresisInner(
+            above_cnt=jnp.zeros((), jnp.int32),
+            below_cnt=jnp.zeros((), jnp.int32),
+        )
+
+    def fast(
+        self, state: ControlState, sig: Signals
+    ) -> Tuple[ControlState, Knobs]:
+        k = state.knobs
+        P = base.pressure_score(sig.B, sig.p99, state.b_tgt, state.p99_tgt)
+        above = jnp.where(P > H_UP, state.inner.above_cnt + 1, 0)
+        below = jnp.where(P < H_DOWN, state.inner.below_cnt + 1, 0)
+
+        go_up = above >= K_UP
+        go_down = below >= K_DOWN
+
+        d = jnp.where(
+            go_up,
+            jnp.minimum(k.d + 1, base.D_MAX),
+            jnp.where(go_down, jnp.maximum(k.d - 1, base.D_MIN), k.d),
+        )
+        delta_l = jnp.where(
+            go_up,
+            jnp.maximum(k.delta_l - 1.0, base.DELTA_L_MIN),
+            jnp.where(
+                go_down,
+                jnp.minimum(k.delta_l + 1.0, base.DELTA_L_MAX),
+                k.delta_l,
+            ),
+        )
+        f_max = jnp.where(
+            go_up,
+            jnp.minimum(k.f_max * 2.0, base.F_MAX_HIGH),
+            jnp.where(
+                go_down, jnp.maximum(k.f_max * 0.5, base.F_CAP), k.f_max
+            ),
+        )
+        # reset the counter that fired
+        above = jnp.where(go_up, 0, above)
+        below = jnp.where(go_down, 0, below)
+
+        delta_t = (
+            jnp.asarray(sig.rtt_ms, jnp.float32)
+            + 0.1 * sig.rtt_ms * sig.jitter
+        )
+
+        state = state._replace(
+            knobs=k._replace(
+                d=d, delta_l=delta_l, delta_t=delta_t, f_max=f_max
+            ),
+            pressure=P,
+            inner=HysteresisInner(above_cnt=above, below_cnt=below),
+        )
+        return state, self.view(state)

@@ -243,10 +243,17 @@ def slow_fleet(
     rtt_ms: float,
     lease_remaining_ms: float = jnp.inf,
     p_star: float = cache_lib.P_STAR,
+    ttl_scale=1.0,
 ) -> FleetState:
     """T_slow retune: the hazard estimator lives on the converged table
-    (server-side aggregates, which gossip does not lag)."""
+    (server-side aggregates, which gossip does not lag).  ``ttl_scale``
+    is the controller-emitted TTL multiplier (``Knobs.ttl_scale``)."""
     shared = cache_lib.slow_update(
-        state.shared, window_ms, rtt_ms, lease_remaining_ms, p_star
+        state.shared,
+        window_ms,
+        rtt_ms,
+        lease_remaining_ms,
+        p_star,
+        ttl_scale=ttl_scale,
     )
     return state._replace(shared=shared)

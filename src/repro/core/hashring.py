@@ -7,6 +7,7 @@ set F(r): the next ``d_max`` *distinct* servers clockwise of the key's
 position (the standard replica-successor set, which is what keeps steering
 consistent with namespace locality).
 """
+
 from __future__ import annotations
 
 import functools
@@ -37,10 +38,10 @@ def hash2(a: jnp.ndarray, b) -> jnp.ndarray:
 
 
 class Ring(NamedTuple):
-    positions: jnp.ndarray   # (m*V,) uint32, sorted ring positions
-    owners: jnp.ndarray      # (m*V,) int32, owning server per position
-    m: int                   # number of servers
-    V: int                   # virtual nodes per server
+    positions: jnp.ndarray  # (m*V,) uint32, sorted ring positions
+    owners: jnp.ndarray  # (m*V,) int32, owning server per position
+    m: int  # number of servers
+    V: int  # virtual nodes per server
 
 
 def _np_mix32(x: np.ndarray) -> np.ndarray:
@@ -57,16 +58,24 @@ def _np_mix32(x: np.ndarray) -> np.ndarray:
 def _np_hash2(a: np.ndarray, b) -> np.ndarray:
     a = np.asarray(a, np.uint32)
     b = np.asarray(b, np.uint32)
-    return _np_mix32(a ^ (_np_mix32(b) + np.uint32(0x9E3779B9)
-                          + (a << np.uint32(6)) + (a >> np.uint32(2))))
+    return _np_mix32(
+        a
+        ^ (
+            _np_mix32(b)
+            + np.uint32(0x9E3779B9)
+            + (a << np.uint32(6))
+            + (a >> np.uint32(2))
+        )
+    )
 
 
 def _ring_arrays(m: int, V: int, salt: int):
     """Pure-numpy ring builder; memoization happens in the caller."""
     servers = np.repeat(np.arange(m, dtype=np.uint32), V)
     replicas = np.tile(np.arange(V, dtype=np.uint32), m)
-    pos = _np_hash2(servers * np.uint32(0x10001) + replicas,
-                    np.uint32(salt + 1))
+    pos = _np_hash2(
+        servers * np.uint32(0x10001) + replicas, np.uint32(salt + 1)
+    )
     order = np.argsort(pos, kind="stable")
     return pos[order], servers[order].astype(np.int32)
 
@@ -76,8 +85,9 @@ def _make_ring_cached(m: int, V: int, salt: int) -> Ring:
     """Memoized host-side: re-tracing ``_run_scan`` reuses the concrete
     positions/owners instead of rebuilding the ring."""
     pos, owners = _ring_arrays(m, V, salt)
-    return Ring(positions=jnp.asarray(pos), owners=jnp.asarray(owners),
-                m=m, V=V)
+    return Ring(
+        positions=jnp.asarray(pos), owners=jnp.asarray(owners), m=m, V=V
+    )
 
 
 def make_ring(m: int, V: int = 64, salt: int = 0) -> Ring:
@@ -104,8 +114,9 @@ def _strict_lower(scan_width: int) -> np.ndarray:
     return np.tril(np.ones((scan_width, scan_width), bool), k=-1)
 
 
-def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
-                 scan_width: int = 16) -> jnp.ndarray:
+def feasible_set(
+    ring: Ring, keys: jnp.ndarray, d_max: int, scan_width: int = 16
+) -> jnp.ndarray:
     """F(r): the first ``d_max`` distinct servers clockwise of each key.
 
     Returns (..., d_max) int32; entry 0 is the primary.  Scans
@@ -123,11 +134,11 @@ def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
     base = jnp.searchsorted(ring.positions, pos) % n
     offs = jnp.arange(scan_width, dtype=jnp.int32)
     idx = (base[..., None] + offs) % n
-    cand = ring.owners[idx]                                   # (..., W)
+    cand = ring.owners[idx]  # (..., W)
     # first-occurrence mask: cand[j] not among cand[:j]
-    eq = cand[..., None, :] == cand[..., :, None]             # (..., W, W)
+    eq = cand[..., None, :] == cand[..., :, None]  # (..., W, W)
     lower = jnp.asarray(_strict_lower(scan_width))
-    seen_before = jnp.any(eq & lower, axis=-1)                # (..., W)
+    seen_before = jnp.any(eq & lower, axis=-1)  # (..., W)
     fresh = ~seen_before
     # rank among fresh entries
     rank = jnp.cumsum(fresh.astype(jnp.int32), axis=-1) - 1
@@ -135,9 +146,10 @@ def feasible_set(ring: Ring, keys: jnp.ndarray, d_max: int,
     out = jnp.full(keys.shape + (d_max,), -1, dtype=jnp.int32)
     # scatter fresh candidates into their rank slot
     take = jnp.where(rank[..., None] == jnp.arange(d_max), 1, 0)
-    out = jnp.max(jnp.where(take.astype(bool),
-                            cand[..., :, None],
-                            jnp.int32(-1)), axis=-2)
+    out = jnp.max(
+        jnp.where(take.astype(bool), cand[..., :, None], jnp.int32(-1)),
+        axis=-2,
+    )
     # pad any remaining -1 deterministically
     pad = (out[..., :1] + jnp.arange(d_max, dtype=jnp.int32)) % ring.m
     out = jnp.where(out < 0, pad, out)

@@ -39,8 +39,8 @@ from typing import Any, Dict, NamedTuple, Tuple, Type
 import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
-from repro.core import control as ctl
 from repro.core import fleet as fleet_lib
+from repro.core.controllers.base import T_SLOW_MS, Knobs
 
 
 class BatchView(NamedTuple):
@@ -60,8 +60,10 @@ class Middleware:
     ``on_batch(state, batch, cfg) -> (state, mask, absorbed)`` processes
     one tick: the returned mask replaces ``batch.mask`` for downstream
     stages and routing; ``absorbed`` is the () float32 count of requests
-    served at the proxy.  ``on_slow(state, cfg) -> state`` runs on the
-    T_slow cadence.
+    served at the proxy.  ``on_slow(state, cfg, knobs) -> state`` runs
+    on the T_slow cadence; ``knobs`` is the configured controller's
+    emitted :class:`repro.core.controllers.Knobs` bundle (the cache
+    stages consume ``knobs.ttl_scale``).
     """
 
     name: str = "?"
@@ -74,7 +76,7 @@ class Middleware:
     ) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
         return state, batch.mask, jnp.zeros((), jnp.float32)
 
-    def on_slow(self, state: Any, cfg) -> Any:
+    def on_slow(self, state: Any, cfg, knobs: Knobs) -> Any:
         return state
 
 
@@ -149,10 +151,15 @@ class CooperativeCache(Middleware):
         # hits never reach the servers
         return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
 
-    def on_slow(self, state: cache_lib.CacheState, cfg):
+    def on_slow(self, state: cache_lib.CacheState, cfg, knobs: Knobs):
         lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
         return cache_lib.slow_update(
-            state, ctl.T_SLOW_MS, cfg.rtt_ms, lease, cfg.p_star
+            state,
+            T_SLOW_MS,
+            cfg.rtt_ms,
+            lease,
+            cfg.p_star,
+            ttl_scale=knobs.ttl_scale,
         )
 
 
@@ -191,8 +198,13 @@ class FleetCache(Middleware):
         # hits are served by their proxy and never reach the servers
         return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
 
-    def on_slow(self, state: fleet_lib.FleetState, cfg):
+    def on_slow(self, state: fleet_lib.FleetState, cfg, knobs: Knobs):
         lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
         return fleet_lib.slow_fleet(
-            state, ctl.T_SLOW_MS, cfg.rtt_ms, lease, cfg.p_star
+            state,
+            T_SLOW_MS,
+            cfg.rtt_ms,
+            lease,
+            cfg.p_star,
+            ttl_scale=knobs.ttl_scale,
         )

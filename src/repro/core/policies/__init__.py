@@ -27,18 +27,44 @@ through ``route`` (see ``midas.py``); ``adaptive = True`` opts into the
 §III-B warmup-derived control targets.  ``available()`` lists everything
 registered; unknown names raise a ``ValueError`` naming the alternatives.
 """
-from repro.core.policies.base import (ControlKnobs, Policy, RouteContext,
-                                      RouteStats, available, get, get_class,
-                                      register, sample_candidates,
-                                      steering_dv, unregister)
+
+from repro.core.policies.base import (
+    ControlKnobs,
+    Knobs,
+    Policy,
+    RouteContext,
+    RouteStats,
+    available,
+    get,
+    get_class,
+    register,
+    sample_candidates,
+    steering_dv,
+    unregister,
+)
 
 # Built-in policies self-register on import.
-from repro.core.policies import (bounded_load, jsq, midas,  # noqa: F401, E402
-                                 power_of_d, round_robin, static_hash,
-                                 uniform)
+from repro.core.policies import (  # noqa: F401, E402
+    bounded_load,
+    jsq,
+    midas,
+    power_of_d,
+    round_robin,
+    static_hash,
+    uniform,
+)
 
 __all__ = [
-    "ControlKnobs", "Policy", "RouteContext", "RouteStats", "available",
-    "get", "get_class", "register", "sample_candidates", "steering_dv",
+    "ControlKnobs",
+    "Knobs",
+    "Policy",
+    "RouteContext",
+    "RouteStats",
+    "available",
+    "get",
+    "get_class",
+    "register",
+    "sample_candidates",
+    "steering_dv",
     "unregister",
 ]

@@ -29,6 +29,7 @@ compile regardless of ``n_groups``/``P``.  Two obligations follow:
 shapes it received (it is a scan carry), and it must not branch on a
 Python-level wave index (waves are indistinguishable at trace time).
 """
+
 from __future__ import annotations
 
 from typing import Any, Dict, NamedTuple, Tuple, Type
@@ -36,28 +37,28 @@ from typing import Any, Dict, NamedTuple, Tuple, Type
 import jax
 import jax.numpy as jnp
 
+from repro.core.controllers.base import Knobs
 
-class ControlKnobs(NamedTuple):
-    """Control-plane view handed to policies (ablations already applied)."""
-    d: jnp.ndarray          # () int32 sample width in {1..4}
-    delta_l: jnp.ndarray    # () float32 queue margin Δ_L
-    delta_t: jnp.ndarray    # () float32 latency margin Δ_t (ms)
-    f_max: jnp.ndarray      # () float32 steering cap
-    pin_ms: float           # static pin duration C (ms)
+# The control-plane view handed to policies is the declarative knob
+# schema itself (repro.core.controllers.base.Knobs), emitted by the
+# configured controller's ``view`` — ablation decorators already
+# applied.  The pre-PR5 name survives as an alias.
+ControlKnobs = Knobs
 
 
 class RouteContext(NamedTuple):
     """One routing wave, as seen by a policy."""
-    keys: jnp.ndarray       # (R,) int32 namespace keys
-    mask: jnp.ndarray       # (R,) bool validity
-    feas: jnp.ndarray       # (R, d_max) int32 feasible set; slot 0 = primary
-    L_view: jnp.ndarray     # (m,) float32 stale EWMA queue + own sends
-    p50_view: jnp.ndarray   # (m,) float32 stale EWMA p50 (ms)
-    knobs: ControlKnobs
-    now_ms: jnp.ndarray     # () float32 tick clock
-    rng: jnp.ndarray        # per-wave PRNG key
-    m: int                  # static: number of servers
-    fixed_d: int            # static: d for non-adaptive power-of-d
+
+    keys: jnp.ndarray  # (R,) int32 namespace keys
+    mask: jnp.ndarray  # (R,) bool validity
+    feas: jnp.ndarray  # (R, d_max) int32 feasible set; slot 0 = primary
+    L_view: jnp.ndarray  # (m,) float32 stale EWMA queue + own sends
+    p50_view: jnp.ndarray  # (m,) float32 stale EWMA p50 (ms)
+    knobs: Knobs  # controller-emitted knob bundle
+    now_ms: jnp.ndarray  # () float32 tick clock
+    rng: jnp.ndarray  # per-wave PRNG key
+    m: int  # static: number of servers
+    fixed_d: int  # static: d for non-adaptive power-of-d
 
     @property
     def primary(self) -> jnp.ndarray:
@@ -67,9 +68,10 @@ class RouteContext(NamedTuple):
 
 class RouteStats(NamedTuple):
     """Per-wave steering telemetry; summed across waves into TickOut."""
-    steered: jnp.ndarray    # () float32 requests steered off primary
-    eligible: jnp.ndarray   # () float32 steer-eligible requests
-    dV: jnp.ndarray         # () float32 Lyapunov ΔV of admitted steers
+
+    steered: jnp.ndarray  # () float32 requests steered off primary
+    eligible: jnp.ndarray  # () float32 steer-eligible requests
+    dV: jnp.ndarray  # () float32 Lyapunov ΔV of admitted steers
 
     @classmethod
     def zeros(cls) -> "RouteStats":
@@ -79,17 +81,22 @@ class RouteStats(NamedTuple):
     def __add__(self, other: "RouteStats") -> "RouteStats":
         """Fieldwise accumulation (replaces tuple concatenation): the
         wave scan's carry reduction across a tick's routing waves."""
-        return RouteStats(steered=self.steered + other.steered,
-                          eligible=self.eligible + other.eligible,
-                          dV=self.dV + other.dV)
+        return RouteStats(
+            steered=self.steered + other.steered,
+            eligible=self.eligible + other.eligible,
+            dV=self.dV + other.dV,
+        )
 
 
 def steering_dv(ctx: RouteContext, assign: jnp.ndarray) -> jnp.ndarray:
     """ΔV contribution of steering away from primary (paper eq. 2)."""
     prim = ctx.primary
     moved = ctx.mask & (assign != prim) & (assign >= 0)
-    return jnp.sum(jnp.where(
-        moved, 2.0 * (ctx.L_view[assign] - ctx.L_view[prim]) + 2.0, 0.0))
+    return jnp.sum(
+        jnp.where(
+            moved, 2.0 * (ctx.L_view[assign] - ctx.L_view[prim]) + 2.0, 0.0
+        )
+    )
 
 
 class Policy:
@@ -108,8 +115,9 @@ class Policy:
         """Build the policy's carried state pytree (default: stateless)."""
         return ()
 
-    def route(self, state: Any, ctx: RouteContext
-              ) -> Tuple[Any, jnp.ndarray, RouteStats]:
+    def route(
+        self, state: Any, ctx: RouteContext
+    ) -> Tuple[Any, jnp.ndarray, RouteStats]:
         raise NotImplementedError
 
 
@@ -123,14 +131,18 @@ _REGISTRY: Dict[str, Type[Policy]] = {}
 def register(name: str):
     """Class decorator: ``@register("my_policy")`` adds a Policy subclass
     to the registry under ``name`` (usable as ``SimConfig(policy=name)``)."""
+
     def deco(cls: Type[Policy]) -> Type[Policy]:
         prev = _REGISTRY.get(name)
         if prev is not None and prev is not cls:
-            raise ValueError(f"policy {name!r} already registered "
-                             f"({prev.__module__}.{prev.__qualname__})")
+            raise ValueError(
+                f"policy {name!r} already registered "
+                f"({prev.__module__}.{prev.__qualname__})"
+            )
         cls.name = name
         _REGISTRY[name] = cls
         return cls
+
     return deco
 
 
@@ -149,8 +161,8 @@ def get_class(name: str) -> Type[Policy]:
         return _REGISTRY[name]
     except KeyError:
         raise ValueError(
-            f"unknown policy {name!r}; available: "
-            f"{', '.join(available())}") from None
+            f"unknown policy {name!r}; available: {', '.join(available())}"
+        ) from None
 
 
 def get(name: str) -> Policy:
@@ -163,8 +175,9 @@ def get(name: str) -> Policy:
 # ---------------------------------------------------------------------------
 
 
-def sample_candidates(rng: jnp.ndarray, feas: jnp.ndarray,
-                      d: jnp.ndarray) -> jnp.ndarray:
+def sample_candidates(
+    rng: jnp.ndarray, feas: jnp.ndarray, d: jnp.ndarray
+) -> jnp.ndarray:
     """Mark which of the d_max feasible slots are sampled (size-d subset).
 
     Slot 0 (the primary) is always in S; the remaining d-1 picks are a
@@ -172,7 +185,7 @@ def sample_candidates(rng: jnp.ndarray, feas: jnp.ndarray,
     """
     R, d_max = feas.shape
     scores = jax.random.uniform(rng, (R, d_max))
-    scores = scores.at[:, 0].set(-1.0)             # primary always sampled
+    scores = scores.at[:, 0].set(-1.0)  # primary always sampled
     order = jnp.argsort(scores, axis=1)
-    rank = jnp.argsort(order, axis=1)              # rank of each slot
-    return rank < d                                 # (R, d_max) bool
+    rank = jnp.argsort(order, axis=1)  # rank of each slot
+    return rank < d  # (R, d_max) bool

@@ -9,24 +9,33 @@ overload, so placement stays maximally stable — a useful middle ground
 between static hash and JSQ(d), and exactly the kind of policy the paper's
 middleware framing says should be pluggable.
 """
+
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.policies.base import (Policy, RouteStats, register,
-                                      steering_dv)
+from repro.core.policies.base import (
+    Policy,
+    RouteStats,
+    register,
+    steering_dv,
+)
 
-C_LOAD = 1.25   # CHBL capacity factor: cap = c * (mean load + 1)
+C_LOAD = 1.25  # CHBL capacity factor: cap = c * (mean load + 1)
 
 
-def route_bounded_load(feas: jnp.ndarray, L_view: jnp.ndarray,
-                       mask: jnp.ndarray, c: float = C_LOAD) -> jnp.ndarray:
+def route_bounded_load(
+    feas: jnp.ndarray,
+    L_view: jnp.ndarray,
+    mask: jnp.ndarray,
+    c: float = C_LOAD,
+) -> jnp.ndarray:
     """First feasible successor under the load cap; primary when it fits."""
     cap = c * (jnp.mean(L_view) + 1.0)
-    Lf = L_view[feas]                              # (R, d_max)
+    Lf = L_view[feas]  # (R, d_max)
     under = Lf <= cap
-    first_under = jnp.argmax(under, axis=1)        # first True slot
-    least_loaded = jnp.argmin(Lf, axis=1)          # fallback: all over cap
+    first_under = jnp.argmax(under, axis=1)  # first True slot
+    least_loaded = jnp.argmin(Lf, axis=1)  # fallback: all over cap
     slot = jnp.where(jnp.any(under, axis=1), first_under, least_loaded)
     assign = jnp.take_along_axis(feas, slot[:, None], axis=1)[:, 0]
     return jnp.where(mask, assign, -1)
@@ -41,5 +50,7 @@ class BoundedLoadHash(Policy):
         moved = ctx.mask & (assign != ctx.primary)
         z = jnp.zeros((), jnp.float32)
         return state, assign, RouteStats(
-            steered=jnp.sum(moved).astype(jnp.float32), eligible=z,
-            dV=steering_dv(ctx, assign))
+            steered=jnp.sum(moved).astype(jnp.float32),
+            eligible=z,
+            dV=steering_dv(ctx, assign),
+        )

@@ -7,17 +7,23 @@ balance any sampling policy can buy, which makes the power-of-d gap
 measurable.  Lives entirely outside the simulator core: registering this
 module is all it takes to make ``SimConfig(policy="jsq")`` work.
 """
+
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies.base import (Policy, RouteStats, register,
-                                      steering_dv)
+from repro.core.policies.base import (
+    Policy,
+    RouteStats,
+    register,
+    steering_dv,
+)
 
 
-def route_jsq(rng: jnp.ndarray, L_view: jnp.ndarray,
-              mask: jnp.ndarray) -> jnp.ndarray:
+def route_jsq(
+    rng: jnp.ndarray, L_view: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
     """Each request joins the globally shortest queue (random tie-break)."""
     R, m = mask.shape[0], L_view.shape[0]
     load = jnp.broadcast_to(L_view[None, :], (R, m))
@@ -33,5 +39,6 @@ class JoinShortestQueue(Policy):
     def route(self, state, ctx):
         assign = route_jsq(ctx.rng, ctx.L_view, ctx.mask)
         z = jnp.zeros((), jnp.float32)
-        return state, assign, RouteStats(steered=z, eligible=z,
-                                         dV=steering_dv(ctx, assign))
+        return state, assign, RouteStats(
+            steered=z, eligible=z, dV=steering_dv(ctx, assign)
+        )

@@ -9,6 +9,7 @@ Faithfulness notes:
   * Steered keys are pinned to their chosen server for C ms.
   * A sliding-window leaky bucket caps steered/eligible ≤ f_max exactly.
 """
+
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
@@ -16,16 +17,21 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies.base import (Policy, RouteStats, register,
-                                      sample_candidates, steering_dv)
+from repro.core.policies.base import (
+    Policy,
+    RouteStats,
+    register,
+    sample_candidates,
+    steering_dv,
+)
 
 
 class MidasState(NamedTuple):
-    pin_server: jnp.ndarray   # (N,) int32 pinned server per key (-1 none)
-    pin_expiry: jnp.ndarray   # (N,) float32 absolute pin expiry (ms)
-    steer_hist: jnp.ndarray   # (W,) float32 per-tick steered counts
-    elig_hist: jnp.ndarray    # (W,) float32 per-tick eligible counts
-    hist_idx: jnp.ndarray     # () int32
+    pin_server: jnp.ndarray  # (N,) int32 pinned server per key (-1 none)
+    pin_expiry: jnp.ndarray  # (N,) float32 absolute pin expiry (ms)
+    steer_hist: jnp.ndarray  # (W,) float32 per-tick steered counts
+    elig_hist: jnp.ndarray  # (W,) float32 per-tick eligible counts
+    hist_idx: jnp.ndarray  # () int32
 
 
 def init_midas(N: int, w_ticks: int) -> MidasState:
@@ -34,29 +40,43 @@ def init_midas(N: int, w_ticks: int) -> MidasState:
         pin_expiry=jnp.zeros((N,), jnp.float32),
         steer_hist=jnp.zeros((w_ticks,), jnp.float32),
         elig_hist=jnp.zeros((w_ticks,), jnp.float32),
-        hist_idx=jnp.zeros((), jnp.int32))
+        hist_idx=jnp.zeros((), jnp.int32),
+    )
 
 
 class MidasTickStats(NamedTuple):
-    eligible: jnp.ndarray   # () number of steer-eligible requests
-    steered: jnp.ndarray    # () number actually steered
+    eligible: jnp.ndarray  # () number of steer-eligible requests
+    steered: jnp.ndarray  # () number actually steered
 
 
-def route_midas(rs: MidasState, rng: jnp.ndarray, keys: jnp.ndarray,
-                feas: jnp.ndarray, L_view: jnp.ndarray, p50_view: jnp.ndarray,
-                mask: jnp.ndarray, d, delta_l, delta_t, f_max,
-                now_ms, pin_c_ms: float, w_ticks: int,
-                ) -> Tuple[MidasState, jnp.ndarray, MidasTickStats]:
+def route_midas(
+    rs: MidasState,
+    rng: jnp.ndarray,
+    keys: jnp.ndarray,
+    feas: jnp.ndarray,
+    L_view: jnp.ndarray,
+    p50_view: jnp.ndarray,
+    mask: jnp.ndarray,
+    d,
+    delta_l,
+    delta_t,
+    f_max,
+    now_ms,
+    pin_c_ms: float,
+    w_ticks: int,
+) -> Tuple[MidasState, jnp.ndarray, MidasTickStats]:
     """Full MIDAS routing for one request batch (Alg. 1 lines 36–47)."""
     primary = feas[:, 0]
     sampled = sample_candidates(rng, feas, d)
-    sampled = sampled.at[:, 0].set(False)          # candidates exclude primary
+    sampled = sampled.at[:, 0].set(False)  # candidates exclude primary
 
     Lp = L_view[primary][:, None]
     p50p = p50_view[primary][:, None]
-    ok = (sampled
-          & (L_view[feas] <= Lp - delta_l)
-          & (p50_view[feas] <= p50p - delta_t))    # eligibility per candidate
+    ok = (
+        sampled
+        & (L_view[feas] <= Lp - delta_l)
+        & (p50_view[feas] <= p50p - delta_t)
+    )  # eligibility per candidate
     load = jnp.where(ok, L_view[feas], jnp.inf)
     tie = jax.random.uniform(jax.random.fold_in(rng, 2), feas.shape) * 1e-3
     best_slot = jnp.argmin(load + tie, axis=1)
@@ -64,10 +84,12 @@ def route_midas(rs: MidasState, rng: jnp.ndarray, keys: jnp.ndarray,
     has_candidate = jnp.any(ok, axis=1) & mask
 
     # honor active pins: pinned keys go to their pinned server, no steering
-    pinned = (rs.pin_expiry[keys] > now_ms) & (rs.pin_server[keys] >= 0) & mask
+    pinned = (
+        (rs.pin_expiry[keys] > now_ms) & (rs.pin_server[keys] >= 0) & mask
+    )
     # leaky bucket (exact sliding window): allow at most
     #   f_max * (eligible in window incl. now) - (steered in window)
-    i = rs.hist_idx % w_ticks                     # slot about to be evicted
+    i = rs.hist_idx % w_ticks  # slot about to be evicted
     elig_now = jnp.sum(has_candidate & ~pinned)
     elig_win = jnp.sum(rs.elig_hist) - rs.elig_hist[i] + elig_now
     steer_win = jnp.sum(rs.steer_hist) - rs.steer_hist[i]
@@ -76,8 +98,9 @@ def route_midas(rs: MidasState, rng: jnp.ndarray, keys: jnp.ndarray,
     order_rank = jnp.cumsum(want.astype(jnp.int32)) - 1
     allowed = want & (order_rank < budget)
 
-    assign = jnp.where(pinned, rs.pin_server[keys],
-                       jnp.where(allowed, best, primary))
+    assign = jnp.where(
+        pinned, rs.pin_server[keys], jnp.where(allowed, best, primary)
+    )
     assign = jnp.where(mask, assign, -1)
 
     # pin steered keys for C ms (sentinel N is out-of-bounds => dropped)
@@ -85,17 +108,26 @@ def route_midas(rs: MidasState, rng: jnp.ndarray, keys: jnp.ndarray,
     steer_keys = jnp.where(allowed, keys, N)
     pin_server = rs.pin_server.at[steer_keys].set(best, mode="drop")
     pin_expiry = rs.pin_expiry.at[steer_keys].set(
-        now_ms + pin_c_ms, mode="drop")
+        now_ms + pin_c_ms, mode="drop"
+    )
 
     # window histories
-    steer_hist = rs.steer_hist.at[i].set(jnp.sum(allowed).astype(jnp.float32))
+    steer_hist = rs.steer_hist.at[i].set(
+        jnp.sum(allowed).astype(jnp.float32)
+    )
     elig_hist = rs.elig_hist.at[i].set(elig_now.astype(jnp.float32))
 
-    new = rs._replace(pin_server=pin_server, pin_expiry=pin_expiry,
-                      steer_hist=steer_hist, elig_hist=elig_hist,
-                      hist_idx=rs.hist_idx + 1)
-    stats = MidasTickStats(eligible=elig_now.astype(jnp.float32),
-                           steered=jnp.sum(allowed).astype(jnp.float32))
+    new = rs._replace(
+        pin_server=pin_server,
+        pin_expiry=pin_expiry,
+        steer_hist=steer_hist,
+        elig_hist=elig_hist,
+        hist_idx=rs.hist_idx + 1,
+    )
+    stats = MidasTickStats(
+        eligible=elig_now.astype(jnp.float32),
+        steered=jnp.sum(allowed).astype(jnp.float32),
+    )
     return new, assign, stats
 
 
@@ -104,7 +136,7 @@ class Midas(Policy):
     """Margined power-of-d with pinning and a leaky steering bucket, driven
     by the adaptive control knobs (d, Δ_L, Δ_t, f_max)."""
 
-    adaptive = True   # consumes warmup-derived control targets (§III-B)
+    adaptive = True  # consumes warmup-derived control targets (§III-B)
 
     def init(self, cfg, ring) -> MidasState:
         return init_midas(cfg.N, cfg.w_ticks)
@@ -112,9 +144,23 @@ class Midas(Policy):
     def route(self, state: MidasState, ctx):
         k = ctx.knobs
         state, assign, stats = route_midas(
-            state, ctx.rng, ctx.keys, ctx.feas, ctx.L_view, ctx.p50_view,
-            ctx.mask, k.d, k.delta_l, k.delta_t, k.f_max, ctx.now_ms,
-            k.pin_ms, state.steer_hist.shape[0])
-        return state, assign, RouteStats(steered=stats.steered,
-                                         eligible=stats.eligible,
-                                         dV=steering_dv(ctx, assign))
+            state,
+            ctx.rng,
+            ctx.keys,
+            ctx.feas,
+            ctx.L_view,
+            ctx.p50_view,
+            ctx.mask,
+            k.d,
+            k.delta_l,
+            k.delta_t,
+            k.f_max,
+            ctx.now_ms,
+            k.pin_ms,
+            state.steer_hist.shape[0],
+        )
+        return state, assign, RouteStats(
+            steered=stats.steered,
+            eligible=stats.eligible,
+            dV=steering_dv(ctx, assign),
+        )

@@ -1,15 +1,26 @@
 """Power-of-d within the namespace-feasible set (paper's headline policy)."""
+
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.policies.base import (Policy, RouteStats, register,
-                                      sample_candidates, steering_dv)
+from repro.core.policies.base import (
+    Policy,
+    RouteStats,
+    register,
+    sample_candidates,
+    steering_dv,
+)
 
 
-def route_power_of_d(rng: jnp.ndarray, feas: jnp.ndarray, L_view: jnp.ndarray,
-                     mask: jnp.ndarray, d) -> jnp.ndarray:
+def route_power_of_d(
+    rng: jnp.ndarray,
+    feas: jnp.ndarray,
+    L_view: jnp.ndarray,
+    mask: jnp.ndarray,
+    d,
+) -> jnp.ndarray:
     """Pure JSQ(d) within the feasible set (paper §VI eval policy)."""
     sampled = sample_candidates(rng, feas, d)
     load = jnp.where(sampled, L_view[feas], jnp.inf)
@@ -25,8 +36,10 @@ class PowerOfD(Policy):
     """JSQ(d) over the feasible set with fixed d = cfg.fixed_d."""
 
     def route(self, state, ctx):
-        assign = route_power_of_d(ctx.rng, ctx.feas, ctx.L_view, ctx.mask,
-                                  ctx.fixed_d)
+        assign = route_power_of_d(
+            ctx.rng, ctx.feas, ctx.L_view, ctx.mask, ctx.fixed_d
+        )
         z = jnp.zeros((), jnp.float32)
-        return state, assign, RouteStats(steered=z, eligible=z,
-                                         dV=steering_dv(ctx, assign))
+        return state, assign, RouteStats(
+            steered=z, eligible=z, dV=steering_dv(ctx, assign)
+        )

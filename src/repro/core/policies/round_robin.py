@@ -4,6 +4,7 @@ Faithfulness note: real round-robin is run by P independent proxies with
 random phases, which is how RR actually behaves at scale (aggregate ≈
 random placement).
 """
+
 from __future__ import annotations
 
 from typing import NamedTuple, Tuple
@@ -14,8 +15,9 @@ import jax.numpy as jnp
 from repro.core.policies.base import Policy, RouteStats, register
 
 
-def route_round_robin(keys: jnp.ndarray, mask: jnp.ndarray,
-                      m: int) -> jnp.ndarray:
+def route_round_robin(
+    keys: jnp.ndarray, mask: jnp.ndarray, m: int
+) -> jnp.ndarray:
     """Lustre (Round-Robin) baseline: namespace objects are assigned to
     metadata targets *sequentially at creation time* (DNE round-robin
     striping), and every request follows its object's placement.  Object
@@ -26,27 +28,32 @@ def route_round_robin(keys: jnp.ndarray, mask: jnp.ndarray,
 
 
 class RRState(NamedTuple):
-    rr_count: jnp.ndarray     # (P,) int32 per-proxy RR counters
-    rr_phase: jnp.ndarray     # (P,) int32 per-proxy RR phases
+    rr_count: jnp.ndarray  # (P,) int32 per-proxy RR counters
+    rr_phase: jnp.ndarray  # (P,) int32 per-proxy RR phases
 
 
 def init_rr(P: int, seed: int = 0) -> RRState:
-    phases = jax.random.randint(jax.random.PRNGKey(seed ^ 0xA5A5), (P,),
-                                0, 1_000_000, dtype=jnp.int32)
+    phases = jax.random.randint(
+        jax.random.PRNGKey(seed ^ 0xA5A5),
+        (P,),
+        0,
+        1_000_000,
+        dtype=jnp.int32,
+    )
     return RRState(rr_count=jnp.zeros((P,), jnp.int32), rr_phase=phases)
 
 
-def route_rr_per_request(rs: RRState, proxy: jnp.ndarray,
-                         mask: jnp.ndarray, m: int
-                         ) -> Tuple[RRState, jnp.ndarray]:
+def route_rr_per_request(
+    rs: RRState, proxy: jnp.ndarray, mask: jnp.ndarray, m: int
+) -> Tuple[RRState, jnp.ndarray]:
     """Ablation: P independent per-proxy per-request round-robin streams
     (ignores namespace placement entirely; not a valid metadata policy —
     requests must reach their object's server — but useful as a fairness
     upper bound on *counts*)."""
     P = rs.rr_count.shape[0]
     oh = (proxy[:, None] == jnp.arange(P)[None, :]) & mask[:, None]  # (R,P)
-    prior = jnp.cumsum(oh, axis=0) - oh   # same-proxy requests before r
-    rank = jnp.sum(prior * oh, axis=1)             # (R,)
+    prior = jnp.cumsum(oh, axis=0) - oh  # same-proxy requests before r
+    rank = jnp.sum(prior * oh, axis=1)  # (R,)
     base = rs.rr_phase[proxy] + rs.rr_count[proxy]
     assign = ((base + rank) % m).astype(jnp.int32)
     new_count = rs.rr_count + jnp.sum(oh, axis=0).astype(jnp.int32)
@@ -58,8 +65,11 @@ class RoundRobin(Policy):
     """Static creation-time round-robin placement (Lustre DNE baseline)."""
 
     def route(self, state, ctx):
-        return state, route_round_robin(ctx.keys, ctx.mask, ctx.m), \
-            RouteStats.zeros()
+        return (
+            state,
+            route_round_robin(ctx.keys, ctx.mask, ctx.m),
+            RouteStats.zeros(),
+        )
 
 
 @register("rr_request")
@@ -71,7 +81,12 @@ class RRPerRequest(Policy):
 
     def route(self, state: RRState, ctx):
         P = state.rr_count.shape[0]
-        proxy = jax.random.randint(jax.random.fold_in(ctx.rng, 11),
-                                   ctx.keys.shape, 0, P, dtype=jnp.int32)
+        proxy = jax.random.randint(
+            jax.random.fold_in(ctx.rng, 11),
+            ctx.keys.shape,
+            0,
+            P,
+            dtype=jnp.int32,
+        )
         state, assign = route_rr_per_request(state, proxy, ctx.mask, ctx.m)
         return state, assign, RouteStats.zeros()

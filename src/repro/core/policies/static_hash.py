@@ -1,4 +1,5 @@
 """Static consistent-hash placement (the no-steering MIDAS substrate)."""
+
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,8 +8,9 @@ from repro.core import hashring
 from repro.core.policies.base import Policy, RouteStats, register
 
 
-def route_hash(ring: hashring.Ring, keys: jnp.ndarray,
-               mask: jnp.ndarray) -> jnp.ndarray:
+def route_hash(
+    ring: hashring.Ring, keys: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
     return jnp.where(mask, hashring.primary(ring, keys), -1)
 
 

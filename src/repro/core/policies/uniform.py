@@ -1,4 +1,5 @@
 """Uniform-random placement baseline (balls-into-bins, d = 1)."""
+
 from __future__ import annotations
 
 import jax
@@ -17,5 +18,8 @@ class Uniform(Policy):
     """Each request picks a server uniformly at random (§V d=1 bound)."""
 
     def route(self, state, ctx):
-        return state, route_uniform(ctx.rng, ctx.mask, ctx.m), \
-            RouteStats.zeros()
+        return (
+            state,
+            route_uniform(ctx.rng, ctx.mask, ctx.m),
+            RouteStats.zeros(),
+        )

@@ -8,18 +8,28 @@ were split per policy and renamed — the old monolithic ``RouterState`` /
 + leaky-bucket state) and ``RRState`` / ``init_rr`` (per-proxy counters).
 New code should import from the policy modules directly.
 """
+
 from __future__ import annotations
 
-from repro.core.policies.base import (RouteStats,  # noqa: F401
-                                      sample_candidates, steering_dv)
+from repro.core.policies.base import (  # noqa: F401
+    RouteStats,
+    sample_candidates,
+    steering_dv,
+)
 from repro.core.policies.bounded_load import route_bounded_load  # noqa: F401
 from repro.core.policies.jsq import route_jsq  # noqa: F401
-from repro.core.policies.midas import (MidasState,  # noqa: F401
-                                       MidasTickStats, init_midas,
-                                       route_midas)
+from repro.core.policies.midas import (  # noqa: F401
+    MidasState,
+    MidasTickStats,
+    init_midas,
+    route_midas,
+)
 from repro.core.policies.power_of_d import route_power_of_d  # noqa: F401
-from repro.core.policies.round_robin import (RRState, init_rr,  # noqa: F401
-                                             route_round_robin,
-                                             route_rr_per_request)
+from repro.core.policies.round_robin import (  # noqa: F401
+    RRState,
+    init_rr,
+    route_round_robin,
+    route_rr_per_request,
+)
 from repro.core.policies.static_hash import route_hash  # noqa: F401
 from repro.core.policies.uniform import route_uniform  # noqa: F401

@@ -39,12 +39,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as cache_lib
-from repro.core import control as ctl
+from repro.core import controllers as ctrl_lib
 from repro.core import fleet as fleet_lib
 from repro.core import hashring, telemetry
 from repro.core import middleware as mw_lib
 from repro.core import policies as policy_lib
-from repro.core.policies.base import ControlKnobs, RouteContext, RouteStats
+from repro.core.controllers.base import Knobs, Signals
+from repro.core.policies.base import RouteContext, RouteStats
 from repro.core.workloads import Workload
 
 # Snapshot of the registry at import time; prefer policies.available().
@@ -77,7 +78,11 @@ class SimConfig:
     gossip_ms: float = 0.0
     fleet_routing: bool = False
     fixed_d: int = 2  # d for power_of_d policy
-    ablate: str = ""  # "no_margin" | "no_pin" | "no_bucket"
+    # control plane: any name in controllers.available(), plus the §IV-E
+    # ablation decorators and the fleet-consensus reducer feeding it
+    controller: str = "hysteresis"
+    consensus: str = "mean"  # mean | median | max (fleet view reducer)
+    ablate: str = ""  # comma-joined subset of controllers.ABLATIONS
     # reference engine: unroll the routing waves as a Python loop (the
     # pre-scan semantics, O(G) trace size) — parity tests and the E10
     # "before" baseline; production always uses the wave scan
@@ -104,6 +109,17 @@ class SimConfig:
                     f"unknown middleware stage {stage!r}; available: "
                     f"{', '.join(mw_lib.available())}"
                 )
+        if self.controller not in ctrl_lib.available():
+            raise ValueError(
+                f"unknown controller {self.controller!r}; available: "
+                f"{', '.join(ctrl_lib.available())}"
+            )
+        if self.consensus not in telemetry.CONSENSUS_REDUCERS:
+            raise ValueError(
+                f"unknown consensus reducer {self.consensus!r}; "
+                f"available: {', '.join(telemetry.CONSENSUS_REDUCERS)}"
+            )
+        ctrl_lib.parse_ablations(self.ablate)  # raises on unknown tokens
         if self.cache_mode not in cache_lib.MODES:
             raise ValueError(
                 f"unknown cache_mode {self.cache_mode!r}; available: "
@@ -116,15 +132,15 @@ class SimConfig:
 
     @property
     def t_fast_ticks(self) -> int:
-        return max(int(round(ctl.T_FAST_MS / self.dt_ms)), 1)
+        return max(int(round(ctrl_lib.T_FAST_MS / self.dt_ms)), 1)
 
     @property
     def t_slow_ticks(self) -> int:
-        return max(int(round(ctl.T_SLOW_MS / self.dt_ms)), 1)
+        return max(int(round(ctrl_lib.T_SLOW_MS / self.dt_ms)), 1)
 
     @property
     def w_ticks(self) -> int:
-        return max(int(round(ctl.W_WINDOW_MS / self.dt_ms)), 1)
+        return max(int(round(ctrl_lib.W_WINDOW_MS / self.dt_ms)), 1)
 
     @property
     def serve_per_tick(self) -> float:
@@ -147,8 +163,10 @@ class SimState(NamedTuple):
     p99_hat: jnp.ndarray  # (m,) float32 EWMA p99 (ms)
     sketch: telemetry.LatencySketch
     policy: tuple  # policy-owned pytree (see policies.base)
-    ctrl: ctl.ControlState
+    ctrl: ctrl_lib.ControlState  # knobs + targets + controller inner
     mw: tuple  # per-stage middleware pytrees, chain order
+    win_writes: jnp.ndarray  # () float32 writes this T_slow window
+    win_events: jnp.ndarray  # () float32 valid requests this window
     rng: jnp.ndarray
 
 
@@ -215,6 +233,18 @@ class SimResult(NamedTuple):
 # ---------------------------------------------------------------------------
 # Streaming summary metrics (metrics="summary")
 # ---------------------------------------------------------------------------
+
+
+class KnobTrace(NamedTuple):
+    """Per-tick control-plane scalars emitted as the summary scan's ys:
+    O(T) total — knob trajectories survive ``metrics="summary"`` even
+    though the O(T·m) queue timelines do not, so E4/E8/E9-style cells
+    can report oscillation, settling, and churn (DESIGN.md §10)."""
+
+    d: jnp.ndarray  # (T,) int32
+    delta_l: jnp.ndarray  # (T,) float32
+    f_max: jnp.ndarray  # (T,) float32
+    pressure: jnp.ndarray  # (T,) float32
 
 
 class SummaryAcc(NamedTuple):
@@ -295,6 +325,12 @@ class SummaryResult:
     eligible_total: float
     cache_hits_total: float
     config: SimConfig
+    # control-plane trajectories (KnobTrace ys): O(T) scalars per tick,
+    # kept even in summary mode so cells can report control behaviour
+    d_timeline: Optional[np.ndarray] = None  # (T,)
+    delta_l_timeline: Optional[np.ndarray] = None  # (T,)
+    f_max_timeline: Optional[np.ndarray] = None  # (T,)
+    pressure: Optional[np.ndarray] = None  # (T,)
 
     # ---- paper metrics (SimResult-compatible) --------------------------
     def mean_queue(self) -> float:
@@ -326,7 +362,9 @@ class SummaryResult:
         return tuple(telemetry.hist_quantile(self.lat_hist, q) for q in qs)
 
 
-def _to_summary(cfg: SimConfig, acc: SummaryAcc) -> SummaryResult:
+def _to_summary(
+    cfg: SimConfig, acc: SummaryAcc, trace: Optional[KnobTrace] = None
+) -> SummaryResult:
     """Host-side SummaryResult from a (device or host) SummaryAcc."""
     return SummaryResult(
         n_ticks=int(acc.n_ticks),
@@ -341,6 +379,12 @@ def _to_summary(cfg: SimConfig, acc: SummaryAcc) -> SummaryResult:
         eligible_total=float(acc.eligible),
         cache_hits_total=float(acc.cache_hits),
         config=cfg,
+        d_timeline=None if trace is None else np.asarray(trace.d),
+        delta_l_timeline=(
+            None if trace is None else np.asarray(trace.delta_l)
+        ),
+        f_max_timeline=None if trace is None else np.asarray(trace.f_max),
+        pressure=None if trace is None else np.asarray(trace.pressure),
     )
 
 
@@ -376,7 +420,20 @@ def summarize(result: SimResult) -> SummaryResult:
         cache_hits=f32(result.cache_hits),
         dV=zeros,
     )
-    return _to_summary(result.config, jax.device_get(_reduce_ticks(m, outs)))
+    f_max_tl = (
+        np.zeros_like(np.asarray(result.d_timeline, np.float32))
+        if result.f_max_timeline is None
+        else np.asarray(result.f_max_timeline)
+    )
+    trace = KnobTrace(
+        d=np.asarray(result.d_timeline),
+        delta_l=np.asarray(result.delta_l_timeline),
+        f_max=f_max_tl,
+        pressure=np.asarray(result.pressure),
+    )
+    return _to_summary(
+        result.config, jax.device_get(_reduce_ticks(m, outs)), trace
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -388,18 +445,10 @@ def _middlewares(cfg: SimConfig) -> Tuple[mw_lib.Middleware, ...]:
     return tuple(mw_lib.get(name) for name in cfg.middleware_chain)
 
 
-def _knob_view(cfg: SimConfig, ctrl: ctl.ControlState) -> ControlKnobs:
-    """Control knobs as policies see them, with stability-mechanism
-    ablations (benchmarks/ablations.py) applied uniformly."""
-    delta_l = jnp.zeros(()) if "no_margin" in cfg.ablate else ctrl.delta_l
-    delta_t = (
-        jnp.zeros(()) - 1e9 if "no_margin" in cfg.ablate else ctrl.delta_t
-    )
-    f_max = jnp.ones(()) if "no_bucket" in cfg.ablate else ctrl.f_max
-    pin_ms = 0.0 if "no_pin" in cfg.ablate else ctl.PIN_C_MS
-    return ControlKnobs(
-        d=ctrl.d, delta_l=delta_l, delta_t=delta_t, f_max=f_max, pin_ms=pin_ms
-    )
+def _controller(cfg: SimConfig) -> ctrl_lib.Controller:
+    """The configured controller, with the §IV-E ablation decorators
+    (``cfg.ablate``) wrapped around its emitted knob view."""
+    return ctrl_lib.wrap_ablations(ctrl_lib.get(cfg.controller), cfg.ablate)
 
 
 def _wave_split(cfg: SimConfig, x):
@@ -441,7 +490,7 @@ def _route_waves_scan(
     ring: hashring.Ring,
     policy: policy_lib.Policy,
     state: SimState,
-    knobs: ControlKnobs,
+    knobs: Knobs,
     t,
     now_ms,
     r_route,
@@ -506,7 +555,7 @@ def _route_waves_unrolled(
     ring: hashring.Ring,
     policy: policy_lib.Policy,
     state: SimState,
-    knobs: ControlKnobs,
+    knobs: Knobs,
     t,
     now_ms,
     r_route,
@@ -548,6 +597,7 @@ def _tick(
     ring: hashring.Ring,
     policy: policy_lib.Policy,
     mws: Tuple[mw_lib.Middleware, ...],
+    controller: ctrl_lib.Controller,
     state: SimState,
     inputs,
 ) -> Tuple[SimState, TickOut]:
@@ -569,6 +619,19 @@ def _tick(
     rng, r_mw, r_route = jax.random.split(state.rng, 3)
     state = state._replace(rng=rng)
 
+    # accumulate the offered batch's write mix (pre-middleware) into the
+    # T_slow window counters — Signals.write_mix is the WINDOWED
+    # fraction, never a single-tick sample (it would make slow-loop
+    # decisions flap on per-tick noise); the slow branch resets the
+    # window after the controller consumed it.  Controllers that ignore
+    # the signal cost nothing (XLA DCE).
+    state = state._replace(
+        win_writes=state.win_writes
+        + jnp.sum((is_write & mask).astype(jnp.float32)),
+        win_events=state.win_events
+        + jnp.sum(mask.astype(jnp.float32)),
+    )
+
     # --- middleware pipeline: stages may absorb requests at the proxy ----
     absorbed = jnp.zeros((), jnp.float32)
     mw_states = list(state.mw)
@@ -587,7 +650,7 @@ def _tick(
     # --- route in waves (scan engine; unrolled reference on request) -----
     keysg = _wave_split(cfg, keys)
     maskg = _wave_split(cfg, mask)
-    knobs = _knob_view(cfg, state.ctrl)
+    knobs = controller.view(state.ctrl)
     if cfg.unroll_waves:
         ps, arrivals, stats = _route_waves_unrolled(
             cfg, ring, policy, state, knobs, t, now_ms, r_route, keysg, maskg
@@ -630,8 +693,19 @@ def _tick(
                 state.L,
                 t1,
                 cfg.t_fast_ticks,
-                ctl.ALPHA_FAST,
+                ctrl_lib.ALPHA_FAST,
             )
+        )
+
+    def _signals(s: SimState, B, p99, jitter) -> Signals:
+        return Signals(
+            B=B,
+            p99=p99,
+            L_hat=s.L_hat,
+            views_p=s.L_hat_p,
+            write_mix=s.win_writes / jnp.maximum(s.win_events, 1.0),
+            jitter=jitter,
+            rtt_ms=cfg.rtt_ms,
         )
 
     def ingest(s: SimState) -> SimState:
@@ -641,38 +715,55 @@ def _tick(
         p50_o, p99_o = telemetry.sketch_quantiles(s.sketch)
         if cfg.fleet_routing:
             # one control loop fed by the fleet's consensus view
-            L_hat = ctl.consensus_view(s.L_hat_p)
+            L_hat = ctrl_lib.consensus_view(s.L_hat_p, cfg.consensus)
         else:
-            L_hat = telemetry.ewma(s.L_hat, s.L, ctl.ALPHA_FAST)
-        p50 = telemetry.ewma(s.p50_hat, p50_o, ctl.ALPHA_FAST)
-        p99 = telemetry.ewma(s.p99_hat, p99_o, ctl.ALPHA_FAST)
+            L_hat = telemetry.ewma(s.L_hat, s.L, ctrl_lib.ALPHA_FAST)
+        p50 = telemetry.ewma(s.p50_hat, p50_o, ctrl_lib.ALPHA_FAST)
+        p99 = telemetry.ewma(s.p99_hat, p99_o, ctrl_lib.ALPHA_FAST)
         B = telemetry.imbalance(L_hat)
         jit = jax.random.uniform(
             jax.random.fold_in(s.rng, 3), (), minval=-1.0, maxval=1.0
         )
-        ctrl = ctl.fast_update(s.ctrl, B, jnp.max(p99), cfg.rtt_ms, jit)
-        return s._replace(L_hat=L_hat, p50_hat=p50, p99_hat=p99, ctrl=ctrl)
+        s = s._replace(L_hat=L_hat, p50_hat=p50, p99_hat=p99)
+        ctrl, _ = controller.fast(
+            s.ctrl, _signals(s, B, jnp.max(p99), jit)
+        )
+        return s._replace(ctrl=ctrl)
 
     state = state._replace(sketch=sketch)
     state = jax.lax.cond(is_fast, ingest, lambda s: s, state)
 
-    if mws:
-        is_slow = (t1 % cfg.t_slow_ticks) == 0
+    is_slow = (t1 % cfg.t_slow_ticks) == 0
 
-        def slow(s: SimState) -> SimState:
-            return s._replace(
-                mw=tuple(mw.on_slow(ms, cfg) for mw, ms in zip(mws, s.mw))
-            )
+    def slow(s: SimState) -> SimState:
+        ctrl, k = controller.slow(
+            s.ctrl,
+            _signals(
+                s,
+                telemetry.imbalance(s.L_hat),
+                jnp.max(s.p99_hat),
+                jnp.zeros((), jnp.float32),
+            ),
+        )
+        return s._replace(
+            ctrl=ctrl,
+            mw=tuple(
+                mw.on_slow(ms, cfg, k) for mw, ms in zip(mws, s.mw)
+            ),
+            # window consumed: write-mix restarts for the next T_slow
+            win_writes=jnp.zeros((), jnp.float32),
+            win_events=jnp.zeros((), jnp.float32),
+        )
 
-        state = jax.lax.cond(is_slow, slow, lambda s: s, state)
+    state = jax.lax.cond(is_slow, slow, lambda s: s, state)
 
     out = TickOut(
         L=L,
         arrivals=arrivals,
         lat_pred=lat_pred,
-        d=state.ctrl.d,
-        delta_l=state.ctrl.delta_l,
-        f_max=state.ctrl.f_max,
+        d=state.ctrl.knobs.d,
+        delta_l=state.ctrl.knobs.delta_l,
+        f_max=state.ctrl.knobs.f_max,
         pressure=state.ctrl.pressure,
         steered=stats.steered,
         eligible=stats.eligible,
@@ -695,8 +786,10 @@ def init_state(
         p99_hat=jnp.zeros((cfg.m,), jnp.float32),
         sketch=telemetry.make_sketch(cfg.m),
         policy=policy.init(cfg, ring),
-        ctrl=ctl.init_control(cfg.rtt_ms, b_tgt, p99_tgt),
+        ctrl=_controller(cfg).init(cfg, (b_tgt, p99_tgt)),
         mw=tuple(mw.init(cfg) for mw in _middlewares(cfg)),
+        win_writes=jnp.zeros((), jnp.float32),
+        win_events=jnp.zeros((), jnp.float32),
         rng=jax.random.PRNGKey(cfg.seed),
     )
 
@@ -721,7 +814,12 @@ def _scan_inputs(cfg: SimConfig, ring: hashring.Ring, keys, mask, is_write):
 def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
     ring = hashring.make_ring(cfg.m, cfg.V)
     step = functools.partial(
-        _tick, cfg, ring, policy_lib.get(cfg.policy), _middlewares(cfg)
+        _tick,
+        cfg,
+        ring,
+        policy_lib.get(cfg.policy),
+        _middlewares(cfg),
+        _controller(cfg),
     )
     xs = _scan_inputs(cfg, ring, keys, mask, is_write)
     return jax.lax.scan(step, state, xs)
@@ -756,7 +854,12 @@ def _run_scan_sweep(
     _SWEEP_TRACES[0] += 1
     ring = hashring.make_ring(cfg.m, cfg.V)
     step = functools.partial(
-        _tick, cfg, ring, policy_lib.get(cfg.policy), _middlewares(cfg)
+        _tick,
+        cfg,
+        ring,
+        policy_lib.get(cfg.policy),
+        _middlewares(cfg),
+        _controller(cfg),
     )
 
     def run(st, k, mk, w):
@@ -768,12 +871,18 @@ def _run_scan_sweep(
             def tick(carry, xs):
                 s, acc = carry
                 s, out = step(s, xs)
-                return (s, _summary_update(acc, out)), None
+                ys = KnobTrace(
+                    d=out.d,
+                    delta_l=out.delta_l,
+                    f_max=out.f_max,
+                    pressure=out.pressure,
+                )
+                return (s, _summary_update(acc, out)), ys
 
-            (final, acc), _ = jax.lax.scan(
+            (final, acc), trace = jax.lax.scan(
                 tick, (st, _summary_init(cfg.m)), grids
             )
-            return final, acc
+            return final, (acc, trace)
         return jax.lax.scan(step, st, grids)
 
     return jax.vmap(
@@ -805,8 +914,8 @@ def warmup(
     L = np.asarray(outs.L)
     # EWMA'd imbalance series, same smoothing as the controller —
     # vectorized closed-form filter (was an O(T) host-side Python loop)
-    L_hat = telemetry.ewma_series(L, ctl.ALPHA_FAST)
-    B = L_hat.std(axis=1) / (L_hat.mean(axis=1) + ctl.EPS)
+    L_hat = telemetry.ewma_series(L, ctrl_lib.ALPHA_FAST)
+    B = L_hat.std(axis=1) / (L_hat.mean(axis=1) + ctrl_lib.EPS)
     w = np.asarray(outs.arrivals)
     if w.sum() > 0:
         (p99_warm,) = telemetry.weighted_quantiles(
@@ -872,6 +981,7 @@ def simulate_sweep(
     seeds: Tuple[int, ...] = (0,),
     do_warmup: bool = True,
     metrics: str = "full",
+    targets: Optional[Tuple[float, float]] = None,
 ) -> Union[Dict[str, SweepRows], Dict[str, Dict[str, SweepRows]]]:
     """Batched simulation: fan-out over ``policies × workloads × seeds``.
 
@@ -889,6 +999,13 @@ def simulate_sweep(
     :class:`SummaryResult` rows — same paper-metric API, sweep memory
     O(B·m) instead of O(B·T·m), which is what lets E8/E9-scale matrices
     run many seeds per cell (DESIGN.md §9).
+
+    ``targets`` pins the §III-B control targets ``(b_tgt, p99_tgt)``
+    explicitly, skipping the per-policy warmup pass entirely — the
+    warmup is policy- and controller-independent (it runs the ``hash``
+    policy bare), so callers sweeping a grid of configs over one
+    environment (e.g. E4's controller matrix) can run it once and share
+    the result instead of recompiling it per cell.
 
     Returns ``{policy: (row per seed, ...)}`` for a single workload (the
     legacy shape) and ``{policy: {workload_name: (row per seed, ...)}}``
@@ -927,7 +1044,10 @@ def simulate_sweep(
     results: Dict[str, dict] = {}
     for name in names:
         pcfg = dataclasses.replace(cfg, policy=name)
-        b_tgt, p99_tgt = _targets(pcfg, do_warmup)
+        if targets is not None:
+            b_tgt, p99_tgt = targets
+        else:
+            b_tgt, p99_tgt = _targets(pcfg, do_warmup)
         per_seed = [
             init_state(dataclasses.replace(pcfg, seed=s), b_tgt, p99_tgt)
             for s in seeds
@@ -948,7 +1068,8 @@ def simulate_sweep(
                 scfg = dataclasses.replace(pcfg, seed=s)
                 row = jax.tree_util.tree_map(lambda x: x[j, i], outs)
                 if metrics == "summary":
-                    rows.append(_to_summary(scfg, row))
+                    # row is the (SummaryAcc, KnobTrace) pair per run
+                    rows.append(_to_summary(scfg, *row))
                 else:
                     final_b = jax.tree_util.tree_map(lambda x: x[j, i], final)
                     rows.append(

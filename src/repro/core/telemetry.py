@@ -91,6 +91,27 @@ def weighted_quantiles(
     )
 
 
+CONSENSUS_REDUCERS = ("mean", "median", "max")
+
+
+def reduce_views(views_p: jnp.ndarray, reducer: str = "mean") -> jnp.ndarray:
+    """Collapse a (P, m) stack of per-proxy views along the proxy axis —
+    the consensus the fleet's one logical control loop consumes
+    (``SimConfig.consensus``).  ``mean`` is the paper's aggregate;
+    ``median`` is robust to one badly lagged staggered view; ``max`` is
+    the conservative worst-proxy consensus."""
+    if reducer == "mean":
+        return jnp.mean(views_p, axis=0)
+    if reducer == "median":
+        return jnp.median(views_p, axis=0)
+    if reducer == "max":
+        return jnp.max(views_p, axis=0)
+    raise ValueError(
+        f"unknown consensus reducer {reducer!r}; available: "
+        f"{', '.join(CONSENSUS_REDUCERS)}"
+    )
+
+
 def staggered_phases(P: int, period_ticks: int) -> jnp.ndarray:
     """(P,) ingest phases spreading P proxies evenly over one fast
     interval.  Independent proxies poll server telemetry on their own

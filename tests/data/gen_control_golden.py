@@ -1,0 +1,124 @@
+"""Generate tests/data/control_golden.npz — pre-refactor engine goldens.
+
+The checked-in ``control_golden.npz`` was produced by the engine AS OF THE
+COMMIT THAT INTRODUCED THE CONTROLLER REGISTRY (PR 5), i.e. by the
+pre-refactor control plane (the monolithic ``control.py`` hysteresis
+update wired directly into ``sim._tick``).  The parity contract in
+``tests/test_core_controllers.py`` asserts that
+``SimConfig(controller="hysteresis")`` — the default — reproduces these
+arrays bit-for-bit on CPU, across policies × middleware × ablations,
+including a horizon long enough to cross the slow-loop cadence.
+
+Regenerating the file on a machine where the contract already holds is a
+no-op by construction; regenerate ONLY to extend the config set::
+
+    PYTHONPATH=src python tests/data/gen_control_golden.py
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import SimConfig, make_workload, simulate
+from repro.core import control as ctl
+
+OUT = Path(__file__).resolve().parent / "control_golden.npz"
+
+# Engine configs: policies × middleware × ablations, plus one horizon
+# that crosses the slow-loop boundary (T_slow = 600 ticks at dt=50 ms)
+# and one run through the §III-B warmup target derivation.
+CONFIGS = {
+    "pod_bare": dict(policy="power_of_d", middleware=()),
+    "chbl_bare": dict(policy="chbl", middleware=()),
+    "midas_cache": dict(policy="midas", middleware=("cache",)),
+    "midas_fleet": dict(
+        policy="midas",
+        middleware=("fleet_cache",),
+        fleet_routing=True,
+        gossip_ms=100.0,
+    ),
+    "midas_no_margin": dict(
+        policy="midas", middleware=("cache",), ablate="no_margin"
+    ),
+    "midas_no_pin": dict(
+        policy="midas", middleware=("cache",), ablate="no_pin"
+    ),
+    "midas_no_bucket": dict(
+        policy="midas", middleware=("cache",), ablate="no_bucket"
+    ),
+}
+FIELDS = (
+    "queue_timeline",
+    "arrivals",
+    "lat_pred",
+    "d_timeline",
+    "delta_l_timeline",
+    "f_max_timeline",
+    "pressure",
+    "steered",
+    "eligible",
+    "cache_hits",
+)
+T = 160
+T_SLOW = 700  # crosses the 600-tick slow-loop cadence
+
+
+def main() -> None:
+    arrays = {}
+    wl = make_workload("bursty", T=T, m=8, seed=3, N=512)
+    for name, kw in CONFIGS.items():
+        res = simulate(SimConfig(m=8, N=512, **kw), wl, do_warmup=False)
+        for f in FIELDS:
+            arrays[f"{name}/{f}"] = np.asarray(getattr(res, f))
+
+    wl_slow = make_workload("bursty", T=T_SLOW, m=8, seed=3, N=512)
+    for name, kw in (
+        ("midas_slow_ttl", dict(middleware=("cache",),
+                                cache_mode="ttl_aggregate")),
+        ("midas_slow_lease", dict(middleware=("cache",),
+                                  cache_mode="lease")),
+    ):
+        res = simulate(SimConfig(m=8, N=512, policy="midas", **kw),
+                       wl_slow, do_warmup=False)
+        for f in FIELDS:
+            arrays[f"{name}/{f}"] = np.asarray(getattr(res, f))
+
+    # full default pipeline incl. warmup-derived targets
+    res = simulate(
+        SimConfig(m=8, N=512, policy="midas", middleware=("cache",)), wl
+    )
+    for f in FIELDS:
+        arrays[f"midas_warmup/{f}"] = np.asarray(getattr(res, f))
+
+    # unit-level knob trajectory of the pre-refactor fast_update under a
+    # deterministic synthetic signal sequence
+    n = 400
+    B = np.abs(np.sin(np.arange(n) / 7.0)) * 3.0
+    p99 = 400.0 + 300.0 * np.sin(np.arange(n) / 11.0)
+    jit = np.random.default_rng(0).uniform(-1.0, 1.0, n)
+    c = ctl.init_control(rtt_ms=2.0, b_tgt=0.15, p99_tgt=500.0)
+    traj = {k: [] for k in ("d", "delta_l", "delta_t", "f_max", "pressure")}
+    import jax.numpy as jnp
+
+    for i in range(n):
+        c = ctl.fast_update(
+            c, jnp.asarray(B[i], jnp.float32),
+            jnp.asarray(p99[i], jnp.float32), 2.0,
+            jnp.asarray(jit[i], jnp.float32),
+        )
+        for k in traj:
+            traj[k].append(np.asarray(getattr(c, k)))
+    for k, v in traj.items():
+        arrays[f"fast_update/{k}"] = np.stack(v)
+    arrays["fast_update/B"] = B.astype(np.float32)
+    arrays["fast_update/p99"] = p99.astype(np.float32)
+    arrays["fast_update/jitter"] = jit.astype(np.float32)
+
+    np.savez_compressed(OUT, **arrays)
+    print(f"wrote {OUT} ({len(arrays)} arrays)")
+
+
+if __name__ == "__main__":
+    main()

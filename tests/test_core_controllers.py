@@ -1,0 +1,311 @@
+"""Controller registry contracts (DESIGN.md §10).
+
+Four load-bearing contracts:
+
+* **Golden parity** — ``SimConfig(controller="hysteresis")`` (the
+  default) reproduces the PRE-REFACTOR engine bit-for-bit on CPU:
+  timelines, counters, and knob trajectories recorded in
+  ``tests/data/control_golden.npz`` by the monolithic ``control.py``
+  engine, across policies × middleware × ablations, through the
+  slow-loop cadence and the warmup target derivation.
+* **Registry behaviour** — registration, list-alternatives errors,
+  third-party plug-in via ``@controllers.register``.
+* **Knob schema** — every registered controller's emitted knobs stay
+  inside their :class:`KnobSpec` bounds, and no controller sustains a
+  limit cycle under constant load (hypothesis, registry-wide).
+* **Ablation decorators** — masks apply to the emitted view only; the
+  wrapped controller's dynamics are untouched.
+"""
+import dataclasses
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, controllers, make_workload, simulate
+from repro.core import control as ctl
+from repro.core import telemetry
+
+GOLDEN = np.load(Path(__file__).parent / "data" / "control_golden.npz")
+
+FIELDS = (
+    "queue_timeline",
+    "arrivals",
+    "lat_pred",
+    "d_timeline",
+    "delta_l_timeline",
+    "f_max_timeline",
+    "pressure",
+    "steered",
+    "eligible",
+    "cache_hits",
+)
+WL = make_workload("bursty", T=160, m=8, seed=3, N=512)
+
+
+def _assert_matches_golden(res, name):
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, f)), GOLDEN[f"{name}/{f}"],
+            err_msg=f"{name}/{f}")
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: the default controller IS the pre-refactor engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("pod_bare", dict(policy="power_of_d", middleware=())),
+    ("chbl_bare", dict(policy="chbl", middleware=())),
+    ("midas_cache", dict(policy="midas", middleware=("cache",))),
+    ("midas_fleet", dict(policy="midas", middleware=("fleet_cache",),
+                         fleet_routing=True, gossip_ms=100.0)),
+    ("midas_no_margin", dict(policy="midas", middleware=("cache",),
+                             ablate="no_margin")),
+    ("midas_no_pin", dict(policy="midas", middleware=("cache",),
+                          ablate="no_pin")),
+    ("midas_no_bucket", dict(policy="midas", middleware=("cache",),
+                             ablate="no_bucket")),
+])
+def test_default_controller_matches_prerefactor_engine(name, kw):
+    cfg = SimConfig(m=8, N=512, **kw)
+    assert cfg.controller == "hysteresis"
+    _assert_matches_golden(simulate(cfg, WL, do_warmup=False), name)
+
+
+@pytest.mark.parametrize("name,mode", [
+    ("midas_slow_ttl", "ttl_aggregate"),
+    ("midas_slow_lease", "lease"),
+])
+def test_default_controller_matches_golden_through_slow_loop(name, mode):
+    """700 ticks crosses the T_slow cadence: the controller-threaded
+    ``ttl_scale`` knob (identity at init) must not perturb the retune."""
+    wl = make_workload("bursty", T=700, m=8, seed=3, N=512)
+    cfg = SimConfig(m=8, N=512, policy="midas", middleware=("cache",),
+                    cache_mode=mode)
+    _assert_matches_golden(simulate(cfg, wl, do_warmup=False), name)
+
+
+def test_default_controller_matches_golden_with_warmup():
+    cfg = SimConfig(m=8, N=512, policy="midas", middleware=("cache",))
+    _assert_matches_golden(simulate(cfg, WL), "midas_warmup")
+
+
+def test_legacy_fast_update_matches_golden_trajectory():
+    """The ``control.fast_update`` shim (now delegating to the registered
+    hysteresis controller) replays the recorded pre-refactor knob
+    trajectory bit-for-bit."""
+    B = GOLDEN["fast_update/B"]
+    p99 = GOLDEN["fast_update/p99"]
+    jit = GOLDEN["fast_update/jitter"]
+    c = ctl.init_control(rtt_ms=2.0, b_tgt=0.15, p99_tgt=500.0)
+    for i in range(B.shape[0]):
+        c = ctl.fast_update(c, jnp.asarray(B[i]), jnp.asarray(p99[i]),
+                            2.0, jnp.asarray(jit[i]))
+        for k in ("d", "delta_l", "delta_t", "f_max", "pressure"):
+            assert np.asarray(getattr(c, k)) == GOLDEN[
+                f"fast_update/{k}"][i], (i, k)
+
+
+# ---------------------------------------------------------------------------
+# Registry behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_builtins_registered():
+    names = controllers.available()
+    for expect in ("hysteresis", "aimd", "deadband_pid", "static"):
+        assert expect in names
+
+
+def test_unknown_controller_lists_alternatives():
+    with pytest.raises(ValueError, match="hysteresis"):
+        SimConfig(controller="pid2000")
+    with pytest.raises(ValueError, match="aimd"):
+        controllers.get("nope")
+
+
+def test_unknown_consensus_and_ablation_list_alternatives():
+    with pytest.raises(ValueError, match="median"):
+        SimConfig(consensus="mode")
+    with pytest.raises(ValueError, match="no_bucket"):
+        SimConfig(ablate="no_cache")
+
+
+def test_third_party_controller_registers_and_runs():
+    @controllers.register("always_max")
+    class AlwaysMax(controllers.Controller):
+        def fast(self, state, sig):
+            state = state._replace(
+                knobs=state.knobs._replace(
+                    d=jnp.asarray(controllers.D_MAX, jnp.int32)))
+            return state, self.view(state)
+
+    try:
+        wl = make_workload("light", T=40, m=4, seed=0, N=128)
+        res = simulate(SimConfig(m=4, N=128, policy="midas",
+                                 controller="always_max"), wl,
+                       do_warmup=False)
+        assert res.d_timeline.max() == controllers.D_MAX
+        # duplicate registration under the same name is rejected
+        with pytest.raises(ValueError, match="already registered"):
+            @controllers.register("always_max")
+            class Other(controllers.Controller):
+                pass
+    finally:
+        controllers.unregister("always_max")
+    assert "always_max" not in controllers.available()
+
+
+# ---------------------------------------------------------------------------
+# Knob schema
+# ---------------------------------------------------------------------------
+
+
+def test_knob_specs_cover_knobs_fields():
+    assert tuple(s.name for s in controllers.KNOB_SPECS) == \
+        controllers.Knobs._fields
+    k = controllers.init_knobs(rtt_ms=2.0)
+    for s, v in zip(controllers.KNOB_SPECS, k):
+        init = 2.0 if s.init is None else s.init
+        assert float(v) == pytest.approx(init), s.name
+        assert s.lo - 1e-6 <= float(v) <= s.hi + 1e-6, s.name
+
+
+def test_clip_knobs_enforces_bounds_and_dtypes():
+    k = controllers.init_knobs(2.0)._replace(
+        d=jnp.asarray(99, jnp.int32),
+        delta_l=jnp.asarray(-3.0, jnp.float32),
+        f_max=jnp.asarray(7.0, jnp.float32))
+    c = controllers.clip_knobs(k)
+    assert int(c.d) == controllers.D_MAX
+    assert float(c.delta_l) == controllers.DELTA_L_MIN
+    assert float(c.f_max) == controllers.F_MAX_HIGH
+    assert c.d.dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Ablation decorators
+# ---------------------------------------------------------------------------
+
+
+def test_ablation_masks_view_not_dynamics():
+    base_c = controllers.get("hysteresis")
+    abl = controllers.wrap_ablations(
+        controllers.get("hysteresis"), "no_margin,no_bucket")
+    cfg = SimConfig(m=4)
+    s0 = base_c.init(cfg, (0.0, 1.0))
+    s1 = abl.init(cfg, (0.0, 1.0))
+    sig = controllers.make_signals(B=5.0, p99=1e6, rtt_ms=2.0)
+    for _ in range(10):
+        s0, k0 = base_c.fast(s0, sig)
+        s1, k1 = abl.fast(s1, sig)
+    # identical dynamics: the carried state matches leaf-for-leaf
+    for a, b in zip(jnp.asarray(s0.knobs.d)[None],
+                    jnp.asarray(s1.knobs.d)[None]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(s1.knobs.delta_l) == float(s0.knobs.delta_l)
+    assert float(s1.knobs.f_max) == float(s0.knobs.f_max)
+    # ...but the emitted view is masked
+    assert float(k1.delta_l) == 0.0
+    assert float(k1.delta_t) < -1e8
+    assert float(k1.f_max) == 1.0
+    assert float(k0.f_max) < 1.0
+    # un-ablated knobs pass through the view unchanged
+    assert int(k1.d) == int(k0.d)
+    assert float(k1.pin_ms) == float(k0.pin_ms)
+
+
+def test_no_pin_ablation_zeroes_pin_view():
+    abl = controllers.wrap_ablations(controllers.get("static"), "no_pin")
+    st = abl.init(SimConfig(m=4), (0.1, 100.0))
+    assert float(abl.view(st).pin_ms) == 0.0
+    assert float(st.knobs.pin_ms) == controllers.PIN_C_MS
+
+
+def test_wrap_ablations_empty_is_identity():
+    c = controllers.get("aimd")
+    assert controllers.wrap_ablations(c, "") is c
+    with pytest.raises(ValueError, match="no_margin"):
+        controllers.wrap_ablations(c, "bogus")
+
+
+# ---------------------------------------------------------------------------
+# Consensus reducers (SimConfig.consensus)
+# ---------------------------------------------------------------------------
+
+
+def test_consensus_reducers():
+    views = jnp.asarray([[1.0, 10.0], [2.0, 20.0], [9.0, 90.0]])
+    np.testing.assert_allclose(
+        np.asarray(telemetry.reduce_views(views, "mean")), [4.0, 40.0])
+    np.testing.assert_allclose(
+        np.asarray(telemetry.reduce_views(views, "median")), [2.0, 20.0])
+    np.testing.assert_allclose(
+        np.asarray(telemetry.reduce_views(views, "max")), [9.0, 90.0])
+    with pytest.raises(ValueError, match="median"):
+        telemetry.reduce_views(views, "p95")
+    # legacy single-arg shim still means "mean"
+    np.testing.assert_allclose(
+        np.asarray(ctl.consensus_view(views)), [4.0, 40.0])
+
+
+def test_fleet_consensus_reducer_changes_control_not_routing_views():
+    """median vs mean consensus feeds the one control loop different
+    aggregates — knob trajectories may diverge, queue dynamics stay
+    finite and the default (mean) is the golden-tested path."""
+    wl = make_workload("bursty", T=200, m=8, seed=5, N=512)
+    base = SimConfig(m=8, N=512, policy="midas", P=4,
+                     middleware=("fleet_cache",), fleet_routing=True,
+                     gossip_ms=100.0)
+    res_mean = simulate(base, wl, do_warmup=False)
+    res_med = simulate(dataclasses.replace(base, consensus="median"), wl,
+                       do_warmup=False)
+    for r in (res_mean, res_med):
+        assert np.isfinite(r.queue_timeline).all()
+        assert r.d_timeline.min() >= controllers.D_MIN
+        assert r.d_timeline.max() <= controllers.D_MAX
+    # same workload, same routing waves: arrivals totals agree
+    assert res_mean.arrivals.sum() == pytest.approx(res_med.arrivals.sum())
+
+
+# ---------------------------------------------------------------------------
+# Summary-mode knob surfacing (satellite: E8/E9 control reporting)
+# ---------------------------------------------------------------------------
+
+
+def test_summary_mode_surfaces_knob_trajectories():
+    from repro.core import simulate_sweep, summarize
+
+    wl = make_workload("bursty", T=120, m=4, seed=0, N=256)
+    cfg = SimConfig(m=4, N=256, policy="midas", middleware=("cache",))
+    (fr,) = simulate_sweep(cfg, wl, do_warmup=False)["midas"]
+    (sr,) = simulate_sweep(cfg, wl, do_warmup=False,
+                           metrics="summary")["midas"]
+    for f in ("d_timeline", "delta_l_timeline", "f_max_timeline",
+              "pressure"):
+        got = getattr(sr, f)
+        assert got is not None and got.shape == (120,)
+        np.testing.assert_array_equal(got, np.asarray(getattr(fr, f)),
+                                      err_msg=f)
+    # summarize() of the full row carries the same trajectories
+    ref = summarize(fr)
+    np.testing.assert_array_equal(ref.d_timeline, sr.d_timeline)
+    np.testing.assert_array_equal(ref.pressure, sr.pressure)
+
+
+def test_trajectory_stats_shapes_and_static_case():
+    stats = controllers.trajectory_stats(
+        np.full(100, 2.0), np.full(100, 4.0), np.full(100, 0.1),
+        np.zeros(100), dt_ms=50.0)
+    assert stats["oscillation_per_min"] == 0.0
+    assert stats["settle_ms"] == 0.0
+    assert stats["knob_churn"] == 0.0
+    assert stats["settled"] == 1.0
+    d = np.array([2, 3, 3, 3], np.float64)
+    pr = np.array([0.0, 1.0, 1.0, 0.0])
+    stats = controllers.trajectory_stats(
+        d, np.full(4, 4.0), np.full(4, 0.1), pr, dt_ms=50.0)
+    assert stats["oscillation_per_min"] > 0

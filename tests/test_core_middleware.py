@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SimConfig, make_workload, middleware as mw_lib, simulate
+from repro.core import (SimConfig, controllers, make_workload,
+                        middleware as mw_lib, simulate)
 
 
 def _cache_mw(mode="lease", **cfg_kw):
@@ -57,9 +58,15 @@ def test_cache_stage_slow_hook_retunes_ttl():
     mw, st, cfg = _cache_mw("ttl_aggregate", rtt_ms=5.0)
     st = st._replace(win_writes=jnp.asarray(100.0),
                      win_reads=jnp.asarray(100.0))
-    st2 = mw.on_slow(st, cfg)
+    knobs = controllers.init_knobs(cfg.rtt_ms)
+    st2 = mw.on_slow(st, cfg, knobs)
     assert float(st2.ttl_ms) >= 5.0                    # >= one RTT
     assert float(st2.win_writes) == 0.0                # window reset
+    # the controller-emitted ttl_scale knob scales the retuned horizon
+    half = mw.on_slow(
+        st, cfg, knobs._replace(ttl_scale=jnp.asarray(0.5, jnp.float32)))
+    assert float(half.ttl_ms) == pytest.approx(
+        max(float(st2.ttl_ms) * 0.5, cfg.rtt_ms))
 
 
 def test_legacy_cache_flag_equals_middleware_chain():
