@@ -24,7 +24,7 @@ def run() -> None:
         pool.assign(twin, GIANT)
         for i in range(64):
             pool.assign(f"leaf{i}", 4 << 20)
-        worst[policy] = max(pool._backlog) / (1 << 20)
+        worst[policy] = max(pool.backlogs()) / (1 << 20)
     emit("ckpt/storm_worst_lane_mb", 0.0,
          ";".join(f"{p}={v:.0f}" for p, v in worst.items())
          + ";midas_vs_hash="

@@ -21,6 +21,7 @@ SECTIONS = {
     "scenario_matrix": "benchmarks.scenario_matrix",  # E8
     "fleet": "benchmarks.fleet",               # E9 (gossip × coherence)
     "engine": "benchmarks.engine_perf",        # E10 (compile + ticks/sec)
+    "resilience": "benchmarks.resilience",     # E12 (fault x policy x ctrl)
     "serving": "benchmarks.serving",
     "kernels": "benchmarks.kernels_bench",
     "ablations": "benchmarks.ablations",       # §IV-E stability guards

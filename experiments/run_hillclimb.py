@@ -1,8 +1,80 @@
+"""Hill-climb drivers: roofline cells (hc*) and the controller-
+adversarial fault search (adv).
+
+  python experiments/run_hillclimb.py hc1a
+  python experiments/run_hillclimb.py adv --faults \\
+      "proxy_crash:t0=300,duration=250,target=0;ckpt_storm_fleet"
+
+``adv`` evaluates every registered controller (plus the
+``no_fault_signal`` ablation of each) under the SAME injected fault
+schedule and ranks them by worst-case queue — the adversarial question
+being "which control plane degrades least when this fault fires".
+``--faults`` takes ';'-separated ``faults.parse_fault`` specs (',' is
+the key=value separator inside one spec).
+"""
+import argparse
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 import sys
-from repro.config import RunConfig, MeshConfig
-from repro.launch.dryrun import run_cell
+
+
+def adv_main(argv) -> None:
+    ap = argparse.ArgumentParser(
+        prog="run_hillclimb.py adv",
+        description="controller-adversarial fault search")
+    ap.add_argument(
+        "--faults", default="proxy_crash:t0=300,duration=250,target=0",
+        help="';'-separated fault specs (kind[:k=v,...])")
+    ap.add_argument("--policy", default="midas")
+    ap.add_argument("--T", type=int, default=900)
+    ap.add_argument("--seeds", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    from repro.core import SimConfig, make_workload, simulate_sweep
+    from repro.core import controllers as ctrl_lib
+    from repro.core import faults as faults_lib
+
+    events = tuple(
+        faults_lib.parse_fault(s)
+        for s in args.faults.split(";") if s.strip()
+    )
+    wl = make_workload("bursty", T=args.T, m=8, seed=0, N=1024)
+    seeds = tuple(range(args.seeds))
+    rows = []
+    for ctrl in ctrl_lib.available():
+        for ablate in ("", "no_fault_signal"):
+            cfg = SimConfig(
+                m=8, N=1024, policy=args.policy, controller=ctrl,
+                ablate=ablate, middleware=("fleet_cache",),
+                gossip_ms=100.0, faults=events,
+            )
+            out = simulate_sweep(cfg, wl, seeds=seeds, do_warmup=False,
+                                 metrics="summary")
+            rs = out[args.policy]
+            label = ctrl + (f"[{ablate}]" if ablate else "")
+            rows.append((
+                label,
+                sum(r.mean_queue() for r in rs) / len(rs),
+                max(r.max_queue() for r in rs),
+                sum(r.worst_case_queue() for r in rs) / len(rs),
+            ))
+            print(f"ran {label}", flush=True)
+    rows.sort(key=lambda r: r[2])
+    print(f"\nfaults={[e.kind for e in events]} policy={args.policy} "
+          f"T={args.T} seeds={len(seeds)}")
+    print(f"{'controller':28s} {'mean_q':>8s} {'max_q':>8s} {'p99.9':>8s}")
+    for label, mq, xq, wq in rows:
+        print(f"{label:28s} {mq:8.3f} {xq:8.1f} {wq:8.2f}")
+    best, worst = rows[0][0], rows[-1][0]
+    print(f"\nbest-under-fault: {best}   worst: {worst}")
+
+
+if len(sys.argv) > 1 and sys.argv[1] == "adv":
+    adv_main(sys.argv[2:])
+    sys.exit(0)
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.config import RunConfig, MeshConfig  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
 
 which = sys.argv[1]
 mesh = MeshConfig(multi_pod=False)

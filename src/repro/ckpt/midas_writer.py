@@ -88,6 +88,14 @@ class WriterPool:
     def lane_bytes(self) -> List[int]:
         return list(self._written)
 
+    def backlogs(self) -> List[int]:
+        """Snapshot of queued-but-unwritten bytes per lane (the live
+        load the scheduler steers on).  Public accessor — callers must
+        not reach into ``_backlog``, which is lock-protected and
+        mutated concurrently by the worker threads."""
+        with self._lock:
+            return list(self._backlog)
+
     def dispersion(self) -> float:
         w = np.asarray(self._written, np.float64)
         if w.mean() <= 0:

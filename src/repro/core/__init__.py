@@ -8,10 +8,12 @@
 # batch stages such as the cooperative cache compose via the middleware
 # pipeline (repro.core.middleware); control-plane implementations live
 # in the controller registry (repro.core.controllers — control.py is the
-# pre-PR5 migration shim).  See DESIGN.md for the API.
+# pre-PR5 migration shim); fault events compile into scan-borne
+# schedules via the fault registry (repro.core.faults).  See DESIGN.md.
 from repro.core import (cache, control, controllers,  # noqa: F401
-                        fleet, hashring, middleware, policies, routing,
-                        sim, telemetry, theory, workloads)
+                        faults, fleet, hashring, middleware, policies,
+                        routing, sim, telemetry, theory, workloads)
+from repro.core.faults import FaultEvent  # noqa: F401
 from repro.core.sim import (SimConfig, SimResult,  # noqa: F401
                             SummaryResult, simulate, simulate_sweep,
                             summarize)

@@ -40,9 +40,11 @@ announcements and invalidations take ``gossip_ms`` to travel, lives in
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
+
+from repro.core.faults.base import AVAIL_FULL
 
 BETA = 0.1
 GAMMA = 0.5
@@ -152,6 +154,7 @@ def apply_batch(
     lease_ms: float = 5000.0,
     rtt_ms: float = 2.0,
     p_star: float = P_STAR,
+    avail: Optional[jnp.ndarray] = None,
 ) -> Tuple[CacheState, BatchEffects]:
     """Apply one tick's effects to the converged table, given hit flags.
 
@@ -159,7 +162,11 @@ def apply_batch(
     feed the hazard estimators and, in lease mode, invalidate the entry.
     Misses install an entry with the mode's validity horizon — unless the
     write-pressure guard is active, in which case installs are bypassed
-    and counted.
+    and counted.  ``avail`` (optional () float32, the detected live
+    fraction from the fault layer) extends the guard: while membership
+    is degraded (``avail < AVAIL_FULL``) installs are bypassed too —
+    entries installed against a shrunken ring would be invalidated
+    wholesale at the next remap epoch, so installing only adds churn.
 
     Returns ``(new_cache, effects)``: the event-key vectors in
     ``effects`` (sentinel ``N`` where no event) are the gossip payload
@@ -203,6 +210,8 @@ def apply_batch(
     # ... unless the write-pressure guard trips: serve-through, no install
     miss = valid & ~hit
     bypass = write_pressure(cache) > W_HIGH
+    if avail is not None:
+        bypass = bypass | (avail < AVAIL_FULL)
     install = miss & ~bypass
     mk = jnp.where(install, keys, N)
     mk_safe = jnp.minimum(mk, N - 1)
@@ -250,12 +259,14 @@ def lookup_batch(
     lease_ms: float = 5000.0,
     rtt_ms: float = 2.0,
     p_star: float = P_STAR,
+    avail: Optional[jnp.ndarray] = None,
 ) -> Tuple[CacheState, jnp.ndarray]:
     """Process one tick of requests against the converged shared table.
 
     Reads hitting a valid entry are served at the proxy (no server load).
     Writes always reach the server, bump the authoritative version and,
-    in lease mode, invalidate the proxy entry.  Returns
+    in lease mode, invalidate the proxy entry.  ``avail`` feeds the
+    availability install guard (see :func:`apply_batch`).  Returns
     (new_cache, served_locally: (R,) bool).
     """
     assert mode in MODES, mode
@@ -279,8 +290,26 @@ def lookup_batch(
         lease_ms=lease_ms,
         rtt_ms=rtt_ms,
         p_star=p_star,
+        avail=avail,
     )
     return new, hit
+
+
+def remap_invalidate(
+    cache: CacheState, moved: jnp.ndarray
+) -> CacheState:
+    """Drop every entry whose ring owner just changed (``moved``: (N,)
+    bool from the fault layer's per-epoch owner diff).
+
+    Placement shift makes a cached entry unverifiable — the proxy's
+    lease/TTL was granted by a server that no longer owns the key — so
+    expiry is zeroed (never-live) and the next read revalidates at the
+    new owner.  Entries whose owner did not move are untouched
+    (consistent-hashing minimal disruption carries over to the cache).
+    """
+    return cache._replace(
+        expiry_ms=jnp.where(moved, 0.0, cache.expiry_ms)
+    )
 
 
 def slow_update(

@@ -147,6 +147,13 @@ class Signals(NamedTuple):
     #   single-tick sample)
     jitter: jnp.ndarray  # () float32 uniform in [-1, 1]
     rtt_ms: float  # static transport RTT (ms)
+    # fault-layer telemetry (repro.core.faults): detected live fraction
+    # and per-server detected-membership mask.  Defaults are the
+    # all-healthy constants, so fault-unaware call sites (and fault-free
+    # runs) are value-identical to the pre-fault engine; controllers
+    # that ignore them cost nothing (XLA DCE).
+    avail: Any = 1.0  # () float32 detected live fraction in (0, 1]
+    member: Any = 1.0  # (m,) float32 detected membership (1=live)
 
 
 def make_signals(
@@ -157,6 +164,8 @@ def make_signals(
     write_mix=0.0,
     jitter=0.0,
     rtt_ms: float = 2.0,
+    avail=1.0,
+    member=None,
 ) -> Signals:
     """Signals bundle with neutral fillers — unit tests and the legacy
     ``control.fast_update`` shim drive controllers without an engine."""
@@ -169,6 +178,8 @@ def make_signals(
         write_mix=jnp.asarray(write_mix, jnp.float32),
         jitter=jnp.asarray(jitter, jnp.float32),
         rtt_ms=rtt_ms,
+        avail=jnp.asarray(avail, jnp.float32),
+        member=jnp.ones_like(L) if member is None else member,
     )
 
 
@@ -327,7 +338,7 @@ def get(name: str) -> Controller:
 # Ablation decorators (§IV-E stability mechanisms)
 # ---------------------------------------------------------------------------
 
-ABLATIONS = ("no_margin", "no_pin", "no_bucket")
+ABLATIONS = ("no_margin", "no_pin", "no_bucket", "no_fault_signal")
 
 
 def parse_ablations(flags: str) -> Tuple[str, ...]:
@@ -352,6 +363,10 @@ class Ablated(Controller):
       no_margin — steer on any lighter candidate (Δ_L = 0, Δ_t = −∞)
       no_pin    — re-evaluate every request (C = 0)
       no_bucket — uncapped steering (f_max = 1)
+      no_fault_signal — controller never sees availability degradation
+                  (Signals.avail/member forced healthy; the fault still
+                  happens, the control plane just flies blind — what
+                  E12 isolates as the value of availability telemetry)
     """
 
     def __init__(self, inner: Controller, flags: str):
@@ -365,12 +380,22 @@ class Ablated(Controller):
     def init(self, cfg, targets: Tuple[float, float]) -> ControlState:
         return self.inner.init(cfg, targets)
 
+    def _mask_signals(self, sig: Signals) -> Signals:
+        if "no_fault_signal" in self.flags:
+            member = jnp.ones_like(
+                jnp.asarray(sig.member, jnp.float32)
+            )
+            sig = sig._replace(
+                avail=jnp.ones((), jnp.float32), member=member
+            )
+        return sig
+
     def fast(self, state, sig):
-        state, _ = self.inner.fast(state, sig)
+        state, _ = self.inner.fast(state, self._mask_signals(sig))
         return state, self.view(state)
 
     def slow(self, state, sig):
-        state, _ = self.inner.slow(state, sig)
+        state, _ = self.inner.slow(state, self._mask_signals(sig))
         return state, self.view(state)
 
     def view(self, state: ControlState) -> Knobs:

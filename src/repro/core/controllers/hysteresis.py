@@ -9,6 +9,15 @@ in single bounded steps — d ± 1, Δ_L ∓ 1, f_max ×2/×½ — and the count
 that fired resets.  The asymmetric counters are what prevent limit
 cycles: escalation is fast, de-escalation deliberately sluggish.
 
+Availability reaction (fault layer): while detected membership is
+degraded (``Signals.avail < AVAIL_FULL``) the counter gates are
+overridden — escalate immediately, never de-escalate — because a
+shrunken ring concentrates remapped keys on the survivors and waiting
+K↑ ticks is exactly the hotspot window E12 measures.  With full
+availability the comparison is constant-false and the controller is
+value-identical to the pre-fault engine (the golden contract).  The
+``no_fault_signal`` ablation removes this reaction.
+
 ``SimConfig(controller="hysteresis")`` is the engine default and is
 bit-for-bit identical to the pre-refactor engine on CPU
 (tests/test_core_controllers.py golden contract).
@@ -28,6 +37,7 @@ from repro.core.controllers.base import (
     Signals,
     register,
 )
+from repro.core.faults.base import AVAIL_FULL
 
 # Hysteresis thresholds and counters (paper defaults).
 H_DOWN, H_UP = 0.02, 0.10
@@ -57,8 +67,9 @@ class Hysteresis(Controller):
         above = jnp.where(P > H_UP, state.inner.above_cnt + 1, 0)
         below = jnp.where(P < H_DOWN, state.inner.below_cnt + 1, 0)
 
-        go_up = above >= K_UP
-        go_down = below >= K_DOWN
+        degraded = jnp.asarray(sig.avail, jnp.float32) < AVAIL_FULL
+        go_up = (above >= K_UP) | degraded
+        go_down = (below >= K_DOWN) & ~degraded
 
         d = jnp.where(
             go_up,

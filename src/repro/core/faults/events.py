@@ -1,0 +1,151 @@
+"""Registered fault events (the built-in fault vocabulary).
+
+Each spec documents its schedule effect; detection / epochs / remap
+invalidation are shared machinery in :mod:`repro.core.faults.base`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.faults.base import (
+    FaultEvent,
+    FaultSpec,
+    Schedule,
+    register,
+)
+
+
+def _server(ev: FaultEvent, m: int) -> int:
+    """Resolve a server target: -1 means the last server (m-1)."""
+    return m - 1 if ev.target < 0 else ev.target
+
+
+def _check_server(ev: FaultEvent, m: int) -> None:
+    if not -1 <= ev.target < m:
+        raise ValueError(
+            f"fault {ev.kind!r} target must be a server in [0, {m}) "
+            f"or -1, got {ev.target}"
+        )
+
+
+def _check_magnitude(ev: FaultEvent) -> None:
+    if not 0.0 < ev.magnitude <= 1.0:
+        raise ValueError(
+            f"fault {ev.kind!r} magnitude must be in (0, 1], "
+            f"got {ev.magnitude}"
+        )
+
+
+@register("proxy_crash")
+class ProxyCrash(FaultSpec):
+    """A metadata server vanishes for the event window: it serves zero
+    requests immediately (ground truth), but proxies keep routing to it
+    until the heartbeat timeout expires — then the detected ring drops
+    it, its keys remap to ring successors, and remapped cache entries
+    are invalidated.  Rejoin at the window's end runs the same epoch
+    flip in reverse."""
+
+    def validate(self, ev: FaultEvent, m: int, P: int) -> None:
+        _check_server(ev, m)
+
+    def apply(self, ev: FaultEvent, sched: Schedule) -> None:
+        t0, t1 = sched.window(ev)
+        sched.member[t0:t1, _server(ev, sched.m)] = False
+        sched.active[t0:t1] = True
+
+
+@register("proxy_join")
+class ProxyJoin(FaultSpec):
+    """A server is ABSENT from the start of the run and joins at t0 —
+    the cold-start half of elastic membership.  Its keys remap onto it
+    at join (heartbeats make detection immediate), forcing the caches
+    to revalidate every entry the newcomer now owns.  ``duration`` is
+    ignored; the fault window is [0, t0)."""
+
+    def validate(self, ev: FaultEvent, m: int, P: int) -> None:
+        _check_server(ev, m)
+        if m < 2:
+            raise ValueError(
+                "proxy_join needs m >= 2: the ring must stay non-empty "
+                "before the join"
+            )
+
+    def apply(self, ev: FaultEvent, sched: Schedule) -> None:
+        t0 = min(max(int(ev.t0), 0), sched.T)
+        sched.member[:t0, _server(ev, sched.m)] = False
+        sched.active[:t0] = True
+
+
+@register("server_brownout")
+class ServerBrownout(FaultSpec):
+    """Time-varying MDS degradation: the target server's service rate
+    is multiplied by ``magnitude`` for the window (a slow disk, a noisy
+    neighbour).  Membership never changes — the ring stays put and the
+    controller only sees the brownout through queue telemetry."""
+
+    def validate(self, ev: FaultEvent, m: int, P: int) -> None:
+        _check_server(ev, m)
+        _check_magnitude(ev)
+
+    def apply(self, ev: FaultEvent, sched: Schedule) -> None:
+        t0, t1 = sched.window(ev)
+        sched.service_scale[t0:t1, _server(ev, sched.m)] *= ev.magnitude
+        sched.active[t0:t1] = True
+
+
+@register("gossip_partition")
+class GossipPartition(FaultSpec):
+    """Gossip stops reaching the target proxy (-1: every proxy) for the
+    window: remote installs/invalidations become invisible to it until
+    the partition heals, spiking its stale-serve exposure — the fleet's
+    per-proxy staleness failure mode (E9's worst case, injected)."""
+
+    def validate(self, ev: FaultEvent, m: int, P: int) -> None:
+        if not -1 <= ev.target < P:
+            raise ValueError(
+                f"gossip_partition target must be a proxy in [0, {P}) "
+                f"or -1 (all), got {ev.target}"
+            )
+
+    def apply(self, ev: FaultEvent, sched: Schedule) -> None:
+        t0, t1 = sched.window(ev)
+        if ev.target < 0:
+            sched.partition[t0:t1, :] = True
+        else:
+            sched.partition[t0:t1, ev.target] = True
+        sched.active[t0:t1] = True
+
+
+@register("ckpt_storm_fleet")
+class CkptStormFleet(FaultSpec):
+    """Fleet-scale checkpoint storm: for the window, the trailing
+    ``magnitude`` fraction of each tick's idle request slots fire as
+    WRITES against the ``STORM_LANES`` hot writer-lane keys — the
+    benchmarks/ckpt_storm.py lane pattern promoted to a registered
+    fault.  Write-heavy hot keys stress the install guard and lease
+    invalidation rather than the ring."""
+
+    def validate(self, ev: FaultEvent, m: int, P: int) -> None:
+        _check_magnitude(ev)
+
+    def apply(self, ev: FaultEvent, sched: Schedule) -> None:
+        t0, t1 = sched.window(ev)
+        sched.storm[t0:t1] = np.maximum(sched.storm[t0:t1], ev.magnitude)
+        sched.active[t0:t1] = True
+
+
+def storm_from_pool(pool, t0: int = 100, duration: int = 200) -> FaultEvent:
+    """A ``ckpt_storm_fleet`` event calibrated from a live
+    :class:`repro.ckpt.midas_writer.WriterPool`: intensity is the worst
+    lane's share of the queued backlog (1.0 = one lane holds
+    everything), via the public ``backlogs()`` accessor."""
+    b = [float(x) for x in pool.backlogs()]
+    total = sum(b)
+    mag = (max(b) / total) if total > 0 and b else 1.0 / max(len(b), 1)
+    return FaultEvent(
+        kind="ckpt_storm_fleet",
+        t0=t0,
+        duration=duration,
+        magnitude=min(max(mag, 1e-3), 1.0),
+    )

@@ -50,7 +50,7 @@ invalidated, and that is exactly the stale-serve rate E9 measures.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Tuple, Union
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -161,6 +161,8 @@ def lookup_fleet(
     rtt_ms: float = 2.0,
     p_star: float = cache_lib.P_STAR,
     gossip_ms: float = 0.0,
+    partitioned: Optional[jnp.ndarray] = None,
+    avail: Optional[jnp.ndarray] = None,
 ) -> Tuple[FleetState, jnp.ndarray]:
     """Process one tick of requests, each served by its assigned proxy.
 
@@ -168,7 +170,14 @@ def lookup_fleet(
     :func:`proxy_assign`).  Hits are decided against the serving proxy's
     gossip view; effects land on the converged table via the shared
     model's ``apply_batch``, then this tick's install/invalidation
-    events enter the gossip log and the snapshot ring buffer.  Returns
+    events enter the gossip log and the snapshot ring buffer.
+
+    ``partitioned`` (optional (P,) bool from the fault layer) cuts a
+    proxy off from gossip: remote events never become time-visible to
+    it while partitioned — it keeps serving from the lagged snapshot
+    (plus its own events), which is exactly the staleness spike a
+    gossip partition causes.  ``avail`` feeds the availability install
+    guard (see :func:`repro.core.cache.apply_batch`).  Returns
     ``(new_state, served_locally: (R,) bool)``.
     """
     sh = state.shared
@@ -181,6 +190,8 @@ def lookup_fleet(
     lag_ver = state.lag_version[slot]
     own = state.last_origin[keys] == proxy
     propagated = now_ms - state.last_event_ms[keys] >= gossip_ms
+    if partitioned is not None:
+        propagated = propagated & ~partitioned[proxy]
     fresh = own | propagated
     exp_view = jnp.where(fresh, sh.expiry_ms[keys], lag_exp[keys])
     ver_view = jnp.where(fresh, sh.cached_version[keys], lag_ver[keys])
@@ -202,6 +213,7 @@ def lookup_fleet(
         lease_ms=lease_ms,
         rtt_ms=rtt_ms,
         p_star=p_star,
+        avail=avail,
     )
 
     # --- gossip log: invalidations first, installs win on collision ------
@@ -235,6 +247,21 @@ def lookup_fleet(
         bypasses_p=state.bypasses_p + seg(eff.bypassed),
     )
     return new, hit
+
+
+def remap_invalidate(
+    state: FleetState, moved: jnp.ndarray
+) -> FleetState:
+    """Fleet-wide remap invalidation: after a membership epoch flip,
+    NO proxy may serve an entry whose owner changed without
+    revalidation (the tested property).  Moved entries are dropped from
+    the converged table (:func:`repro.core.cache.remap_invalidate`) AND
+    from every lagged snapshot in the ring buffer — whichever view a
+    proxy's gossip freshness test selects, the entry is never-live."""
+    return state._replace(
+        shared=cache_lib.remap_invalidate(state.shared, moved),
+        lag_expiry=jnp.where(moved[None, :], 0.0, state.lag_expiry),
+    )
 
 
 def slow_fleet(

@@ -107,6 +107,40 @@ def primary(ring: Ring, keys: jnp.ndarray) -> jnp.ndarray:
     return ring.owners[idx]
 
 
+def np_key_position(keys: np.ndarray, salt: int = 0) -> np.ndarray:
+    """Numpy replica of :func:`key_position` (same hash, same salt)."""
+    return _np_hash2(np.asarray(keys, np.uint32), np.uint32(salt + 7919))
+
+
+def np_member_primary(
+    m: int, V: int, member: np.ndarray, keys: np.ndarray, salt: int = 0
+) -> np.ndarray:
+    """Primary owner per key under live membership (numpy reference).
+
+    Builds the full ring, drops every virtual node owned by a dead
+    server, and walks the *subring* — the canonical consistent-hashing
+    semantics of membership change: keys whose live owner is unchanged
+    never move (minimal disruption, property-tested), and with all
+    members live this reduces exactly to :func:`primary`.  This is the
+    reference the member-aware :func:`feasible_set` window (and the
+    fault engine's per-epoch ``owner_by_epoch`` tables, which are built
+    from it) are tested against.
+    """
+    member = np.asarray(member, bool)
+    if member.shape != (m,):
+        raise ValueError(
+            f"member mask must have shape ({m},), got {member.shape}"
+        )
+    if not member.any():
+        raise ValueError("membership has no live servers")
+    pos, owners = _ring_arrays(m, V, salt)
+    keep = member[owners]
+    pos, owners = pos[keep], owners[keep]
+    kp = np_key_position(np.asarray(keys), salt)
+    idx = np.searchsorted(pos, kp) % pos.size
+    return owners[idx]
+
+
 @functools.lru_cache(maxsize=None)
 def _strict_lower(scan_width: int) -> np.ndarray:
     """Strict lower-triangular mask, built host-side once per width so it
@@ -115,7 +149,11 @@ def _strict_lower(scan_width: int) -> np.ndarray:
 
 
 def feasible_set(
-    ring: Ring, keys: jnp.ndarray, d_max: int, scan_width: int = 16
+    ring: Ring,
+    keys: jnp.ndarray,
+    d_max: int,
+    scan_width: int = 16,
+    member=None,
 ) -> jnp.ndarray:
     """F(r): the first ``d_max`` distinct servers clockwise of each key.
 
@@ -123,6 +161,16 @@ def feasible_set(
     ``scan_width`` consecutive ring slots, keeps first occurrences, and (in
     the degenerate case of fewer distinct owners than d_max within the
     window) pads deterministically with (primary + i) mod m.
+
+    ``member`` (optional (m,) bool) restricts F(r) to LIVE servers: dead
+    owners are skipped by the first-occurrence scan exactly as if their
+    virtual nodes left the ring, so entry 0 becomes the subring primary
+    (:func:`np_member_primary`) whenever a live owner falls inside the
+    window — callers with dead members should widen ``scan_width``
+    accordingly (the fault compiler does).  The fallback pad walks
+    server indices (primary + i) mod m and keeps the first live ones;
+    with every member live the result is bit-for-bit the member-free
+    path.  ``member`` must have at least one live server.
 
     Every op is elementwise in ``keys``, so arbitrary leading batch axes
     are supported — the engine exploits this to gather all G routing
@@ -140,17 +188,32 @@ def feasible_set(
     lower = jnp.asarray(_strict_lower(scan_width))
     seen_before = jnp.any(eq & lower, axis=-1)  # (..., W)
     fresh = ~seen_before
+    if member is not None:
+        # dead owners neither claim a rank nor appear in the output
+        fresh = fresh & jnp.asarray(member)[cand]
     # rank among fresh entries
     rank = jnp.cumsum(fresh.astype(jnp.int32), axis=-1) - 1
     rank = jnp.where(fresh, rank, scan_width)
-    out = jnp.full(keys.shape + (d_max,), -1, dtype=jnp.int32)
     # scatter fresh candidates into their rank slot
     take = jnp.where(rank[..., None] == jnp.arange(d_max), 1, 0)
     out = jnp.max(
         jnp.where(take.astype(bool), cand[..., :, None], jnp.int32(-1)),
         axis=-2,
     )
-    # pad any remaining -1 deterministically
-    pad = (out[..., :1] + jnp.arange(d_max, dtype=jnp.int32)) % ring.m
-    out = jnp.where(out < 0, pad, out)
-    return out
+    if member is None:
+        # pad any remaining -1 deterministically
+        pad = (out[..., :1] + jnp.arange(d_max, dtype=jnp.int32)) % ring.m
+        return jnp.where(out < 0, pad, out)
+    # live-aware pad: first live servers along (raw primary + i) mod m —
+    # identical to the member-free pad when every server is live
+    rot = (cand[..., :1] + jnp.arange(ring.m, dtype=jnp.int32)) % ring.m
+    liv = jnp.asarray(member)[rot]
+    lrank = jnp.cumsum(liv.astype(jnp.int32), axis=-1) - 1
+    lrank = jnp.where(liv, lrank, ring.m)
+    take2 = lrank[..., None] == jnp.arange(d_max)
+    fb = jnp.max(
+        jnp.where(take2, rot[..., :, None], jnp.int32(-1)), axis=-2
+    )
+    # fewer live servers than d_max: repeat the first live fallback
+    fb = jnp.where(fb < 0, fb[..., :1], fb)
+    return jnp.where(out < 0, fb, out)

@@ -51,6 +51,10 @@ class BatchView(NamedTuple):
     is_write: jnp.ndarray  # (R,) bool metadata-mutating ops
     now_ms: jnp.ndarray    # () float32 tick clock
     rng: jnp.ndarray       # per-stage PRNG key
+    # fault context (faults.FaultTickInfo) or None when the run carries
+    # no fault schedule — stages read availability / partition state
+    # from here; None keeps the zero-fault path untouched
+    faults: Any = None
 
 
 class Middleware:
@@ -77,6 +81,15 @@ class Middleware:
         return state, batch.mask, jnp.zeros((), jnp.float32)
 
     def on_slow(self, state: Any, cfg, knobs: Knobs) -> Any:
+        return state
+
+    def on_fault(self, state: Any, info, cfg) -> Any:
+        """React to this tick's fault context (``info`` is a
+        ``faults.FaultTickInfo``), called BEFORE ``on_batch`` so remap
+        invalidation lands before any request of the new epoch is
+        served.  Runs inside the jitted scan only when the config
+        carries a membership-changing fault schedule; default: no-op.
+        """
         return state
 
 
@@ -137,6 +150,7 @@ class CooperativeCache(Middleware):
         return cache_lib.init_cache(cfg.N)
 
     def on_batch(self, state: cache_lib.CacheState, batch: BatchView, cfg):
+        fi = batch.faults
         state, hit = cache_lib.lookup_batch(
             state,
             batch.keys,
@@ -147,9 +161,15 @@ class CooperativeCache(Middleware):
             lease_ms=cfg.lease_ms,
             rtt_ms=cfg.rtt_ms,
             p_star=cfg.p_star,
+            avail=None if fi is None else fi.avail,
         )
         # hits never reach the servers
         return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
+
+    def on_fault(self, state: cache_lib.CacheState, info, cfg):
+        if info.inval is None:
+            return state
+        return cache_lib.remap_invalidate(state, info.inval)
 
     def on_slow(self, state: cache_lib.CacheState, cfg, knobs: Knobs):
         lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf
@@ -182,6 +202,7 @@ class FleetCache(Middleware):
     def on_batch(self, state: fleet_lib.FleetState, batch: BatchView, cfg):
         R = batch.keys.shape[0]
         proxy = fleet_lib.proxy_assign(R, cfg.P, state.tick)
+        fi = batch.faults
         state, hit = fleet_lib.lookup_fleet(
             state,
             batch.keys,
@@ -194,9 +215,16 @@ class FleetCache(Middleware):
             rtt_ms=cfg.rtt_ms,
             p_star=cfg.p_star,
             gossip_ms=cfg.gossip_ms,
+            partitioned=None if fi is None else fi.partition,
+            avail=None if fi is None else fi.avail,
         )
         # hits are served by their proxy and never reach the servers
         return state, batch.mask & ~hit, jnp.sum(hit).astype(jnp.float32)
+
+    def on_fault(self, state: fleet_lib.FleetState, info, cfg):
+        if info.inval is None:
+            return state
+        return fleet_lib.remap_invalidate(state, info.inval)
 
     def on_slow(self, state: fleet_lib.FleetState, cfg, knobs: Knobs):
         lease = cfg.lease_ms if cfg.cache_mode == "lease" else jnp.inf

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import cache as cache_lib
 from repro.core import controllers as ctrl_lib
+from repro.core import faults as faults_lib
 from repro.core import fleet as fleet_lib
 from repro.core import hashring, telemetry
 from repro.core import middleware as mw_lib
@@ -83,6 +84,11 @@ class SimConfig:
     controller: str = "hysteresis"
     consensus: str = "mean"  # mean | median | max (fleet view reducer)
     ablate: str = ""  # comma-joined subset of controllers.ABLATIONS
+    # fault injection (repro.core.faults): tuple of registered fault
+    # names and/or FaultEvent instances, compiled host-side into
+    # time-indexed schedules riding the scan xs.  None and () are both
+    # the identically-untouched zero-fault engine (golden contract).
+    faults: Optional[Tuple] = None
     # reference engine: unroll the routing waves as a Python loop (the
     # pre-scan semantics, O(G) trace size) — parity tests and the E10
     # "before" baseline; production always uses the wave scan
@@ -129,6 +135,24 @@ class SimConfig:
             raise ValueError(
                 f"SimConfig.gossip_ms must be >= 0, got {self.gossip_ms!r}"
             )
+        if self.faults is not None:
+            if not isinstance(self.faults, (tuple, list)):
+                raise ValueError(
+                    f"SimConfig.faults must be a tuple of fault names "
+                    f"or FaultEvent, got {self.faults!r}"
+                )
+            # canonicalize eagerly (frozen dataclass): names become
+            # default events, lists become tuples — keeps the config
+            # hashable for jit static args and the fault compiler cache
+            object.__setattr__(
+                self, "faults", faults_lib.normalize(self.faults)
+            )
+            faults_lib.validate_events(self.faults, m=self.m, P=self.P)
+
+    @property
+    def fault_events(self) -> Tuple:
+        """Canonical tuple of FaultEvent (empty when faults is None)."""
+        return faults_lib.normalize(self.faults)
 
     @property
     def t_fast_ticks(self) -> int:
@@ -561,23 +585,36 @@ def _route_waves_unrolled(
     r_route,
     keysg,
     maskg,
+    fc=None,
+    fx=None,
 ):
     """Reference engine: the pre-scan Python loop over waves, O(G) trace
     size, per-wave feasible-set gathers and fold_ins.  Kept for the
-    bit-for-bit parity contract and as the E10 "before" baseline."""
+    bit-for-bit parity contract and as the E10 "before" baseline.
+    Under a membership-changing fault schedule the in-tick gathers go
+    member-aware (this tick's detected mask), matching the scan
+    engine's per-epoch hoisted gathers key for key."""
     G = keysg.shape[0]
     ps = state.policy
     arrivals = jnp.zeros((cfg.m,), jnp.float32)
     stats = RouteStats.zeros()
+    member_aware = fc is not None and fc.has_remap
     for g in range(G):
         if cfg.fleet_routing:
             L_view = state.L_hat_p[(g + t) % G]
         else:
             L_view = state.L_hat + arrivals
+        if member_aware:
+            feas_g = hashring.feasible_set(
+                ring, keysg[g], cfg.d_max,
+                scan_width=fc.scan_width, member=fx.detected,
+            )
+        else:
+            feas_g = hashring.feasible_set(ring, keysg[g], cfg.d_max)
         ctx = RouteContext(
             keys=keysg[g],
             mask=maskg[g],
-            feas=hashring.feasible_set(ring, keysg[g], cfg.d_max),
+            feas=feas_g,
             L_view=L_view,
             p50_view=state.p50_hat,
             knobs=knobs,
@@ -598,6 +635,7 @@ def _tick(
     policy: policy_lib.Policy,
     mws: Tuple[mw_lib.Middleware, ...],
     controller: ctrl_lib.Controller,
+    fc,
     state: SimState,
     inputs,
 ) -> Tuple[SimState, TickOut]:
@@ -609,7 +647,13 @@ def _tick(
     # engine additionally receives the tick's pre-gathered feasible sets
     # (computed for the whole horizon before the scan — keys don't
     # depend on middleware, so the gather hoists); the unrolled
-    # reference keeps its in-tick per-wave gathers, as pre-PR.
+    # reference keeps its in-tick per-wave gathers, as pre-PR.  With a
+    # compiled fault program (``fc``, a trace-time constant), this
+    # tick's fault rows (faults.FaultXs) arrive as the last xs entry.
+    if fc is not None:
+        inputs, fx = inputs[:-1], inputs[-1]
+    else:
+        fx = None
     if cfg.unroll_waves:
         t, keys, mask, is_write = inputs
         feasg = None
@@ -632,6 +676,18 @@ def _tick(
         + jnp.sum(mask.astype(jnp.float32)),
     )
 
+    # --- fault context: remap invalidation BEFORE any stage serves -------
+    finfo = None
+    if fx is not None:
+        finfo = faults_lib.tick_info(fc, fx)
+        if finfo.inval is not None:
+            state = state._replace(
+                mw=tuple(
+                    mw.on_fault(ms, finfo, cfg)
+                    for mw, ms in zip(mws, state.mw)
+                )
+            )
+
     # --- middleware pipeline: stages may absorb requests at the proxy ----
     absorbed = jnp.zeros((), jnp.float32)
     mw_states = list(state.mw)
@@ -642,6 +698,7 @@ def _tick(
             is_write=is_write,
             now_ms=now_ms,
             rng=jax.random.fold_in(r_mw, i),
+            faults=finfo,
         )
         mw_states[i], mask, took = mw.on_batch(mw_states[i], batch, cfg)
         absorbed = absorbed + took
@@ -653,7 +710,18 @@ def _tick(
     knobs = controller.view(state.ctrl)
     if cfg.unroll_waves:
         ps, arrivals, stats = _route_waves_unrolled(
-            cfg, ring, policy, state, knobs, t, now_ms, r_route, keysg, maskg
+            cfg,
+            ring,
+            policy,
+            state,
+            knobs,
+            t,
+            now_ms,
+            r_route,
+            keysg,
+            maskg,
+            fc,
+            fx,
         )
     else:
         ps, arrivals, stats = _route_waves_scan(
@@ -673,7 +741,18 @@ def _tick(
 
     # --- queue dynamics: constant-rate servers, work-conserving ----------
     L = state.L + arrivals
-    served = jnp.minimum(L, cfg.serve_per_tick)
+    if fc is not None and (fc.has_brownout or fc.has_downtime):
+        # ground-truth faults bite immediately: browned-out servers
+        # drain slower, dead servers not at all (their queue freezes
+        # until rejoin)
+        rate = jnp.full((cfg.m,), cfg.serve_per_tick, jnp.float32)
+        if fc.has_brownout:
+            rate = rate * fx.scale
+        if fc.has_downtime:
+            rate = rate * fx.member.astype(jnp.float32)
+        served = jnp.minimum(L, rate)
+    else:
+        served = jnp.minimum(L, cfg.serve_per_tick)
     L = L - served
     lat_pred = (state.L + arrivals) * cfg.service_ms  # wait of new arrival
 
@@ -698,6 +777,14 @@ def _tick(
         )
 
     def _signals(s: SimState, B, p99, jitter) -> Signals:
+        # availability / membership telemetry: constants (full) on the
+        # zero-fault path, this tick's detected view under a schedule
+        if fx is None:
+            avail = jnp.ones(())
+            member = jnp.ones((cfg.m,))
+        else:
+            avail = fx.avail
+            member = fx.detected.astype(jnp.float32)
         return Signals(
             B=B,
             p99=p99,
@@ -706,6 +793,8 @@ def _tick(
             write_mix=s.win_writes / jnp.maximum(s.win_events, 1.0),
             jitter=jitter,
             rtt_ms=cfg.rtt_ms,
+            avail=avail,
+            member=member,
         )
 
     def ingest(s: SimState) -> SimState:
@@ -720,7 +809,12 @@ def _tick(
             L_hat = telemetry.ewma(s.L_hat, s.L, ctrl_lib.ALPHA_FAST)
         p50 = telemetry.ewma(s.p50_hat, p50_o, ctrl_lib.ALPHA_FAST)
         p99 = telemetry.ewma(s.p99_hat, p99_o, ctrl_lib.ALPHA_FAST)
-        B = telemetry.imbalance(L_hat)
+        if fc is not None and fc.has_remap:
+            # survivors-only imbalance: a dead server's frozen queue
+            # must not pin B(t) for the whole outage
+            B = telemetry.imbalance_masked(L_hat, fx.detected)
+        else:
+            B = telemetry.imbalance(L_hat)
         jit = jax.random.uniform(
             jax.random.fold_in(s.rng, 3), (), minval=-1.0, maxval=1.0
         )
@@ -736,11 +830,15 @@ def _tick(
     is_slow = (t1 % cfg.t_slow_ticks) == 0
 
     def slow(s: SimState) -> SimState:
+        if fc is not None and fc.has_remap:
+            B_slow = telemetry.imbalance_masked(s.L_hat, fx.detected)
+        else:
+            B_slow = telemetry.imbalance(s.L_hat)
         ctrl, k = controller.slow(
             s.ctrl,
             _signals(
                 s,
-                telemetry.imbalance(s.L_hat),
+                B_slow,
                 jnp.max(s.p99_hat),
                 jnp.zeros((), jnp.float32),
             ),
@@ -794,7 +892,9 @@ def init_state(
     )
 
 
-def _scan_inputs(cfg: SimConfig, ring: hashring.Ring, keys, mask, is_write):
+def _scan_inputs(
+    cfg: SimConfig, ring: hashring.Ring, keys, mask, is_write, fc=None
+):
     """Per-tick scan inputs for one (T, R) workload grid.
 
     The tick clock is an unbatched arange (see ``_tick``).  For the scan
@@ -802,17 +902,37 @@ def _scan_inputs(cfg: SimConfig, ring: hashring.Ring, keys, mask, is_write):
     one batched call — (T, G, R/G, d_max) riding the scan's xs — so key
     hashing and the first-occurrence scan leave the per-tick path
     completely.  The unrolled reference keeps its in-tick gathers.
+
+    With a compiled fault schedule (``fc``), storm traffic is overlaid
+    on the workload grid first (so the hoisted gathers see the storm
+    keys), membership epochs make the hoisted gathers member-aware, and
+    the per-tick fault rows (``faults.FaultXs``) join the xs tuple.
     """
+    if fc is not None and fc.has_storm:
+        keys, mask, is_write = faults_lib.apply_traffic(
+            fc, keys, mask, is_write
+        )
     ticks = jnp.arange(keys.shape[0], dtype=jnp.int32)
     if cfg.unroll_waves:
-        return (ticks, keys, mask, is_write)
-    feasg = hashring.feasible_set(ring, _wave_split(cfg, keys), cfg.d_max)
-    return (ticks, feasg, keys, mask, is_write)
+        base = (ticks, keys, mask, is_write)
+    else:
+        keysg = _wave_split(cfg, keys)
+        if fc is not None:
+            feasg = faults_lib.feasible_by_epoch(
+                ring, keysg, cfg.d_max, fc
+            )
+        else:
+            feasg = hashring.feasible_set(ring, keysg, cfg.d_max)
+        base = (ticks, feasg, keys, mask, is_write)
+    if fc is not None:
+        base = base + (faults_lib.make_xs(fc),)
+    return base
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
     ring = hashring.make_ring(cfg.m, cfg.V)
+    fc = faults_lib.compile_faults(cfg, int(keys.shape[0]))
     step = functools.partial(
         _tick,
         cfg,
@@ -820,8 +940,9 @@ def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
         policy_lib.get(cfg.policy),
         _middlewares(cfg),
         _controller(cfg),
+        fc,
     )
-    xs = _scan_inputs(cfg, ring, keys, mask, is_write)
+    xs = _scan_inputs(cfg, ring, keys, mask, is_write, fc)
     return jax.lax.scan(step, state, xs)
 
 
@@ -853,6 +974,7 @@ def _run_scan_sweep(
     """
     _SWEEP_TRACES[0] += 1
     ring = hashring.make_ring(cfg.m, cfg.V)
+    fc = faults_lib.compile_faults(cfg, int(keys.shape[1]))
     step = functools.partial(
         _tick,
         cfg,
@@ -860,12 +982,13 @@ def _run_scan_sweep(
         policy_lib.get(cfg.policy),
         _middlewares(cfg),
         _controller(cfg),
+        fc,
     )
 
     def run(st, k, mk, w):
         # unbatched tick clock + per-workload hoisted feasible sets: both
         # stay unbatched under the seed vmap (computed once per workload)
-        grids = _scan_inputs(cfg, ring, k, mk, w)
+        grids = _scan_inputs(cfg, ring, k, mk, w, fc)
         if metrics == "summary":
 
             def tick(carry, xs):
@@ -907,7 +1030,7 @@ def warmup(
         N=cfg.N,
     )
     warm_cfg = dataclasses.replace(
-        cfg, policy="hash", cache_enabled=False, middleware=()
+        cfg, policy="hash", cache_enabled=False, middleware=(), faults=None
     )
     st = init_state(warm_cfg)
     _, outs = _run_scan(warm_cfg, st, wl.keys, wl.mask, wl.is_write)

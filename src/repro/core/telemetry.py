@@ -184,6 +184,25 @@ def imbalance(L_hat: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
     return jnp.std(L_hat) / (jnp.mean(L_hat) + eps)
 
 
+def imbalance_masked(
+    L_hat: jnp.ndarray, live: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    """:func:`imbalance` over the detected-live servers only.
+
+    A crashed server's frozen queue would otherwise dominate B(t) and
+    pin the controller at maximum pressure for the whole outage; the
+    control question during a membership fault is whether the
+    *survivors* are balanced.  With every server live this is exactly
+    :func:`imbalance` (weights all one), so the fault engine can swap
+    it in unconditionally on membership-fault paths.
+    """
+    w = jnp.asarray(live, L_hat.dtype)
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    mu = jnp.sum(L_hat * w) / n
+    var = jnp.sum(w * (L_hat - mu) ** 2) / n
+    return jnp.sqrt(var) / (mu + eps)
+
+
 # ---------------------------------------------------------------------------
 # Streaming histogram sketch (metrics="summary" accumulator)
 # ---------------------------------------------------------------------------

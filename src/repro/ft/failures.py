@@ -32,8 +32,11 @@ class FailureDetector:
     telemetry pattern from the paper's control loop)."""
 
     def __init__(self, hosts: int, *, timeout_s: float = 10.0,
-                 straggler_factor: float = 1.5, alpha: float = 0.2):
-        now = time.monotonic()
+                 straggler_factor: float = 1.5, alpha: float = 0.2,
+                 now: Optional[float] = None):
+        # ``now`` injects the initial clock (tests / simulated time);
+        # every host starts presumed-alive as of that instant
+        now = now if now is not None else time.monotonic()
         self.hosts: Dict[int, HostState] = {
             h: HostState(last_heartbeat=now) for h in range(hosts)}
         self.timeout_s = timeout_s

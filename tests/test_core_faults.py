@@ -1,0 +1,374 @@
+"""Fault registry, schedule compiler, and the faulted engine.
+
+The central contracts:
+
+* ZERO-COST-WHEN-OFF — ``faults=None``, ``faults=()``, and a benign
+  never-firing event all reproduce the PR 5 golden engine bit-for-bit.
+* Ground truth vs detection — a crashed server stops serving instantly
+  but stays in the routed ring until the heartbeat timeout expires.
+* Remap invalidation — after an epoch flip, no proxy (shared cache or
+  fleet, any P) serves an owner-changed entry without revalidation.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FaultEvent, SimConfig, make_workload, simulate
+from repro.core import cache as cache_lib
+from repro.core import controllers as ctrl_lib
+from repro.core import faults
+from repro.core import fleet as fleet_lib
+
+WL = make_workload("bursty", T=160, m=8, seed=3, N=512)
+GOLDEN = "tests/data/control_golden.npz"
+
+
+def _cfg(**kw):
+    kw.setdefault("m", 8)
+    kw.setdefault("N", 512)
+    kw.setdefault("policy", "midas")
+    return SimConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry + validation
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_builtin_kinds():
+    for kind in ("proxy_crash", "proxy_join", "server_brownout",
+                 "gossip_partition", "ckpt_storm_fleet"):
+        assert kind in faults.available()
+
+
+def test_unknown_kind_lists_alternatives():
+    with pytest.raises(ValueError, match="proxy_crash"):
+        faults.get_class("power_cut")
+    with pytest.raises(ValueError, match="available"):
+        _cfg(faults=("power_cut",))
+
+
+def test_config_validation_errors():
+    with pytest.raises(ValueError, match="tuple"):
+        _cfg(faults="proxy_crash")  # a bare string is a bug, not a list
+    with pytest.raises(ValueError, match="target"):
+        _cfg(faults=(FaultEvent("proxy_crash", target=8),))
+    with pytest.raises(ValueError, match="magnitude"):
+        _cfg(faults=(FaultEvent("server_brownout", magnitude=0.0),))
+    with pytest.raises(ValueError, match="proxy"):
+        _cfg(faults=(FaultEvent("gossip_partition", target=99),))
+    with pytest.raises(ValueError, match="t0"):
+        _cfg(faults=(FaultEvent("proxy_crash", t0=-5),))
+
+
+def test_names_normalize_to_default_events():
+    cfg = _cfg(faults=("server_brownout",))
+    assert cfg.faults == (FaultEvent("server_brownout"),)
+    assert cfg.fault_events == cfg.faults
+    assert _cfg().fault_events == ()
+
+
+def test_parse_fault_cli_specs():
+    ev = faults.parse_fault("proxy_crash:t0=200,duration=300,target=2")
+    assert ev == FaultEvent("proxy_crash", t0=200, duration=300, target=2)
+    ev = faults.parse_fault("ckpt_storm_fleet:magnitude=0.25")
+    assert ev.magnitude == 0.25
+    with pytest.raises(ValueError, match="available"):
+        faults.parse_fault("nope:t0=1")
+    with pytest.raises(ValueError, match="parameter"):
+        faults.parse_fault("proxy_crash:frequency=3")
+
+
+def test_all_dead_schedule_rejected():
+    cfg = _cfg(m=2, faults=(
+        FaultEvent("proxy_crash", t0=10, duration=50, target=0),
+        FaultEvent("proxy_crash", t0=10, duration=50, target=1),
+    ))
+    with pytest.raises(ValueError, match="live"):
+        simulate(cfg, WL, do_warmup=False)
+
+
+# ---------------------------------------------------------------------------
+# Compiler: detection, epochs, flags
+# ---------------------------------------------------------------------------
+
+
+def test_compile_none_for_empty():
+    assert faults.compile_faults(_cfg(), 160) is None
+    assert faults.compile_faults(_cfg(faults=()), 160) is None
+
+
+def test_detection_lags_ground_truth():
+    cfg = _cfg(faults=(FaultEvent("proxy_crash", t0=40, duration=60,
+                                  target=0),))
+    fc = faults.compile_faults(cfg, 160)
+    K = fc.timeout_ticks
+    assert K == faults.detect_ticks(cfg.dt_ms) == 10  # 500ms / 50ms
+    assert not fc.member[40:100, 0].any()
+    # presumed alive through the timeout, detected dead after it
+    assert fc.detected[40:40 + K, 0].all()
+    assert not fc.detected[40 + K:100, 0].any()
+    # rejoin heartbeat makes re-detection immediate
+    assert fc.detected[100:, 0].all()
+    assert fc.has_downtime and fc.has_remap
+    assert not (fc.has_brownout or fc.has_partition or fc.has_storm)
+    # three epochs: all-live, server0-out, all-live again
+    assert fc.epoch_masks.shape[0] == 3
+    assert fc.owner_by_epoch is not None
+    # epoch flips only where detection changed
+    flip = fc.epoch != fc.epoch_prev
+    assert flip.sum() == 2 and flip[50] and flip[100]
+
+
+def test_benign_flags_all_off():
+    cfg = _cfg(faults=(FaultEvent("server_brownout", t0=40, duration=60,
+                                  target=1, magnitude=1.0),))
+    fc = faults.compile_faults(cfg, 160)
+    assert fc is not None
+    assert not (fc.has_downtime or fc.has_remap or fc.has_brownout
+                or fc.has_partition or fc.has_storm)
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: the zero-fault engine is untouched
+# ---------------------------------------------------------------------------
+
+
+def test_zero_fault_paths_reproduce_golden():
+    g = np.load(GOLDEN)
+    want = g["midas_cache/queue_timeline"]
+    for fa in (None, ()):
+        cfg = _cfg(middleware=("cache",), faults=fa)
+        r = simulate(cfg, WL, do_warmup=False)
+        np.testing.assert_array_equal(r.queue_timeline, want)
+        np.testing.assert_array_equal(r.d_timeline,
+                                      g["midas_cache/d_timeline"])
+
+
+def test_benign_event_value_equal_to_golden():
+    """A never-firing event (brownout at magnitude 1.0) keeps every
+    has_* flag off: the engine takes value-identical paths."""
+    g = np.load(GOLDEN)
+    cfg = _cfg(middleware=("cache",),
+               faults=(FaultEvent("server_brownout", t0=40, duration=60,
+                                  target=1, magnitude=1.0),))
+    r = simulate(cfg, WL, do_warmup=False)
+    np.testing.assert_array_equal(r.queue_timeline,
+                                  g["midas_cache/queue_timeline"])
+    np.testing.assert_array_equal(r.cache_hits,
+                                  g["midas_cache/cache_hits"])
+
+
+# ---------------------------------------------------------------------------
+# Faulted engine behaviour
+# ---------------------------------------------------------------------------
+
+CRASH = (FaultEvent("proxy_crash", t0=40, duration=60, target=0),)
+
+
+def test_crash_freezes_dead_server_and_recovers():
+    cfg = _cfg(middleware=("cache",), faults=CRASH)
+    r = simulate(cfg, WL, do_warmup=False)
+    fc = faults.compile_faults(cfg, 160)
+    q0 = r.queue_timeline[:, 0]
+    K = fc.timeout_ticks
+    # once detection lands, no new arrivals reach the dead server and
+    # nothing drains: its queue is exactly frozen until rejoin
+    frozen = q0[40 + K:100]
+    assert (frozen == frozen[0]).all()
+    assert (r.arrivals[40 + K:100, 0] == 0).all()
+    # it serves again after rejoin and eventually drains
+    assert r.arrivals[100:, 0].sum() > 0
+
+
+def test_crash_scan_unroll_parity():
+    cfg = _cfg(middleware=("cache",), faults=CRASH)
+    r = simulate(cfg, WL, do_warmup=False)
+    ru = simulate(dataclasses.replace(cfg, unroll_waves=True), WL,
+                  do_warmup=False)
+    np.testing.assert_array_equal(r.queue_timeline, ru.queue_timeline)
+    np.testing.assert_array_equal(r.arrivals, ru.arrivals)
+    np.testing.assert_array_equal(r.cache_hits, ru.cache_hits)
+
+
+def test_brownout_slows_target_drain():
+    cfg = _cfg(faults=(FaultEvent("server_brownout", t0=40, duration=80,
+                                  target=1, magnitude=0.25),))
+    r = simulate(cfg, WL, do_warmup=False)
+    base = simulate(_cfg(), WL, do_warmup=False)
+    win = slice(45, 120)
+    assert (r.queue_timeline[win, 1].mean()
+            > base.queue_timeline[win, 1].mean())
+
+
+def test_storm_adds_write_arrivals():
+    cfg = _cfg(middleware=("cache",),
+               faults=(FaultEvent("ckpt_storm_fleet", t0=40, duration=40,
+                                  magnitude=0.5),))
+    r = simulate(cfg, WL, do_warmup=False)
+    base = simulate(_cfg(middleware=("cache",)), WL, do_warmup=False)
+    storm_win = r.arrivals[40:80].sum()
+    assert storm_win > base.arrivals[40:80].sum()
+    # outside the window the workload is untouched
+    np.testing.assert_array_equal(r.arrivals[:40], base.arrivals[:40])
+
+
+def test_partition_spikes_fleet_staleness():
+    base = _cfg(middleware=("fleet_cache",), P=4, gossip_ms=100.0)
+    cfg = dataclasses.replace(
+        base,
+        faults=(FaultEvent("gossip_partition", t0=20, duration=120,
+                           target=1),),
+    )
+    r = simulate(cfg, WL, do_warmup=False)
+    rb = simulate(base, WL, do_warmup=False)
+    stale = np.asarray(r.final_cache.stale_p)
+    stale_b = np.asarray(rb.final_cache.stale_p)
+    # the partitioned proxy serves from an ever-staler snapshot
+    assert stale[1] >= stale_b[1]
+    assert stale.sum() >= stale_b.sum()
+
+
+# ---------------------------------------------------------------------------
+# Remap invalidation: the no-stale-owner property
+# ---------------------------------------------------------------------------
+
+
+def test_remap_invalidate_shared_cache():
+    N = 64
+    c = cache_lib.init_cache(N)
+    c = c._replace(
+        expiry_ms=jnp.full((N,), 1e9, jnp.float32),
+        cached_version=jnp.zeros((N,), jnp.int32),
+    )
+    moved = jnp.arange(N) % 3 == 0
+    c = cache_lib.remap_invalidate(c, moved)
+    keys = jnp.arange(N, dtype=jnp.int32)
+    ones = jnp.ones((N,), bool)
+    _, hit = cache_lib.lookup_batch(
+        c, keys, ones, ~ones, jnp.asarray(50.0)
+    )
+    hit = np.asarray(hit)
+    assert not hit[np.asarray(moved)].any()
+    assert hit[~np.asarray(moved)].all()
+
+
+@pytest.mark.parametrize("P", [1, 2, 8])
+def test_remap_invalidate_fleet_property(P):
+    """No proxy — whatever lagged snapshot its gossip view selects —
+    serves an owner-changed entry without revalidation."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    N, D = 32, 4
+
+    @given(
+        moved_bits=st.lists(st.booleans(), min_size=N, max_size=N),
+        tick=st.integers(0, 10),
+    )
+    @settings(max_examples=20, deadline=None)
+    def prop(moved_bits, tick):
+        fs = fleet_lib.init_fleet(N, P, D)
+        # every view (converged + all snapshots) holds live entries
+        fs = fs._replace(
+            shared=fs.shared._replace(
+                expiry_ms=jnp.full((N,), 1e9, jnp.float32),
+                cached_version=jnp.zeros((N,), jnp.int32),
+            ),
+            lag_expiry=jnp.full((D, N), 1e9, jnp.float32),
+            tick=jnp.asarray(tick, jnp.int32),
+        )
+        moved = jnp.asarray(moved_bits)
+        fs = fleet_lib.remap_invalidate(fs, moved)
+        keys = jnp.arange(N, dtype=jnp.int32)
+        ones = jnp.ones((N,), bool)
+        proxy = fleet_lib.proxy_assign(N, P, fs.tick)
+        _, hit = fleet_lib.lookup_fleet(
+            fs, keys, ones, ~ones, proxy, jnp.asarray(50.0),
+            gossip_ms=100.0,
+        )
+        hit = np.asarray(hit)
+        assert not hit[np.asarray(moved)].any()
+        assert hit[~np.asarray(moved)].all()
+
+    prop()
+
+
+def test_faulted_run_serves_no_moved_entry():
+    """End-to-end: with a crash mid-run, replaying each epoch's owner
+    table shows cache hits never happen on a tick where the serving
+    ring's owner differs from the installing ring's owner without a
+    fresh install (spot check via total-hit accounting: hits under
+    fault <= hits without fault, since invalidation only removes)."""
+    cfg = _cfg(middleware=("cache",), faults=CRASH)
+    base = _cfg(middleware=("cache",))
+    r = simulate(cfg, WL, do_warmup=False)
+    rb = simulate(base, WL, do_warmup=False)
+    assert r.cache_hits.sum() <= rb.cache_hits.sum()
+
+
+# ---------------------------------------------------------------------------
+# Availability plumbing: install guard, Signals, controller reaction
+# ---------------------------------------------------------------------------
+
+
+def test_install_guard_under_degraded_avail():
+    N = 16
+    c = cache_lib.init_cache(N)
+    keys = jnp.arange(N, dtype=jnp.int32)
+    ones = jnp.ones((N,), bool)
+    degraded = jnp.asarray(0.875, jnp.float32)
+    c2, _ = cache_lib.lookup_batch(
+        c, keys, ones, ~ones, jnp.asarray(10.0), avail=degraded
+    )
+    assert int(c2.bypasses) == N  # nothing installed while degraded
+    assert (np.asarray(c2.expiry_ms) == 0.0).all()
+    c3, _ = cache_lib.lookup_batch(
+        c, keys, ones, ~ones, jnp.asarray(10.0),
+        avail=jnp.asarray(1.0, jnp.float32),
+    )
+    assert int(c3.bypasses) == 0  # full availability: installs proceed
+
+
+def test_hysteresis_reacts_to_degraded_avail():
+    cfg = _cfg()
+    ctrl = ctrl_lib.get("hysteresis")
+    st0 = ctrl.init(cfg, (0.15, 500.0))
+    calm = ctrl_lib.make_signals(B=0.0, p99=0.0, rtt_ms=cfg.rtt_ms)
+    # calm signals, full availability: no escalation
+    st1, _ = ctrl.fast(st0, calm)
+    assert int(st1.knobs.d) == int(st0.knobs.d)
+    # calm signals, degraded availability: escalate immediately
+    st2, _ = ctrl.fast(st0, calm._replace(avail=jnp.asarray(0.875)))
+    assert int(st2.knobs.d) == int(st0.knobs.d) + 1
+
+
+def test_no_fault_signal_ablation_blinds_controller():
+    cfg = _cfg()
+    ctrl = ctrl_lib.wrap_ablations(
+        ctrl_lib.get("hysteresis"), "no_fault_signal"
+    )
+    st0 = ctrl.init(cfg, (0.15, 500.0))
+    degraded = ctrl_lib.make_signals(
+        B=0.0, p99=0.0, rtt_ms=cfg.rtt_ms, avail=0.875
+    )
+    st1, _ = ctrl.fast(st0, degraded)
+    assert int(st1.knobs.d) == int(st0.knobs.d)  # flies blind
+
+
+def test_unknown_ablation_still_rejected():
+    with pytest.raises(ValueError, match="no_fault_signal"):
+        ctrl_lib.parse_ablations("no_cache")
+
+
+def test_storm_from_pool_calibration():
+    class _Pool:
+        def backlogs(self):
+            return [0, 30, 10, 0]
+
+    ev = faults.storm_from_pool(_Pool(), t0=5, duration=9)
+    assert ev.kind == "ckpt_storm_fleet"
+    assert ev.t0 == 5 and ev.duration == 9
+    assert ev.magnitude == pytest.approx(0.75)

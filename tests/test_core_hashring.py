@@ -68,6 +68,95 @@ def test_make_ring_is_memoized():
     assert hashring.make_ring(8, V=64) is not hashring.make_ring(8, 32)
 
 
+def test_member_primary_matches_feasible_under_membership():
+    """np/JAX parity: the numpy subring primary equals column 0 of the
+    member-aware feasible gather, for several live sets."""
+    m, V = 8, 64
+    ring = hashring.make_ring(m, V)
+    keys = jnp.arange(4000, dtype=jnp.int32)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        member = rng.random(m) > 0.4
+        if not member.any():
+            member[0] = True
+        np_prim = hashring.np_member_primary(m, V, member, np.asarray(keys))
+        feas = np.asarray(
+            hashring.feasible_set(
+                ring, keys, 4, scan_width=m * V,
+                member=jnp.asarray(member),
+            )
+        )
+        np.testing.assert_array_equal(feas[:, 0], np_prim)
+        # every feasible entry is a live server
+        assert member[feas].all()
+
+
+def test_member_all_live_is_bitwise_identity():
+    """member=all-ones takes the exact member-free path byte for byte."""
+    ring = hashring.make_ring(8, V=64)
+    keys = jnp.arange(2000, dtype=jnp.int32)
+    base = np.asarray(hashring.feasible_set(ring, keys, 4))
+    live = np.asarray(
+        hashring.feasible_set(
+            ring, keys, 4, member=jnp.ones(8, bool)
+        )
+    )
+    np.testing.assert_array_equal(base, live)
+
+
+def test_member_removal_minimal_disruption():
+    """Dropping one server only remaps the keys it owned; survivors'
+    keys keep their owner (consistent hashing on the subring)."""
+    m, V = 8, 64
+    keys = np.arange(20000)
+    full = np.ones(m, bool)
+    before = hashring.np_member_primary(m, V, full, keys)
+    for dead in (0, 3, 7):
+        member = full.copy()
+        member[dead] = False
+        after = hashring.np_member_primary(m, V, member, keys)
+        moved = before != after
+        # only the dead server's keys move, and never onto the dead one
+        assert (before[moved] == dead).all()
+        assert (after != dead).all()
+        assert ((~moved) | (before == dead)).all()
+
+
+def test_member_primary_rejects_bad_input():
+    import pytest
+
+    with pytest.raises(ValueError):
+        hashring.np_member_primary(8, 64, np.ones(7, bool), np.arange(4))
+    with pytest.raises(ValueError):
+        hashring.np_member_primary(8, 64, np.zeros(8, bool), np.arange(4))
+
+
+def test_member_removal_property():
+    import pytest
+
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        m=st.integers(2, 12),
+        dead=st.data(),
+    )
+    @settings(max_examples=25, deadline=None)
+    def prop(m, dead):
+        d = dead.draw(st.integers(0, m - 1))
+        keys = np.arange(3000)
+        full = np.ones(m, bool)
+        member = full.copy()
+        member[d] = False
+        before = hashring.np_member_primary(m, 32, full, keys)
+        after = hashring.np_member_primary(m, 32, member, keys)
+        moved = before != after
+        assert (before[moved] == d).all()
+        assert (after != d).all()
+
+    prop()
+
+
 def test_numpy_builder_matches_traced_hash():
     """The memoized numpy ring builder reproduces the jnp hash exactly."""
     m, V = 8, 64

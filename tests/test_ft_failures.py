@@ -1,0 +1,117 @@
+"""FailureDetector unit tests (injected clocks) and the detection-parity
+contract: the host-side detector and the fault compiler's in-sim
+``detect_available`` implement the SAME windowed-heartbeat rule."""
+import numpy as np
+import pytest
+
+from repro.core.faults import detect_available
+from repro.ft.failures import FailureDetector, elastic_plan
+
+
+def test_all_alive_at_init():
+    det = FailureDetector(4, timeout_s=10.0, now=0.0)
+    assert det.failed(now=10.0) == set()
+    assert det.failed(now=10.001) == {0, 1, 2, 3}
+
+
+def test_heartbeat_resets_timeout():
+    det = FailureDetector(3, timeout_s=5.0, now=0.0)
+    det.heartbeat(1, now=7.0)
+    assert det.failed(now=9.0) == {0, 2}
+    # host 1's clock restarted at 7.0
+    assert det.failed(now=12.0) == {0, 2}
+    assert det.failed(now=12.5) == {0, 1, 2}
+
+
+def test_failed_is_strict_inequality():
+    det = FailureDetector(1, timeout_s=5.0, now=0.0)
+    assert det.failed(now=5.0) == set()  # exactly at timeout: alive
+    assert det.failed(now=5.0 + 1e-9) == {0}
+
+
+def test_straggler_scoring():
+    det = FailureDetector(4, timeout_s=10.0, now=0.0)
+    for h in range(3):
+        det.heartbeat(h, step_time_s=1.0, now=1.0)
+    det.heartbeat(3, step_time_s=10.0, now=1.0)
+    assert det.stragglers() == {3}
+    # fewer than two reporters: no verdict
+    det2 = FailureDetector(4, timeout_s=10.0, now=0.0)
+    det2.heartbeat(0, step_time_s=9.0, now=1.0)
+    assert det2.stragglers() == set()
+
+
+def test_straggler_ewma_recovers():
+    det = FailureDetector(2, straggler_factor=1.5, alpha=0.5, now=0.0)
+    det.heartbeat(0, step_time_s=1.0, now=1.0)
+    det.heartbeat(1, step_time_s=8.0, now=1.0)
+    assert det.stragglers() == {1}
+    for t in range(2, 12):
+        det.heartbeat(0, step_time_s=1.0, now=float(t))
+        det.heartbeat(1, step_time_s=1.0, now=float(t))
+    assert det.stragglers() == set()
+
+
+def test_elastic_plan_shapes():
+    assert elastic_plan(8, set(), min_hosts=1)["action"] == "abort"
+    p = elastic_plan(8, set(range(8)))
+    assert p["action"] == "resume" and p["new_dp"] == 8
+    p = elastic_plan(8, {0, 1, 2, 3, 4, 6})
+    assert p["action"] == "reshard"
+    assert p["new_dp"] == 4 and p["dropped"] == [5, 7]
+
+
+# ---------------------------------------------------------------------------
+# Parity: FailureDetector == faults.detect_available on a tick grid
+# ---------------------------------------------------------------------------
+
+
+def _detector_grid(member: np.ndarray, K: int) -> np.ndarray:
+    """Replay a (T, m) ground-truth membership grid through the host
+    detector: tick j maps to time j (dt = 1 s), ``timeout_s = K``, and
+    the initial presumed-alive heartbeat lands at time -1 — the same
+    virtual-alive padding ``detect_available`` applies before t = 0."""
+    T, m = member.shape
+    det = FailureDetector(m, timeout_s=float(K), now=-1.0)
+    out = np.zeros((T, m), bool)
+    for t in range(T):
+        for h in range(m):
+            if member[t, h]:
+                det.heartbeat(h, now=float(t))
+        dead = det.failed(now=float(t))
+        out[t] = [h not in dead for h in range(m)]
+    return out
+
+
+@pytest.mark.parametrize("K", [1, 3, 10])
+def test_detector_matches_in_sim_reference(K):
+    rng = np.random.default_rng(7)
+    member = rng.random((60, 5)) > 0.3
+    got = _detector_grid(member, K)
+    want = detect_available(member, K)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_detector_parity_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        data=st.data(),
+        T=st.integers(1, 40),
+        m=st.integers(1, 6),
+        K=st.integers(1, 8),
+    )
+    @settings(max_examples=30, deadline=None)
+    def prop(data, T, m, K):
+        bits = data.draw(
+            st.lists(
+                st.booleans(), min_size=T * m, max_size=T * m
+            )
+        )
+        member = np.asarray(bits, bool).reshape(T, m)
+        np.testing.assert_array_equal(
+            _detector_grid(member, K), detect_available(member, K)
+        )
+
+    prop()
