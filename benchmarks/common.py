@@ -1,10 +1,36 @@
-"""Benchmark harness helpers: timing + CSV emission."""
+"""Benchmark harness helpers: timing, CSV emission, the shared runner
+CLI, and the incremental JSON artifact writer.
+
+Every sweep-style runner (E4 control, E8 scenario matrix, E10 engine,
+E11 shard, E12 resilience) used to duplicate its arg parsing and its
+rewrite-after-every-block JSON idiom; both now live here.  A runner
+exposes ``run(opts: BenchOpts | None = None)`` (what ``benchmarks.run``
+dispatches with defaults) plus a ``main()`` built from
+:func:`parse_opts`, so
+
+    PYTHONPATH=src python -m benchmarks.control_stability --only aimd
+    PYTHONPATH=src python -m benchmarks.scenario_matrix --seeds 2 \
+        --devices 4 --out /tmp/artifacts
+
+work uniformly: ``--only`` filters the runner's primary sweep axis
+(controllers / policies / faults / configs), ``--seeds`` overrides the
+seed count per cell, ``--devices`` shards each sweep's seed axis over an
+emulated or real device mesh (``SweepSpec.devices``), and ``--out``
+redirects the JSON artifacts.
+"""
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
 import time
-from typing import Callable, List, Tuple
+from pathlib import Path
+from typing import Callable, List, Optional, Sequence, Tuple
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# default artifact directory — every sweep runner writes here
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -21,3 +47,93 @@ def timed(fn: Callable, *args, repeat: int = 1, **kw):
         out = fn(*args, **kw)
     dt = (time.perf_counter() - t0) / repeat
     return out, dt * 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchOpts:
+    """Parsed shared CLI options, with runner defaults as fallbacks."""
+
+    only: Tuple[str, ...] = ()
+    n_seeds: Optional[int] = None
+    devices: int = 1
+    out: Optional[Path] = None
+
+    def pick(self, values: Sequence[str], axis: str) -> Tuple[str, ...]:
+        """Filter a runner's primary sweep axis by ``--only`` (no-op
+        when unset); unknown names raise with the alternatives."""
+        values = tuple(values)
+        if not self.only:
+            return values
+        unknown = [o for o in self.only if o not in values]
+        if unknown:
+            raise ValueError(
+                f"unknown {axis} {', '.join(map(repr, unknown))}; "
+                f"available: {', '.join(values)}"
+            )
+        return tuple(v for v in values if v in self.only)
+
+    def seeds(self, default: Tuple[int, ...]) -> Tuple[int, ...]:
+        """Seed tuple: ``--seeds N`` means seeds 0..N-1."""
+        if self.n_seeds is None:
+            return tuple(default)
+        return tuple(range(self.n_seeds))
+
+
+def parse_opts(
+    argv: Optional[Sequence[str]] = None,
+    *,
+    prog: str,
+    description: str,
+    axis: str = "cells",
+) -> BenchOpts:
+    """The shared runner CLI (``--only``, ``--seeds``, ``--devices``,
+    ``--out``)."""
+    ap = argparse.ArgumentParser(prog=prog, description=description)
+    ap.add_argument(
+        "--only",
+        default="",
+        help=f"comma-separated subset of this runner's {axis}",
+    )
+    ap.add_argument(
+        "--seeds",
+        type=int,
+        default=None,
+        metavar="N",
+        help="run seeds 0..N-1 per cell (overrides the runner default)",
+    )
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=1,
+        help="shard each sweep's seed axis over this many devices "
+        "(SweepSpec.devices; on CPU needs XLA_FLAGS="
+        "--xla_force_host_platform_device_count)",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        metavar="DIR",
+        help="artifact output directory (default: experiments/sim)",
+    )
+    args = ap.parse_args(argv)
+    only = tuple(s.strip() for s in args.only.split(",") if s.strip())
+    return BenchOpts(
+        only=only,
+        n_seeds=args.seeds,
+        devices=args.devices,
+        out=Path(args.out) if args.out else None,
+    )
+
+
+class Artifact:
+    """Incremental JSON artifact: call :meth:`write` after every block,
+    rewriting the whole doc — a CI timeout (rc 124, tolerated) still
+    uploads valid partial JSON."""
+
+    def __init__(self, filename: str, out: Optional[Path] = None):
+        base = out if out is not None else OUT
+        base.mkdir(parents=True, exist_ok=True)
+        self.path = base / filename
+
+    def write(self, doc: dict) -> None:
+        self.path.write_text(json.dumps(doc, indent=1))

@@ -3,11 +3,12 @@
 The paper's §IV-E stability story, measured across the whole controller
 registry instead of a single hardcoded loop: every registered controller
 (`hysteresis` reference, `aimd`, `deadband_pid`, `static` baseline) runs
-the full MIDAS stack over composed scenarios, one batched
-``simulate_sweep`` per controller (scenarios and seeds ride the vmapped
-scan — ONE compile per controller), under ``metrics="summary"``, whose
-:class:`repro.core.sim.KnobTrace` ys keep the knob trajectories that
-stability metrics need without materializing (T, m) timelines.
+the full MIDAS stack over composed scenarios, one
+:class:`repro.core.sweep.SweepSpec` per controller (scenarios and seeds
+ride the vmapped scan — ONE compile per controller), under
+``metrics="summary"``, whose :class:`repro.core.sim.KnobTrace` ys keep
+the knob trajectories that stability metrics need without materializing
+(T, m) timelines.
 
 Per (controller, scenario) cell:
   * oscillation_per_min — d-knob flips per minute (the paper's measure);
@@ -26,23 +27,24 @@ Per (controller, scenario) cell:
 
 The §III-B warmup targets are controller-independent (warmup runs the
 ``hash`` policy bare), so they are derived ONCE and shared across every
-cell via ``simulate_sweep(..., targets=...)`` — one warmup compile for
-the whole matrix instead of one per controller.
+cell via ``SweepSpec(..., targets=...)`` — one warmup compile for the
+whole matrix instead of one per controller.
 
 Emits ``experiments/sim/control_matrix.json`` incrementally (the doc is
 rewritten after every controller, so a CI timeout still uploads a valid
-partial artifact) plus CSV rows.
+partial artifact) plus CSV rows.  ``--only`` subsets controllers;
+``--devices`` shards each sweep's seed axis.
 """
 from __future__ import annotations
 
-import json
-from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core import (SimConfig, controllers, make_workload,
-                        simulate_sweep)
+from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts,
+                               timed)
+from repro.core import (SimConfig, SweepSpec, controllers,
+                        make_workload, run_sweep)
 from repro.core.sim import warmup
 
 T = 1200           # 60 s at dt=50 ms — several burst/storm cycles
@@ -51,7 +53,6 @@ SEEDS = (0, 1, 2, 3)
 POLICY = "midas"
 MIDDLEWARE = ("cache",)
 SCENARIOS = ("bursty", "rename_storm", "flash_crowd", "job_startup")
-OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
 DT_MS = 50.0
 
 
@@ -92,10 +93,11 @@ def _cell(rows) -> dict:
     }
 
 
-def run() -> None:
-    OUT.mkdir(parents=True, exist_ok=True)
-    ctrl_names = controllers.available()
-    wls = [make_workload(n, T=T, m=M, seed=0) for n in SCENARIOS]
+def run(opts: Optional[BenchOpts] = None) -> None:
+    opts = opts or BenchOpts()
+    ctrl_names = opts.pick(controllers.available(), "controllers")
+    seeds = opts.seeds(SEEDS)
+    wls = tuple(make_workload(n, T=T, m=M, seed=0) for n in SCENARIOS)
     # one §III-B warmup for the whole matrix (controller-independent)
     targets, warm_us = timed(
         warmup, SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE)
@@ -103,9 +105,10 @@ def run() -> None:
     emit("control/warmup_targets", warm_us,
          f"b_tgt={targets[0]:.3f};p99_tgt={targets[1]:.1f}ms (shared)")
     doc = {
-        "T": T, "m": M, "dt_ms": DT_MS, "seeds": list(SEEDS),
+        "T": T, "m": M, "dt_ms": DT_MS, "seeds": list(seeds),
         "policy": POLICY, "middleware": list(MIDDLEWARE),
         "controllers": list(ctrl_names), "scenarios": list(SCENARIOS),
+        "devices": opts.devices,
         "knob_specs": [
             {"name": s.name, "lo": s.lo, "hi": s.hi, "init": s.init,
              "step": s.step}
@@ -113,20 +116,23 @@ def run() -> None:
         ],
         "cells": {},
     }
-    path = OUT / "control_matrix.json"
+    art = Artifact("control_matrix.json", opts.out)
     for ctrl in ctrl_names:
-        cfg = SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE,
-                        controller=ctrl)
         # scenarios × seeds batched onto one compiled sweep per
         # controller; summary metrics carry the knob trajectories
-        sweep, us = timed(simulate_sweep, cfg, wls, policies=(POLICY,),
-                          seeds=SEEDS, metrics="summary",
-                          targets=targets)
+        spec = SweepSpec(
+            config=SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE,
+                             controller=ctrl),
+            workloads=wls, policies=(POLICY,), seeds=seeds,
+            metrics="summary", devices=opts.devices,
+            targets=targets)
+        res, us = timed(run_sweep, spec)
         doc["cells"][ctrl] = {
-            name: _cell(rows) for name, rows in sweep[POLICY].items()
+            name: _cell(res.rows(policy=POLICY, workload=name))
+            for name in SCENARIOS
         }
         # incremental artifact: a timeout still leaves valid JSON
-        path.write_text(json.dumps(doc, indent=1))
+        art.write(doc)
         for name in SCENARIOS:
             c = doc["cells"][ctrl][name]
             emit(f"control/{ctrl}/{name}", us,
@@ -143,3 +149,13 @@ def run() -> None:
              f"rename_storm: osc/min={c['oscillation_per_min']} "
              f"settle={c['settle_ms']:.0f}ms churn={c['knob_churn']} "
              f"mean_q={c['mean_queue']}")
+
+
+def main(argv=None) -> None:
+    run(parse_opts(argv, prog="benchmarks.control_stability",
+                   description=__doc__.splitlines()[0],
+                   axis="controllers"))
+
+
+if __name__ == "__main__":
+    main()

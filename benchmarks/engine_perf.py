@@ -18,32 +18,33 @@ Two measurements back DESIGN.md §9 and the README perf quick-look:
   speedup: the repo's first perf-trajectory artifact.
 
 Emits ``experiments/sim/BENCH_engine.json`` (written incrementally, so a
-CI timeout still leaves a valid artifact) and CSV rows.
+CI timeout still leaves a valid artifact) and CSV rows.  ``--only``
+subsets the sections (the engine config names plus ``e8_sweep``);
+``--devices`` shards the "after" sweep's seed axis.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import json
 import time
-from pathlib import Path
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts)
 # the "e8_sweep" section must measure exactly the E8 configuration —
 # import it rather than re-declaring, so the two can never drift
 from benchmarks.scenario_matrix import M, POLICY_STACKS as E8_STACKS
 from benchmarks.scenario_matrix import SEED, SEEDS as SWEEP_SEEDS
 from benchmarks.scenario_matrix import T as T_SWEEP
-from repro.core import SimConfig, hashring, make_workload, workloads
+from repro.core import (SimConfig, SweepSpec, hashring, make_workload,
+                        run_sweep, workloads)
 from repro.core import policies as policy_lib
 from repro.core import sim as sim_lib
 
 T_ENGINE = 400          # single-run horizon (compile + steady timing)
 REPEAT = 3
-OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
 
 # single-run configs: policy × middleware × n_groups × P × fleet
 CONFIGS = (
@@ -55,11 +56,7 @@ CONFIGS = (
     ("midas_fleet_p8", dict(policy="midas", middleware=("fleet_cache",),
                             fleet_routing=True, P=8, gossip_ms=100.0)),
 )
-
-
-def _write(doc: dict) -> None:
-    OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / "BENCH_engine.json").write_text(json.dumps(doc, indent=1))
+SECTIONS = tuple(name for name, _ in CONFIGS) + ("e8_sweep",)
 
 
 def _time_run(fn, *args):
@@ -133,15 +130,15 @@ def _legacy_sweep(cfg: SimConfig, states, tick0, keys, mask, is_write):
     return jax.vmap(one)(states, tick0, keys, mask, is_write)
 
 
-def _bench_e8_before(policy: str, mw, wls) -> dict:
+def _bench_e8_before(policy: str, mw, wls, seeds) -> dict:
     cfg = SimConfig(m=M, policy=policy, middleware=mw, unroll_waves=True)
-    S, W = len(SWEEP_SEEDS), len(wls)
+    S, W = len(seeds), len(wls)
     keys = jnp.repeat(jnp.stack([w.keys for w in wls]), S, axis=0)
     mask = jnp.repeat(jnp.stack([w.mask for w in wls]), S, axis=0)
     isw = jnp.repeat(jnp.stack([w.is_write for w in wls]), S, axis=0)
     per_seed = [
         sim_lib.init_state(dataclasses.replace(cfg, seed=s))
-        for s in SWEEP_SEEDS]
+        for s in seeds]
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_seed)
     states = jax.tree_util.tree_map(
         lambda x: jnp.tile(x, (W,) + (1,) * (x.ndim - 1)), stacked)
@@ -160,18 +157,24 @@ def _bench_e8_before(policy: str, mw, wls) -> dict:
     return {"compile_s": compile_s, "steady_s": steady_s}
 
 
-def _bench_e8_after(policy: str, mw, wls) -> dict:
-    cfg = SimConfig(m=M, policy=policy, middleware=mw)
+def _bench_e8_after(policy: str, mw, wls, seeds, devices: int) -> dict:
+    spec = SweepSpec(
+        config=SimConfig(m=M, policy=policy, middleware=mw),
+        workloads=tuple(wls), policies=(policy,), seeds=seeds,
+        metrics="summary", devices=devices, do_warmup=False)
 
     def run():
-        return sim_lib.simulate_sweep(
-            cfg, wls, seeds=SWEEP_SEEDS, do_warmup=False, metrics="summary")
+        return run_sweep(spec)
 
     compile_s, steady_s = _time_run(run)
     return {"compile_s": compile_s, "steady_s": steady_s}
 
 
-def run() -> None:
+def run(opts: Optional[BenchOpts] = None) -> None:
+    opts = opts or BenchOpts()
+    sections = opts.pick(SECTIONS, "sections")
+    seeds = opts.seeds(SWEEP_SEEDS)
+    art = Artifact("BENCH_engine.json", opts.out)
     doc: dict = {
         "meta": {
             "jax": jax.__version__,
@@ -179,28 +182,33 @@ def run() -> None:
             "T_engine": T_ENGINE,
             "T_sweep": T_SWEEP,
             "m": M,
-            "sweep_seeds": len(SWEEP_SEEDS),
+            "sweep_seeds": len(seeds),
+            "devices": opts.devices,
             "repeat": REPEAT,
         },
         "engine": [],
     }
     for name, overrides in CONFIGS:
+        if name not in sections:
+            continue
         doc["engine"].append(_bench_engine(name, overrides))
-        _write(doc)  # incremental: a timeout still leaves an artifact
+        art.write(doc)  # incremental: a timeout still leaves an artifact
 
     # ---- E8 sweep config, before (pre-PR engine) vs after ---------------
+    if "e8_sweep" not in sections:
+        return
     names = workloads.available()
     wls = [make_workload(n, T=T_SWEEP, m=M, seed=SEED) for n in names]
-    ticks = len(wls) * len(SWEEP_SEEDS) * T_SWEEP
+    ticks = len(wls) * len(seeds) * T_SWEEP
     sweep: dict = {
-        "workloads": len(wls), "seeds": len(SWEEP_SEEDS), "T": T_SWEEP,
+        "workloads": len(wls), "seeds": len(seeds), "T": T_SWEEP,
         "policies": {}, "before": {}, "after": {},
     }
     doc["e8_sweep"] = sweep
     tot_b = tot_a = 0.0
     for policy, mw in E8_STACKS.items():
-        after = _bench_e8_after(policy, mw, wls)
-        before = _bench_e8_before(policy, mw, wls)
+        after = _bench_e8_after(policy, mw, wls, seeds, opts.devices)
+        before = _bench_e8_before(policy, mw, wls, seeds)
         tot_b += before["steady_s"]
         tot_a += after["steady_s"]
         sweep["policies"][policy] = {
@@ -215,19 +223,25 @@ def run() -> None:
              f"{sweep['policies'][policy]['speedup_steady']}x steady "
              f"({ticks / before['steady_s']:,.0f} -> "
              f"{ticks / after['steady_s']:,.0f} ticks/s)")
-        _write(doc)
+        art.write(doc)
     total = ticks * len(E8_STACKS)
     sweep["before"] = {"steady_s": round(tot_b, 2),
                        "ticks_per_s": round(total / tot_b)}
     sweep["after"] = {"steady_s": round(tot_a, 2),
                       "ticks_per_s": round(total / tot_a)}
     sweep["speedup_steady"] = round(tot_b / tot_a, 2)
-    _write(doc)
+    art.write(doc)
     emit("engine_perf/e8_sweep/total", tot_a * 1e6,
          f"{sweep['speedup_steady']}x steady over pre-PR engine "
          f"({sweep['before']['ticks_per_s']:,} -> "
          f"{sweep['after']['ticks_per_s']:,} ticks/s)")
 
 
+def main(argv=None) -> None:
+    run(parse_opts(argv, prog="benchmarks.engine_perf",
+                   description=__doc__.splitlines()[0],
+                   axis="sections"))
+
+
 if __name__ == "__main__":
-    run()
+    main()

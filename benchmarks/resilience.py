@@ -24,18 +24,21 @@ The headline contract (tested): the full adaptive stack
 baseline (round_robin + static).  Emits
 ``experiments/sim/resilience_matrix.json`` incrementally — the doc is
 rewritten after every fault block, so a CI timeout still uploads a
-valid partial artifact.
+valid partial artifact.  ``--only`` subsets the fault blocks (the
+zero-fault baseline is always kept: recovery bands are measured against
+it); ``--devices`` shards each sweep's seed axis.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core import FaultEvent, SimConfig, make_workload, simulate_sweep
+from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts,
+                               timed)
+from repro.core import (FaultEvent, SimConfig, SweepSpec, make_workload,
+                        run_sweep)
 from repro.core import faults as faults_lib
 
 T = 900            # 45 s at dt=50 ms: 15 s pre-fault, fault, recovery
@@ -63,7 +66,6 @@ FAULTS = {
         FaultEvent("ckpt_storm_fleet", t0=300, duration=200,
                    magnitude=0.6),),
 }
-OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
 
 
 def _active_window(cfg: SimConfig) -> tuple:
@@ -98,17 +100,24 @@ def _cfg(policy: str, controller: str, faults) -> SimConfig:
     )
 
 
-def run() -> None:
-    OUT.mkdir(parents=True, exist_ok=True)
+def run(opts: Optional[BenchOpts] = None) -> None:
+    opts = opts or BenchOpts()
+    fault_names = opts.pick(tuple(FAULTS), "faults")
+    if "none" not in fault_names:
+        # recovery bands are measured against the zero-fault cells
+        fault_names = ("none",) + fault_names
+    seeds = opts.seeds(SEEDS)
     wl = make_workload(SCENARIO, T=T, m=M, seed=0, N=N)
-    path = OUT / "resilience_matrix.json"
+    art = Artifact("resilience_matrix.json", opts.out)
     doc = {
-        "T": T, "m": M, "N": N, "seeds": list(SEEDS),
+        "T": T, "m": M, "N": N, "seeds": list(seeds),
         "scenario": SCENARIO, "gossip_ms": GOSSIP_MS, "hold": HOLD,
         "policies": list(POLICIES), "controllers": list(CONTROLLERS),
+        "devices": opts.devices,
         "faults": {
-            k: [dataclasses.asdict(e) for e in v] if v else []
-            for k, v in FAULTS.items()},
+            k: [dataclasses.asdict(e) for e in FAULTS[k]]
+            if FAULTS[k] else []
+            for k in fault_names},
         "cells": {},
     }
 
@@ -116,7 +125,8 @@ def run() -> None:
     # recovery metric measures re-entry into, and the steady-state
     # reference the drift column compares against
     base_q: dict = {}
-    for fault_name, events in FAULTS.items():
+    for fault_name in fault_names:
+        events = FAULTS[fault_name]
         doc["cells"][fault_name] = {}
         t0, t1 = (None, None)
         if events:
@@ -124,12 +134,16 @@ def run() -> None:
                                          events))
         for ctrl in CONTROLLERS:
             cfg = _cfg(POLICIES[0], ctrl, events)
-            sweep, us = timed(
-                simulate_sweep, cfg, wl, policies=POLICIES,
-                seeds=SEEDS, do_warmup=False)
+            # policies × seeds batched onto one compiled sweep; full
+            # metrics because the recovery band needs the timelines
+            spec = SweepSpec(
+                config=cfg, workloads=(wl,), policies=POLICIES,
+                seeds=seeds, metrics="full", devices=opts.devices,
+                do_warmup=False)
+            res, us = timed(run_sweep, spec)
             for policy in POLICIES:
                 key = f"{policy}+{ctrl}"
-                rows = sweep[policy]
+                rows = res.rows(policy=policy)
                 qs = np.stack([r.queue_timeline for r in rows])  # (S,T,m)
                 mean_q = qs.mean(axis=2)                         # (S,T)
                 cell = {
@@ -163,7 +177,7 @@ def run() -> None:
                     rec = [
                         _recovery_ms(mean_q[s], t1 + 1, base["band"],
                                      cfg.dt_ms)
-                        for s in range(len(SEEDS))]
+                        for s in range(len(seeds))]
                     cell["recovery_ms"] = round(float(np.mean(rec)), 1)
                     cell["recovery_censored"] = bool(
                         max(rec) >= (T - (t1 + 1)) * cfg.dt_ms)
@@ -171,12 +185,14 @@ def run() -> None:
                         cell["steady_mean_queue"] - base["steady"], 3)
                 doc["cells"][fault_name][key] = cell
             emit(f"resilience/{fault_name}/{ctrl}", us,
-                 f"policies={len(POLICIES)};seeds={len(SEEDS)}")
+                 f"policies={len(POLICIES)};seeds={len(seeds)}")
         # incremental artifact: a timeout still leaves valid JSON
-        path.write_text(json.dumps(doc, indent=1))
+        art.write(doc)
 
     # headline: the adaptive stack beats the static baseline on crash
     # recovery (the claim the resilience matrix exists to check)
+    if "proxy_crash" not in doc["cells"]:
+        return
     adaptive = doc["cells"]["proxy_crash"]["midas+hysteresis"]
     static = doc["cells"]["proxy_crash"]["round_robin+static"]
     doc["headline"] = {
@@ -187,8 +203,18 @@ def run() -> None:
         "crash_peak_adaptive": adaptive["peak_queue_during_fault"],
         "crash_peak_static": static["peak_queue_during_fault"],
     }
-    path.write_text(json.dumps(doc, indent=1))
+    art.write(doc)
     emit("resilience/headline_crash_recovery_ms", 0.0,
          f"midas+hysteresis={adaptive['recovery_ms']};"
          f"round_robin+static={static['recovery_ms']};"
          f"adaptive_faster={doc['headline']['adaptive_recovers_faster']}")
+
+
+def main(argv=None) -> None:
+    run(parse_opts(argv, prog="benchmarks.resilience",
+                   description=__doc__.splitlines()[0],
+                   axis="faults"))
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ SECTIONS = {
     "scenario_matrix": "benchmarks.scenario_matrix",  # E8
     "fleet": "benchmarks.fleet",               # E9 (gossip × coherence)
     "engine": "benchmarks.engine_perf",        # E10 (compile + ticks/sec)
+    "shard": "benchmarks.shard_sweep",         # E11 (sharded 10^6-key sweep)
     "resilience": "benchmarks.resilience",     # E12 (fault x policy x ctrl)
     "serving": "benchmarks.serving",
     "kernels": "benchmarks.kernels_bench",

@@ -14,16 +14,21 @@ the engine's streaming-metrics mode (``metrics="summary"``, DESIGN.md §9)
 keeps sweep memory at O(B·m) instead of O(B·T·m), each cell now averages
 ``SEEDS`` independent seeds instead of a single run, in less memory than
 one full-timeline seed used to take.
+
+Each policy's cells ride one :class:`repro.core.sweep.SweepSpec`; pass
+``--devices N`` (under ``XLA_FLAGS=--xla_force_host_platform_device_count``
+on CPU) to shard the seed axis, ``--only`` to subset policies.
 """
 from __future__ import annotations
 
-import json
-from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core import SimConfig, make_workload, simulate_sweep, workloads
+from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts,
+                               timed)
+from repro.core import (SimConfig, SweepSpec, make_workload, run_sweep,
+                        workloads)
 
 T = 1200           # 60 s at dt=50 ms — covers a full storm cycle
 M = 8
@@ -38,7 +43,6 @@ POLICY_STACKS = {
     "midas": ("cache",),
 }
 POLICIES = tuple(POLICY_STACKS)
-OUT = Path(__file__).resolve().parents[1] / "experiments" / "sim"
 
 
 def _row(rows) -> dict:
@@ -58,27 +62,43 @@ def _row(rows) -> dict:
     }
 
 
-def run() -> None:
-    OUT.mkdir(parents=True, exist_ok=True)
+def run(opts: Optional[BenchOpts] = None) -> None:
+    opts = opts or BenchOpts()
+    policies = opts.pick(POLICIES, "policies")
+    seeds = opts.seeds(SEEDS)
     names = workloads.available()
-    wls = [make_workload(n, T=T, m=M, seed=SEED) for n in names]
-    table: dict = {p: {} for p in POLICIES}
-    for policy in POLICIES:
-        # one batched sweep per policy: every scenario grid rides the same
-        # compiled scan as a vmapped input, seeds share the grids, and the
-        # summary accumulators keep memory independent of T
-        # warmup derives the adaptive control targets (§III-B) for midas;
-        # non-adaptive policies skip it inside _targets
-        sweep, us = timed(simulate_sweep,
-                          SimConfig(m=M, middleware=POLICY_STACKS[policy]),
-                          wls, policies=(policy,), seeds=SEEDS,
-                          metrics="summary")
-        for wl_name, rows in sweep[policy].items():
-            table[policy][wl_name] = _row(rows)
+    wls = tuple(make_workload(n, T=T, m=M, seed=SEED) for n in names)
+    art = Artifact("scenario_matrix.json", opts.out)
+    table: dict = {p: {} for p in policies}
+    doc = {
+        "T": T, "m": M, "seed": SEED, "seeds": list(seeds),
+        "metrics": "summary", "baseline": BASELINE,
+        "policies": list(policies), "workloads": list(names),
+        "devices": opts.devices,
+        "table": table, "reductions_vs_baseline": {},
+    }
+    for policy in policies:
+        # one declarative spec per policy: every scenario grid rides the
+        # same compiled scan as a vmapped input, seeds share the grids
+        # (optionally sharded over a device mesh), and the summary
+        # accumulators keep memory independent of T.  Warmup derives the
+        # adaptive control targets (§III-B) for midas; non-adaptive
+        # policies skip it inside _targets.
+        spec = SweepSpec(
+            config=SimConfig(m=M, middleware=POLICY_STACKS[policy]),
+            workloads=wls, policies=(policy,), seeds=seeds,
+            metrics="summary", devices=opts.devices)
+        res, us = timed(run_sweep, spec)
+        for wl_name in names:
+            table[policy][wl_name] = _row(
+                res.rows(policy=policy, workload=wl_name))
+        art.write(doc)  # incremental: a timeout still leaves valid JSON
         emit(f"scenario_matrix/{policy}", us,
-             f"workloads={len(names)} seeds={len(SEEDS)}")
+             f"workloads={len(names)} seeds={len(seeds)}")
 
-    reductions = {}
+    if BASELINE not in policies:
+        return
+    reductions = doc["reductions_vs_baseline"]
     for wl_name in names:
         base = table[BASELINE][wl_name]
         reductions[wl_name] = {
@@ -90,18 +110,11 @@ def run() -> None:
                     1 - table[p][wl_name]["worst_case_queue"]
                     / max(base["worst_case_queue"], 1e-9), 4),
             }
-            for p in POLICIES if p != BASELINE
+            for p in policies if p != BASELINE
         }
+    art.write(doc)
 
-    doc = {
-        "T": T, "m": M, "seed": SEED, "seeds": list(SEEDS),
-        "metrics": "summary", "baseline": BASELINE,
-        "policies": list(POLICIES), "workloads": list(names),
-        "table": table, "reductions_vs_baseline": reductions,
-    }
-    (OUT / "scenario_matrix.json").write_text(json.dumps(doc, indent=1))
-
-    for p in POLICIES:
+    for p in policies:
         if p == BASELINE:
             continue
         mq = [reductions[w][p]["mean_queue_reduction"] for w in names]
@@ -112,3 +125,13 @@ def run() -> None:
         emit(f"scenario_matrix/{p}/worst_case_reduction_range", 0.0,
              f"{min(wc) * 100:.0f}%..{max(wc) * 100:.0f}% "
              f"(paper: 50-80%)")
+
+
+def main(argv=None) -> None:
+    run(parse_opts(argv, prog="benchmarks.scenario_matrix",
+                   description=__doc__.splitlines()[0],
+                   axis="policies"))
+
+
+if __name__ == "__main__":
+    main()

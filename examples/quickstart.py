@@ -11,8 +11,8 @@ pluggable policy and workload registries (every policy in
 """
 import numpy as np
 
-from repro.core import (SimConfig, make_workload, policies, simulate,
-                        simulate_sweep, workloads)
+from repro.core import (SimConfig, SweepSpec, make_workload, policies,
+                        run_sweep, simulate, workloads)
 
 T, M = 2400, 8  # 120 s of simulated time, 8 metadata servers
 
@@ -54,11 +54,13 @@ def main() -> None:
 
     print("=== policy registry: swap policies without touching the engine ===")
     print(f"  registered: {', '.join(policies.available())}")
-    # one sweep call: jsq (d=m upper bound) and bounded-load consistent
-    # hashing, each compiled once, vmapped over two seeds
-    sweep = simulate_sweep(SimConfig(m=M), wl, policies=("jsq", "chbl"),
-                           seeds=(0, 1), do_warmup=False)
-    for name, rows in sweep.items():
+    # one declarative sweep: jsq (d=m upper bound) and bounded-load
+    # consistent hashing, each compiled once, vmapped over two seeds
+    res = run_sweep(SweepSpec(config=SimConfig(m=M), workloads=wl,
+                              policies=("jsq", "chbl"), seeds=(0, 1),
+                              do_warmup=False))
+    for name in ("jsq", "chbl"):
+        rows = res.rows(policy=name)
         mq = np.mean([r.mean_queue() for r in rows])
         print(f"  {name:6s} mean queue {mq:8.2f}  (2-seed avg)")
 
@@ -68,12 +70,12 @@ def main() -> None:
     # registered workloads) batch onto one compiled scan per policy
     scen = [make_workload(n, T=T // 2, m=M, seed=0)
             for n in ("job_startup", "multi_tenant")]
-    sweep = simulate_sweep(SimConfig(m=M), scen,
-                           policies=("round_robin", "power_of_d"),
-                           do_warmup=False)
+    res = run_sweep(SweepSpec(config=SimConfig(m=M), workloads=scen,
+                              policies=("round_robin", "power_of_d"),
+                              do_warmup=False))
     for wl_name in ("job_startup", "multi_tenant"):
-        rr_q = sweep["round_robin"][wl_name][0].mean_queue()
-        pod_q = sweep["power_of_d"][wl_name][0].mean_queue()
+        rr_q = res.row(policy="round_robin", workload=wl_name).mean_queue()
+        pod_q = res.row(policy="power_of_d", workload=wl_name).mean_queue()
         print(f"  {wl_name:12s} RR {rr_q:7.2f} -> MIDAS {pod_q:7.2f} "
               f"({(1 - pod_q / max(rr_q, 1e-9)) * 100:+.0f}%)")
 

@@ -27,9 +27,14 @@ def adv_main(argv) -> None:
     ap.add_argument("--policy", default="midas")
     ap.add_argument("--T", type=int, default=900)
     ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument(
+        "--devices", type=int, default=1,
+        help="shard the seed axis over this many devices (on CPU needs "
+        "XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args(argv)
 
-    from repro.core import SimConfig, make_workload, simulate_sweep
+    from repro.core import (SimConfig, SweepSpec, make_workload,
+                            run_sweep)
     from repro.core import controllers as ctrl_lib
     from repro.core import faults as faults_lib
 
@@ -40,16 +45,22 @@ def adv_main(argv) -> None:
     wl = make_workload("bursty", T=args.T, m=8, seed=0, N=1024)
     seeds = tuple(range(args.seeds))
     rows = []
-    for ctrl in ctrl_lib.available():
-        for ablate in ("", "no_fault_signal"):
-            cfg = SimConfig(
-                m=8, N=1024, policy=args.policy, controller=ctrl,
-                ablate=ablate, middleware=("fleet_cache",),
-                gossip_ms=100.0, faults=events,
-            )
-            out = simulate_sweep(cfg, wl, seeds=seeds, do_warmup=False,
-                                 metrics="summary")
-            rs = out[args.policy]
+    # one declarative spec per ablation: the whole controller registry
+    # rides the spec's controllers axis (ablate lives in the config, so
+    # it stays an outer loop)
+    for ablate in ("", "no_fault_signal"):
+        spec = SweepSpec(
+            config=SimConfig(
+                m=8, N=1024, policy=args.policy, ablate=ablate,
+                middleware=("fleet_cache",), gossip_ms=100.0,
+                faults=events,
+            ),
+            workloads=(wl,), policies=(args.policy,),
+            controllers=ctrl_lib.available(), seeds=seeds,
+            metrics="summary", devices=args.devices, do_warmup=False)
+        res = run_sweep(spec)
+        for ctrl in ctrl_lib.available():
+            rs = res.rows(policy=args.policy, controller=ctrl)
             label = ctrl + (f"[{ablate}]" if ablate else "")
             rows.append((
                 label,

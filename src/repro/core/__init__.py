@@ -12,9 +12,12 @@
 # schedules via the fault registry (repro.core.faults).  See DESIGN.md.
 from repro.core import (cache, control, controllers,  # noqa: F401
                         faults, fleet, hashring, middleware, policies,
-                        routing, sim, telemetry, theory, workloads)
+                        registry, routing, sim, sweep, telemetry, theory,
+                        workloads)
 from repro.core.faults import FaultEvent  # noqa: F401
 from repro.core.sim import (SimConfig, SimResult,  # noqa: F401
                             SummaryResult, simulate, simulate_sweep,
                             summarize)
+from repro.core.sweep import (SweepResult, SweepSpec,  # noqa: F401
+                              run_sweep)
 from repro.core.workloads import WORKLOADS, make_workload  # noqa: F401

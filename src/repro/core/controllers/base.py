@@ -39,6 +39,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple, Type
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import registry as registry_lib
 from repro.core import telemetry
 
 # Paper cadences and shared control constants (Algorithm 1 lines 1-20).
@@ -288,50 +289,32 @@ class Controller:
         return state.knobs
 
 
-_REGISTRY: Dict[str, Type[Controller]] = {}
+REGISTRY = registry_lib.Registry("controller")
 
 
 def register(name: str):
     """Class decorator: ``@controllers.register("my_ctrl")`` adds a
     Controller subclass under ``name`` (``SimConfig(controller=name)``)."""
-
-    def deco(cls: Type[Controller]) -> Type[Controller]:
-        prev = _REGISTRY.get(name)
-        if prev is not None and prev is not cls:
-            raise ValueError(
-                f"controller {name!r} already registered "
-                f"({prev.__module__}.{prev.__qualname__})"
-            )
-        cls.name = name
-        _REGISTRY[name] = cls
-        return cls
-
-    return deco
+    return REGISTRY.register(name)
 
 
 def unregister(name: str) -> None:
     """Remove a registered controller (intended for tests/plugins)."""
-    _REGISTRY.pop(name, None)
+    REGISTRY.unregister(name)
 
 
 def available() -> Tuple[str, ...]:
     """Sorted names of every registered controller."""
-    return tuple(sorted(_REGISTRY))
+    return REGISTRY.available()
 
 
 def get_class(name: str) -> Type[Controller]:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown controller {name!r}; available: "
-            f"{', '.join(available())}"
-        ) from None
+    return REGISTRY.get_class(name)
 
 
 def get(name: str) -> Controller:
     """Instantiate the controller registered under ``name``."""
-    return get_class(name)()
+    return REGISTRY.get(name)
 
 
 # ---------------------------------------------------------------------------

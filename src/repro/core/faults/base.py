@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashring
+from repro.core import registry as registry_lib
 
 # Detection timeout: a member silent for longer is presumed FAILED (the
 # host-side reference is repro.ft.failures.FailureDetector).
@@ -110,50 +111,32 @@ class FaultSpec:
         raise NotImplementedError
 
 
-_REGISTRY: Dict[str, Type[FaultSpec]] = {}
+REGISTRY = registry_lib.Registry("fault", name_attr="kind")
 
 
 def register(kind: str):
     """Class decorator: ``@faults.register("my_fault")`` adds a
     FaultSpec subclass under ``kind`` (``SimConfig(faults=(kind,))``)."""
-
-    def deco(cls: Type[FaultSpec]) -> Type[FaultSpec]:
-        prev = _REGISTRY.get(kind)
-        if prev is not None and prev is not cls:
-            raise ValueError(
-                f"fault {kind!r} already registered "
-                f"({prev.__module__}.{prev.__qualname__})"
-            )
-        cls.kind = kind
-        _REGISTRY[kind] = cls
-        return cls
-
-    return deco
+    return REGISTRY.register(kind)
 
 
 def unregister(kind: str) -> None:
     """Remove a registered fault kind (intended for tests/plugins)."""
-    _REGISTRY.pop(kind, None)
+    REGISTRY.unregister(kind)
 
 
 def available() -> Tuple[str, ...]:
     """Sorted names of every registered fault kind."""
-    return tuple(sorted(_REGISTRY))
+    return REGISTRY.available()
 
 
 def get_class(kind: str) -> Type[FaultSpec]:
-    try:
-        return _REGISTRY[kind]
-    except KeyError:
-        raise ValueError(
-            f"unknown fault {kind!r}; available: "
-            f"{', '.join(available())}"
-        ) from None
+    return REGISTRY.get_class(kind)
 
 
 def get(kind: str) -> FaultSpec:
     """Instantiate the spec registered under ``kind``."""
-    return get_class(kind)()
+    return REGISTRY.get(kind)
 
 
 def normalize(faults) -> Tuple[FaultEvent, ...]:
@@ -186,7 +169,7 @@ def parse_fault(spec: str) -> FaultEvent:
     """Parse ``"kind"`` or ``"kind:t0=200,duration=300,..."`` (CLI)."""
     spec = spec.strip()
     kind, _, rest = spec.partition(":")
-    if kind not in _REGISTRY:
+    if kind not in REGISTRY:
         raise ValueError(
             f"unknown fault {kind!r}; available: {', '.join(available())}"
         )

@@ -141,6 +141,139 @@ def np_member_primary(
     return owners[idx]
 
 
+# ---------------------------------------------------------------------------
+# Per-shard subrings (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# The sharded sweep / E11's million-key ring audit never materialize
+# O(R·P): the position space [0, 2^32) is cut into ``n_shards`` equal
+# arcs, and a shard resolves ONLY keys hashing into its arc, using the
+# ring slots inside the arc plus a ``tail`` of wrap-around successors
+# (enough for the feasible-set window).  Each subring is
+# O(m·V/n_shards + tail) — ownership is identical to the global ring
+# (bit-for-bit, property-tested: per-shard ownership unions/partitions
+# to the global ring).
+
+
+class Subring(NamedTuple):
+    """The slice of a ring owning one arc of the position space."""
+
+    positions: np.ndarray  # (n_arc + tail,) uint32: sorted arc, then
+    owners: np.ndarray  # wrap-around successor slots (may re-wrap)
+    n_arc: int  # slots whose position lies inside [lo, hi)
+    lo: int  # arc start position (inclusive)
+    hi: int  # arc end position (exclusive)
+    shard: int
+    n_shards: int
+    m: int
+    V: int
+
+
+def np_key_shard(
+    keys: np.ndarray, n_shards: int, salt: int = 0
+) -> np.ndarray:
+    """Which shard's arc each key's ring position falls in."""
+    q = np_key_position(np.asarray(keys), salt).astype(np.uint64)
+    return (q * np.uint64(n_shards) >> np.uint64(32)).astype(np.int32)
+
+
+def np_subring(
+    m: int,
+    V: int,
+    shard: int,
+    n_shards: int,
+    salt: int = 0,
+    tail: int = 16,
+) -> Subring:
+    """Build shard ``shard`` of an ``n_shards``-way ring partition.
+
+    ``tail`` successor slots past the arc let the shard resolve keys
+    landing after its last in-arc position and give :func:`feasible_set`
+    -compatible windows; it must be >= the intended ``scan_width``.
+    """
+    if not 0 <= shard < n_shards:
+        raise ValueError(
+            f"shard must be in [0, {n_shards}), got {shard}"
+        )
+    pos, owners = _ring_arrays(m, V, salt)
+    n = pos.size
+    lo = (shard * (1 << 32)) // n_shards
+    hi = ((shard + 1) * (1 << 32)) // n_shards
+    start = int(np.searchsorted(pos, np.uint32(lo), side="left"))
+    end = (
+        n
+        if hi == (1 << 32)
+        else int(np.searchsorted(pos, np.uint32(hi), side="left"))
+    )
+    idx = np.arange(start, end + tail) % n
+    return Subring(
+        positions=pos[idx],
+        owners=owners[idx],
+        n_arc=end - start,
+        lo=lo,
+        hi=hi,
+        shard=shard,
+        n_shards=n_shards,
+        m=m,
+        V=V,
+    )
+
+
+def np_subring_primary(
+    sub: Subring, keys: np.ndarray, salt: int = 0
+) -> np.ndarray:
+    """Primary owner per key, resolved from the subring alone.
+
+    Every key must hash into the subring's arc (route by
+    :func:`np_key_shard` first); results are bit-for-bit
+    :func:`primary` on the global ring.
+    """
+    kp = np_key_position(np.asarray(keys), salt)
+    if kp.size and (
+        (kp.astype(np.uint64) < sub.lo).any()
+        or (kp.astype(np.uint64) >= sub.hi).any()
+    ):
+        raise ValueError(
+            f"keys outside shard {sub.shard}/{sub.n_shards}'s arc; "
+            f"route with np_key_shard first"
+        )
+    # the arc prefix is sorted, so a local searchsorted lands on the
+    # first in-arc slot >= kp; past-the-arc keys fall through to the
+    # first wrap-around successor (local index n_arc)
+    li = np.searchsorted(sub.positions[: sub.n_arc], kp)
+    return sub.owners[li]
+
+
+def np_subring_feasible(
+    sub: Subring, keys: np.ndarray, d_max: int, scan_width: int = 16,
+    salt: int = 0,
+) -> np.ndarray:
+    """F(r) from the subring alone: first ``d_max`` distinct owners
+    clockwise, scanning ``scan_width`` slots — the numpy mirror of
+    :func:`feasible_set` (member-free path), valid for keys in the
+    shard's arc.  Requires ``sub.tail >= scan_width`` (the default
+    :func:`np_subring` tail)."""
+    if sub.positions.size - sub.n_arc < scan_width:
+        raise ValueError(
+            f"subring tail {sub.positions.size - sub.n_arc} < "
+            f"scan_width {scan_width}; rebuild with a larger tail"
+        )
+    kp = np_key_position(np.asarray(keys), salt)
+    li = np.searchsorted(sub.positions[: sub.n_arc], kp)
+    cand = sub.owners[li[..., None] + np.arange(scan_width)]  # (..., W)
+    eq = cand[..., None, :] == cand[..., :, None]
+    seen_before = np.any(eq & _strict_lower(scan_width), axis=-1)
+    fresh = ~seen_before
+    rank = np.cumsum(fresh, axis=-1) - 1
+    rank = np.where(fresh, rank, scan_width)
+    take = rank[..., None] == np.arange(d_max)
+    out = np.max(
+        np.where(take, cand[..., :, None], np.int32(-1)), axis=-2
+    )
+    pad = (out[..., :1] + np.arange(d_max, dtype=np.int32)) % sub.m
+    return np.where(out < 0, pad, out).astype(np.int32)
+
+
 @functools.lru_cache(maxsize=None)
 def _strict_lower(scan_width: int) -> np.ndarray:
     """Strict lower-triangular mask, built host-side once per width so it

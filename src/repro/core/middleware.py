@@ -34,12 +34,13 @@ stage's body is traced once per compile, independent of the horizon.
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple, Type
+from typing import Any, NamedTuple, Tuple, Type
 
 import jax.numpy as jnp
 
 from repro.core import cache as cache_lib
 from repro.core import fleet as fleet_lib
+from repro.core import registry as registry_lib
 from repro.core.controllers.base import T_SLOW_MS, Knobs
 
 
@@ -93,46 +94,28 @@ class Middleware:
         return state
 
 
-_REGISTRY: Dict[str, Type[Middleware]] = {}
+REGISTRY = registry_lib.Registry("middleware")
 
 
 def register(name: str):
     """Class decorator registering a Middleware stage under ``name``."""
-
-    def deco(cls: Type[Middleware]) -> Type[Middleware]:
-        prev = _REGISTRY.get(name)
-        if prev is not None and prev is not cls:
-            raise ValueError(
-                f"middleware {name!r} already registered "
-                f"({prev.__module__}.{prev.__qualname__})"
-            )
-        cls.name = name
-        _REGISTRY[name] = cls
-        return cls
-
-    return deco
+    return REGISTRY.register(name)
 
 
 def unregister(name: str) -> None:
-    _REGISTRY.pop(name, None)
+    REGISTRY.unregister(name)
 
 
 def available() -> Tuple[str, ...]:
-    return tuple(sorted(_REGISTRY))
+    return REGISTRY.available()
 
 
 def get_class(name: str) -> Type[Middleware]:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown middleware {name!r}; available: "
-            f"{', '.join(available())}"
-        ) from None
+    return REGISTRY.get_class(name)
 
 
 def get(name: str) -> Middleware:
-    return get_class(name)()
+    return REGISTRY.get(name)
 
 
 @register("cache")

@@ -32,11 +32,12 @@ Python-level wave index (waves are indistinguishable at trace time).
 
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple, Type
+from typing import Any, NamedTuple, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry as registry_lib
 from repro.core.controllers.base import Knobs
 
 # The control-plane view handed to policies is the declarative knob
@@ -125,49 +126,32 @@ class Policy:
 # Registry
 # ---------------------------------------------------------------------------
 
-_REGISTRY: Dict[str, Type[Policy]] = {}
+REGISTRY = registry_lib.Registry("policy")
 
 
 def register(name: str):
     """Class decorator: ``@register("my_policy")`` adds a Policy subclass
     to the registry under ``name`` (usable as ``SimConfig(policy=name)``)."""
-
-    def deco(cls: Type[Policy]) -> Type[Policy]:
-        prev = _REGISTRY.get(name)
-        if prev is not None and prev is not cls:
-            raise ValueError(
-                f"policy {name!r} already registered "
-                f"({prev.__module__}.{prev.__qualname__})"
-            )
-        cls.name = name
-        _REGISTRY[name] = cls
-        return cls
-
-    return deco
+    return REGISTRY.register(name)
 
 
 def unregister(name: str) -> None:
     """Remove a registered policy (intended for tests/plugins)."""
-    _REGISTRY.pop(name, None)
+    REGISTRY.unregister(name)
 
 
 def available() -> Tuple[str, ...]:
     """Sorted names of every registered policy."""
-    return tuple(sorted(_REGISTRY))
+    return REGISTRY.available()
 
 
 def get_class(name: str) -> Type[Policy]:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown policy {name!r}; available: {', '.join(available())}"
-        ) from None
+    return REGISTRY.get_class(name)
 
 
 def get(name: str) -> Policy:
     """Instantiate the policy registered under ``name``."""
-    return get_class(name)()
+    return REGISTRY.get(name)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
@@ -45,6 +46,7 @@ from repro.core import fleet as fleet_lib
 from repro.core import hashring, telemetry
 from repro.core import middleware as mw_lib
 from repro.core import policies as policy_lib
+from repro.core import registry as registry_lib
 from repro.core.controllers.base import Knobs, Signals
 from repro.core.policies.base import RouteContext, RouteStats
 from repro.core.workloads import Workload
@@ -104,33 +106,24 @@ class SimConfig:
                 raise ValueError(
                     f"SimConfig.{name} must be a positive int, got {v!r}"
                 )
-        if self.policy not in policy_lib.available():
-            raise ValueError(
-                f"unknown policy {self.policy!r}; available: "
-                f"{', '.join(policy_lib.available())}"
-            )
+        # registry / enum membership: all routed through the shared
+        # repro.core.registry helpers, so every axis raises the same
+        # "unknown <kind> ...; available: ..." text
+        policy_lib.get_class(self.policy)
         for stage in self.middleware:
-            if stage not in mw_lib.available():
-                raise ValueError(
-                    f"unknown middleware stage {stage!r}; available: "
-                    f"{', '.join(mw_lib.available())}"
-                )
-        if self.controller not in ctrl_lib.available():
-            raise ValueError(
-                f"unknown controller {self.controller!r}; available: "
-                f"{', '.join(ctrl_lib.available())}"
+            registry_lib.validate_choice(
+                stage, "middleware stage", mw_lib.available()
             )
-        if self.consensus not in telemetry.CONSENSUS_REDUCERS:
-            raise ValueError(
-                f"unknown consensus reducer {self.consensus!r}; "
-                f"available: {', '.join(telemetry.CONSENSUS_REDUCERS)}"
-            )
+        ctrl_lib.get_class(self.controller)
+        registry_lib.validate_choice(
+            self.consensus,
+            "consensus reducer",
+            telemetry.CONSENSUS_REDUCERS,
+        )
         ctrl_lib.parse_ablations(self.ablate)  # raises on unknown tokens
-        if self.cache_mode not in cache_lib.MODES:
-            raise ValueError(
-                f"unknown cache_mode {self.cache_mode!r}; available: "
-                f"{', '.join(cache_lib.MODES)}"
-            )
+        registry_lib.validate_choice(
+            self.cache_mode, "cache_mode", cache_lib.MODES
+        )
         if self.gossip_ms < 0:
             raise ValueError(
                 f"SimConfig.gossip_ms must be >= 0, got {self.gossip_ms!r}"
@@ -951,8 +944,7 @@ def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
 _SWEEP_TRACES = [0]
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5))
-def _run_scan_sweep(
+def _sweep_vmapped(
     cfg: SimConfig,
     states: SimState,
     keys,
@@ -960,19 +952,10 @@ def _run_scan_sweep(
     is_write,
     metrics: str = "full",
 ):
-    """Batched scan: ``states`` carries a leading seed axis (S, ...) and
-    the workload grids a leading workload axis (W, T, R).
-
-    The seed axis rides an INNER vmap with the grids held constant
-    (closed over, i.e. ``in_axes=None`` semantics), so per-tick work
-    that does not depend on the seed — key hashing, the batched
-    feasible-set gather — is computed once per workload, not once per
-    (workload, seed) combo, and nothing is ``jnp.repeat``-duplicated.
-    Returns ``(final, outs)`` pytrees with leading (W, S) axes; ``outs``
-    is the stacked TickOut timeline under ``metrics="full"`` and the
-    O(m) :class:`SummaryAcc` under ``"summary"``.
-    """
-    _SWEEP_TRACES[0] += 1
+    """The sweep body shared by the single-device jit (below) and the
+    sharded runner (``repro.core.sweep``): nested vmap over (W, S) with
+    identical per-cell math — what makes the sharded-vs-vmap parity
+    contract bit-for-bit rather than merely approximate."""
     ring = hashring.make_ring(cfg.m, cfg.V)
     fc = faults_lib.compile_faults(cfg, int(keys.shape[1]))
     step = functools.partial(
@@ -1011,6 +994,31 @@ def _run_scan_sweep(
     return jax.vmap(
         lambda k, mk, w: jax.vmap(lambda st: run(st, k, mk, w))(states)
     )(keys, mask, is_write)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5))
+def _run_scan_sweep(
+    cfg: SimConfig,
+    states: SimState,
+    keys,
+    mask,
+    is_write,
+    metrics: str = "full",
+):
+    """Batched scan: ``states`` carries a leading seed axis (S, ...) and
+    the workload grids a leading workload axis (W, T, R).
+
+    The seed axis rides an INNER vmap with the grids held constant
+    (closed over, i.e. ``in_axes=None`` semantics), so per-tick work
+    that does not depend on the seed — key hashing, the batched
+    feasible-set gather — is computed once per workload, not once per
+    (workload, seed) combo, and nothing is ``jnp.repeat``-duplicated.
+    Returns ``(final, outs)`` pytrees with leading (W, S) axes; ``outs``
+    is the stacked TickOut timeline under ``metrics="full"`` and the
+    O(m) :class:`SummaryAcc` under ``"summary"``.
+    """
+    _SWEEP_TRACES[0] += 1
+    return _sweep_vmapped(cfg, states, keys, mask, is_write, metrics)
 
 
 def warmup(
@@ -1134,70 +1142,30 @@ def simulate_sweep(
     legacy shape) and ``{policy: {workload_name: (row per seed, ...)}}``
     for a sequence; per-combo full-metrics results match individual
     ``simulate`` runs.
+
+    .. deprecated::
+        ``simulate_sweep`` is a thin shim over the declarative API —
+        build a :class:`repro.core.sweep.SweepSpec` and call
+        :func:`repro.core.sweep.run_sweep` instead, which adds the
+        controller axis, multi-device sharding, and a coordinate-
+        addressable :class:`repro.core.sweep.SweepResult`.
     """
+    warnings.warn(
+        "simulate_sweep is deprecated; build a repro.core.sweep."
+        "SweepSpec and call run_sweep (DESIGN.md §12)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.core import sweep as sweep_lib
+
     single = isinstance(wl, Workload)
-    wls: Tuple[Workload, ...] = (wl,) if single else tuple(wl)
-    if not wls:
-        raise ValueError("simulate_sweep needs at least one workload")
-    if metrics not in METRICS_MODES:
-        raise ValueError(
-            f"unknown metrics mode {metrics!r}; available: "
-            f"{', '.join(METRICS_MODES)}"
-        )
-    shapes = {w.keys.shape for w in wls}
-    if len(shapes) > 1:
-        raise ValueError(
-            f"simulate_sweep workloads must share one grid "
-            f"shape; got {sorted(shapes)}"
-        )
-    wl_names = [w.name for w in wls]
-    if len(set(wl_names)) != len(wl_names):
-        raise ValueError(
-            f"simulate_sweep workload names must be unique; "
-            f"got {wl_names}"
-        )
-    names = tuple(policies) if policies is not None else (cfg.policy,)
-    seeds = tuple(seeds)
-    if not seeds:
-        raise ValueError("simulate_sweep needs at least one seed")
-    # (W, T, R) grids — shared across the seed axis, never duplicated
-    keys = jnp.stack([w.keys for w in wls])
-    mask = jnp.stack([w.mask for w in wls])
-    is_write = jnp.stack([w.is_write for w in wls])
-    results: Dict[str, dict] = {}
-    for name in names:
-        pcfg = dataclasses.replace(cfg, policy=name)
-        if targets is not None:
-            b_tgt, p99_tgt = targets
-        else:
-            b_tgt, p99_tgt = _targets(pcfg, do_warmup)
-        per_seed = [
-            init_state(dataclasses.replace(pcfg, seed=s), b_tgt, p99_tgt)
-            for s in seeds
-        ]
-        states = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_seed)
-        final, outs = _run_scan_sweep(
-            pcfg, states, keys, mask, is_write, metrics
-        )
-        # one transfer for the whole sweep, sliced on host — per-combo
-        # device slicing used to issue B × fields tiny transfers
-        outs = jax.device_get(outs)
-        if metrics == "full":
-            final = jax.device_get(final)
-        per_wl: Dict[str, SweepRows] = {}
-        for j, w in enumerate(wls):
-            rows = []
-            for i, s in enumerate(seeds):
-                scfg = dataclasses.replace(pcfg, seed=s)
-                row = jax.tree_util.tree_map(lambda x: x[j, i], outs)
-                if metrics == "summary":
-                    # row is the (SummaryAcc, KnobTrace) pair per run
-                    rows.append(_to_summary(scfg, *row))
-                else:
-                    final_b = jax.tree_util.tree_map(lambda x: x[j, i], final)
-                    rows.append(
-                        _to_result(scfg, row, _final_cache(pcfg, final_b))
-                    )
-            per_wl[w.name] = tuple(rows)
-        results[name] = per_wl[wls[0].name] if single else per_wl
-    return results
+    spec = sweep_lib.SweepSpec(
+        config=cfg,
+        workloads=wl,
+        policies=tuple(policies) if policies is not None else None,
+        seeds=tuple(seeds),
+        metrics=metrics,
+        do_warmup=do_warmup,
+        targets=targets,
+    )
+    return sweep_lib.run_sweep(spec).to_legacy(single=single)

@@ -42,6 +42,8 @@ from typing import Any, Dict, NamedTuple, Tuple, Type
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry as registry_lib
+
 
 class Workload(NamedTuple):
     """A realized traffic grid; what ``simulate`` consumes."""
@@ -122,45 +124,27 @@ class WorkloadSpec:
 # Registry
 # ---------------------------------------------------------------------------
 
-_REGISTRY: Dict[str, Type[WorkloadSpec]] = {}
+REGISTRY = registry_lib.Registry("workload")
 
 
 def register(name: str):
     """Class decorator: ``@register("my_workload")`` adds a WorkloadSpec
     subclass to the registry under ``name``."""
-
-    def deco(cls: Type[WorkloadSpec]) -> Type[WorkloadSpec]:
-        prev = _REGISTRY.get(name)
-        if prev is not None and prev is not cls:
-            raise ValueError(
-                f"workload {name!r} already registered "
-                f"({prev.__module__}.{prev.__qualname__})"
-            )
-        cls.name = name
-        _REGISTRY[name] = cls
-        return cls
-
-    return deco
+    return REGISTRY.register(name)
 
 
 def unregister(name: str) -> None:
     """Remove a registered workload (intended for tests/plugins)."""
-    _REGISTRY.pop(name, None)
+    REGISTRY.unregister(name)
 
 
 def available() -> Tuple[str, ...]:
     """Sorted names of every registered workload."""
-    return tuple(sorted(_REGISTRY))
+    return REGISTRY.available()
 
 
 def get_class(name: str) -> Type[WorkloadSpec]:
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown workload {name!r}; available: "
-            f"{', '.join(available())}"
-        ) from None
+    return REGISTRY.get_class(name)
 
 
 def make_workload(

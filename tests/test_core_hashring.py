@@ -171,3 +171,93 @@ def test_numpy_builder_matches_traced_hash():
     np.testing.assert_array_equal(
         np.asarray(servers[order].astype(jnp.int32)),
         np.asarray(ring.owners))
+
+
+# ---------------------------------------------------------------------------
+# Per-shard subrings (DESIGN.md §12 — the sharded sweep's ring slices)
+# ---------------------------------------------------------------------------
+
+
+def test_subring_primary_matches_global_and_partitions():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 1 << 31, size=20000, dtype=np.int64)
+    for m, V, n_shards in ((8, 64, 4), (64, 64, 8), (3, 16, 5), (16, 32, 1)):
+        ring = hashring.make_ring(m, V)
+        ref = np.asarray(hashring.primary(ring, jnp.asarray(keys)))
+        shard_of = hashring.np_key_shard(keys, n_shards)
+        covered = 0
+        slots = 0
+        for s in range(n_shards):
+            sub = hashring.np_subring(m, V, s, n_shards)
+            slots += sub.positions.size
+            ks = keys[shard_of == s]
+            covered += ks.size
+            np.testing.assert_array_equal(
+                hashring.np_subring_primary(sub, ks), ref[shard_of == s])
+        # shards partition the keys, and subring slots sum to the global
+        # ring plus one tail per shard
+        assert covered == keys.size
+        assert slots == m * V + n_shards * 16
+
+
+def test_subring_feasible_matches_global():
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 1 << 31, size=5000, dtype=np.int64)
+    for m, V, n_shards in ((8, 64, 4), (64, 64, 8)):
+        ring = hashring.make_ring(m, V)
+        ref = np.asarray(hashring.feasible_set(ring, jnp.asarray(keys), 4))
+        shard_of = hashring.np_key_shard(keys, n_shards)
+        for s in range(n_shards):
+            sub = hashring.np_subring(m, V, s, n_shards)
+            ks = keys[shard_of == s]
+            np.testing.assert_array_equal(
+                hashring.np_subring_feasible(sub, ks, 4),
+                ref[shard_of == s])
+
+
+def test_subring_rejects_bad_input():
+    import pytest
+
+    with pytest.raises(ValueError, match="shard must be"):
+        hashring.np_subring(8, 64, 4, 4)
+    sub = hashring.np_subring(8, 64, 0, 4)
+    # a key from another shard's arc is refused
+    keys = np.arange(4000)
+    other = keys[hashring.np_key_shard(keys, 4) == 2][:8]
+    with pytest.raises(ValueError, match="route with np_key_shard"):
+        hashring.np_subring_primary(sub, other)
+    with pytest.raises(ValueError, match="tail"):
+        mine = keys[hashring.np_key_shard(keys, 4) == 0][:8]
+        hashring.np_subring_feasible(sub, mine, 4, scan_width=32)
+
+
+def test_subring_union_property():
+    """Hypothesis: per-shard subring ownership unions to the global ring
+    for arbitrary (m, V, n_shards) splits."""
+    import pytest
+
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        m=st.integers(2, 24),
+        n_shards=st.integers(1, 12),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def prop(m, n_shards, seed):
+        V = 16
+        keys = np.random.default_rng(seed).integers(
+            0, 1 << 31, size=2000, dtype=np.int64)
+        ring = hashring.make_ring(m, V)
+        ref = np.asarray(hashring.primary(ring, jnp.asarray(keys)))
+        shard_of = hashring.np_key_shard(keys, n_shards)
+        out = np.full(keys.size, -1, np.int32)
+        for s in range(n_shards):
+            sub = hashring.np_subring(m, V, s, n_shards)
+            sel = shard_of == s
+            out[sel] = hashring.np_subring_primary(sub, keys[sel])
+        assert (out >= 0).all()          # the shards cover every key
+        np.testing.assert_array_equal(out, ref)
+
+    prop()

@@ -1,0 +1,258 @@
+"""The declarative sweep engine: SweepSpec validation, SweepResult
+accessors, the simulate_sweep deprecation shim, and the sharded-vs-
+single-device bit-for-bit parity contract (DESIGN.md §12).
+
+Multi-device tests run in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count`` set before jax
+initializes (same pattern as tests/test_distribution.py).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import (SimConfig, SweepSpec, make_workload, run_sweep,
+                        simulate_sweep)
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+T, M = 40, 4
+
+
+def _wl(name="bursty", t=T, seed=0, **kw):
+    return make_workload(name, T=t, m=M, seed=seed, **kw)
+
+
+def _rows_equal(ra, rb) -> bool:
+    names = (
+        ra._fields if hasattr(ra, "_fields")
+        else tuple(f.name for f in dataclasses.fields(ra))
+    )
+    for n in names:
+        if n in ("config", "final_cache"):
+            continue
+        a, b = getattr(ra, n), getattr(rb, n)
+        if a is None or b is None:
+            if a is not b:
+                return False
+            continue
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_defaults_and_coercion():
+    wl = _wl()
+    spec = SweepSpec(config=SimConfig(m=M), workloads=wl)
+    # single workload coerced to a tuple; axes default to the config
+    assert spec.workloads == (wl,)
+    assert spec.policies == (spec.config.policy,)
+    assert spec.controllers == (spec.config.controller,)
+    assert spec.workload_names == ("bursty",)
+    assert spec.n_cells == 1
+    assert list(spec.coords()) == [("midas", "hysteresis", "bursty", 0)]
+
+
+def test_spec_rejects_empty_and_mismatched_grids():
+    with pytest.raises(ValueError, match="at least one workload"):
+        SweepSpec(config=SimConfig(m=M), workloads=())
+    with pytest.raises(ValueError, match="grid shape"):
+        SweepSpec(config=SimConfig(m=M),
+                  workloads=(_wl(), _wl(t=T + 8)))
+    with pytest.raises(ValueError, match="unique"):
+        SweepSpec(config=SimConfig(m=M), workloads=(_wl(), _wl(seed=1)))
+    with pytest.raises(ValueError, match="at least one seed"):
+        SweepSpec(config=SimConfig(m=M), workloads=_wl(), seeds=())
+
+
+def test_spec_validates_axes_with_alternatives():
+    with pytest.raises(ValueError, match="available.*round_robin"):
+        SweepSpec(config=SimConfig(m=M), workloads=_wl(),
+                  policies=("nope",))
+    with pytest.raises(ValueError, match="available.*hysteresis"):
+        SweepSpec(config=SimConfig(m=M), workloads=_wl(),
+                  controllers=("nope",))
+    with pytest.raises(ValueError, match="metrics"):
+        SweepSpec(config=SimConfig(m=M), workloads=_wl(),
+                  metrics="nope")
+    with pytest.raises(ValueError, match="devices"):
+        SweepSpec(config=SimConfig(m=M), workloads=_wl(), devices=0)
+
+
+def test_spec_folds_fault_override_into_config():
+    from repro.core import FaultEvent
+
+    ev = (FaultEvent("proxy_crash", t0=10, duration=5, target=0),)
+    spec = SweepSpec(config=SimConfig(m=M), workloads=_wl(), faults=ev)
+    assert spec.config.faults is not None
+    assert spec.config.faults[0].kind == "proxy_crash"
+
+
+def test_devices_beyond_visible_raises_with_hint():
+    spec = SweepSpec(config=SimConfig(m=M), workloads=_wl(),
+                     devices=4096)
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        run_sweep(spec)
+
+
+# ---------------------------------------------------------------------------
+# run_sweep + SweepResult accessors
+# ---------------------------------------------------------------------------
+
+
+def test_result_accessors_and_ambiguity():
+    spec = SweepSpec(
+        config=SimConfig(m=M), workloads=(_wl(), _wl("light")),
+        policies=("midas", "round_robin"), seeds=(0, 1),
+        metrics="summary", do_warmup=False)
+    res = run_sweep(spec)
+    assert len(res.cells) == spec.n_cells == 8
+    rows = res.rows(policy="midas", workload="bursty")
+    assert len(rows) == 2  # one per seed
+    r = res.row(policy="midas", workload="bursty", seed=1)
+    assert _rows_equal(r, rows[1])
+    # singleton controller axis may be omitted; multi-valued must be named
+    with pytest.raises(ValueError, match="ambiguous policy"):
+        res.rows(workload="bursty")
+    with pytest.raises(ValueError, match="available"):
+        res.rows(policy="nope", workload="bursty")
+    assert len(dict(res.items())) == 8
+
+
+def test_to_legacy_shapes_and_controller_guard():
+    spec = SweepSpec(
+        config=SimConfig(m=M), workloads=_wl(),
+        policies=("midas",), seeds=(0,), metrics="summary",
+        do_warmup=False)
+    legacy = run_sweep(spec).to_legacy(single=True)
+    assert set(legacy) == {"midas"}
+    assert len(legacy["midas"]) == 1  # single workload: rows directly
+    multi = SweepSpec(
+        config=SimConfig(m=M), workloads=(_wl(), _wl("light")),
+        seeds=(0,), metrics="summary", do_warmup=False)
+    out = run_sweep(multi).to_legacy(single=False)
+    assert set(out["midas"]) == {"bursty", "light"}
+    two = SweepSpec(
+        config=SimConfig(m=M), workloads=_wl(),
+        controllers=("hysteresis", "static"), seeds=(0,),
+        metrics="summary", do_warmup=False)
+    with pytest.raises(ValueError, match="controller axis"):
+        run_sweep(two).to_legacy(single=True)
+
+
+def test_controller_axis_matches_single_controller_runs():
+    """A 2-controller spec reproduces each single-controller sweep
+    bit-for-bit (the controller axis is an outer loop, not a remix)."""
+    both = run_sweep(SweepSpec(
+        config=SimConfig(m=M), workloads=_wl(),
+        controllers=("hysteresis", "static"), seeds=(0,),
+        metrics="summary", do_warmup=False))
+    for ctrl in ("hysteresis", "static"):
+        solo = run_sweep(SweepSpec(
+            config=SimConfig(m=M, controller=ctrl), workloads=_wl(),
+            seeds=(0,), metrics="summary", do_warmup=False))
+        assert _rows_equal(both.row(controller=ctrl), solo.row())
+
+
+# ---------------------------------------------------------------------------
+# simulate_sweep deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_sweep_shim_warns_and_matches_run_sweep():
+    cfg = SimConfig(m=M)
+    wl = _wl()
+    with pytest.warns(DeprecationWarning, match="SweepSpec"):
+        legacy = simulate_sweep(cfg, wl, seeds=(0, 1), do_warmup=False,
+                                metrics="summary")
+    res = run_sweep(SweepSpec(
+        config=cfg, workloads=wl, seeds=(0, 1), metrics="summary",
+        do_warmup=False))
+    # single-workload legacy shape: {policy: rows}
+    assert set(legacy) == {"midas"}
+    for got, want in zip(legacy["midas"], res.rows()):
+        assert _rows_equal(got, want)
+
+
+def test_simulate_sweep_shim_multi_workload_full_metrics():
+    cfg = SimConfig(m=M)
+    wls = [_wl(), _wl("light")]
+    with pytest.warns(DeprecationWarning):
+        legacy = simulate_sweep(
+            cfg, wls, policies=("midas", "round_robin"), seeds=(0,),
+            do_warmup=False)
+    assert set(legacy) == {"midas", "round_robin"}
+    assert set(legacy["midas"]) == {"bursty", "light"}
+    row = legacy["midas"]["bursty"][0]
+    assert row.queue_timeline.shape == (T, M)
+
+
+# ---------------------------------------------------------------------------
+# Sharded parity (subprocess: device count locks at first jax init)
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, devices: int = 8, timeout: int = 480) -> str:
+    env = dict(
+        os.environ, PYTHONPATH=SRC,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_sharded_matches_single_device_bitwise():
+    """devices=8 reproduces devices=1 bit-for-bit for both metrics
+    modes, for seed counts that divide the mesh and ones that need the
+    padding path — and the sharded jit compiles once per metrics mode."""
+    out = _run("""
+        import dataclasses
+        import numpy as np
+        from repro.core import SimConfig, SweepSpec, run_sweep
+        from repro.core import make_workload
+        from repro.core.sweep import _SHARD_TRACES
+
+        wls = tuple(make_workload(n, T=24, m=4, seed=0)
+                    for n in ("bursty", "light"))
+
+        def rows_equal(ra, rb):
+            names = (ra._fields if hasattr(ra, "_fields")
+                     else tuple(f.name for f in dataclasses.fields(ra)))
+            for n in names:
+                if n in ("config", "final_cache"):
+                    continue
+                a, b = getattr(ra, n), getattr(rb, n)
+                if a is None or b is None:
+                    assert a is b, n
+                    continue
+                assert np.array_equal(np.asarray(a), np.asarray(b)), n
+            return True
+
+        for metrics in ("summary", "full"):
+            for seeds in (tuple(range(8)), (0, 1, 2)):  # 3 pads to 8
+                kw = dict(config=SimConfig(m=4), workloads=wls,
+                          seeds=seeds, metrics=metrics, do_warmup=False)
+                single = run_sweep(SweepSpec(devices=1, **kw))
+                sharded = run_sweep(SweepSpec(devices=8, **kw))
+                assert set(single.cells) == set(sharded.cells)
+                for c in single.cells:
+                    rows_equal(single.cells[c], sharded.cells[c])
+                print(f"OK {metrics} seeds={len(seeds)}")
+        # one (re)compile per metrics mode, not per seed count
+        assert _SHARD_TRACES[0] == 2, _SHARD_TRACES
+        print("TRACES_OK")
+    """)
+    assert out.count("OK") == 5 and "TRACES_OK" in out
