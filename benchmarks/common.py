@@ -27,6 +27,8 @@ import time
 from pathlib import Path
 from typing import Callable, List, Optional, Sequence, Tuple
 
+from repro.obs import trace as obs_trace
+
 ROWS: List[Tuple[str, float, str]] = []
 
 # default artifact directory — every sweep runner writes here
@@ -38,14 +40,20 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def timed(fn: Callable, *args, repeat: int = 1, **kw):
+def timed(fn: Callable, *args, repeat: int = 1, label: str = "", **kw):
     """Run fn, return (result, us_per_call) — first call includes compile,
-    so time the SECOND call when repeat > 1."""
-    out = fn(*args, **kw)
-    t0 = time.perf_counter()
-    for _ in range(repeat):
+    so time the SECOND call when repeat > 1.  Both halves are recorded
+    as flight-recorder spans (``bench/first_call`` / ``bench/steady``)
+    so ``repro-report`` can split compile from execute time."""
+    with obs_trace.span("bench/first_call", cat="bench", label=label):
         out = fn(*args, **kw)
-    dt = (time.perf_counter() - t0) / repeat
+    with obs_trace.span(
+        "bench/steady", cat="bench", label=label, repeat=repeat
+    ):
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            out = fn(*args, **kw)
+        dt = (time.perf_counter() - t0) / repeat
     return out, dt * 1e6
 
 
@@ -125,15 +133,53 @@ def parse_opts(
     )
 
 
+def _env_meta() -> dict:
+    """Environment provenance every artifact records (ISSUE 8): numbers
+    without the stack + device that produced them aren't comparable."""
+    meta = {}
+    try:
+        import jax
+
+        meta["jax_version"] = jax.__version__
+        meta["device_kind"] = jax.devices()[0].device_kind
+        meta["n_devices"] = len(jax.devices())
+    except Exception:  # keep artifacts writable even if jax breaks late
+        pass
+    return meta
+
+
+def _utc(ts: float) -> str:
+    return time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime(ts))
+
+
 class Artifact:
     """Incremental JSON artifact: call :meth:`write` after every block,
     rewriting the whole doc — a CI timeout (rc 124, tolerated) still
-    uploads valid partial JSON."""
+    uploads valid partial JSON.
+
+    Every artifact is paired with a flight-recorder trace: constructing
+    one points the process-global recorder at ``<stem>.trace.jsonl``
+    (write-through JSONL) and each :meth:`write` refreshes the
+    Chrome-trace export ``<stem>.trace.json`` plus the artifact's
+    ``meta`` block (jax version, device kind, wall-clock start/end).
+    """
 
     def __init__(self, filename: str, out: Optional[Path] = None):
         base = out if out is not None else OUT
         base.mkdir(parents=True, exist_ok=True)
         self.path = base / filename
+        self.started = time.time()
+        self.trace_path = self.path.with_suffix(".trace.jsonl")
+        obs_trace.configure(path=self.trace_path, fresh=True)
 
     def write(self, doc: dict) -> None:
+        meta = doc.setdefault("meta", {})
+        meta.update(_env_meta())
+        meta.setdefault("started_at", _utc(self.started))
+        meta["written_at"] = _utc(time.time())
+        meta["trace_file"] = self.trace_path.name
         self.path.write_text(json.dumps(doc, indent=1))
+        if obs_trace.RECORDER.enabled:
+            obs_trace.RECORDER.write_chrome(
+                self.path.with_suffix(".trace.json")
+            )

@@ -46,6 +46,7 @@ from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts,
 from repro.core import (SimConfig, SweepSpec, controllers,
                         make_workload, run_sweep)
 from repro.core.sim import warmup
+from repro.obs import windows
 
 T = 1200           # 60 s at dt=50 ms — several burst/storm cycles
 M = 8
@@ -69,7 +70,8 @@ def _cell(rows) -> dict:
     f_granted = float(np.max([r.f_max_timeline.max() for r in rows]))
     f_mean = float(np.mean([r.f_max_timeline.mean() for r in rows]))
     steer_rate = steered / eligible
-    return {
+    cell = windows.cell_block(rows, dt_ms=DT_MS)
+    cell.update({
         "oscillation_per_min": round(
             float(np.mean([s["oscillation_per_min"] for s in stats])), 2),
         "settle_ms": round(
@@ -90,7 +92,8 @@ def _cell(rows) -> dict:
         "pressure_p99": round(
             float(np.mean(
                 [np.percentile(r.pressure, 99) for r in rows])), 3),
-    }
+    })
+    return cell
 
 
 def run(opts: Optional[BenchOpts] = None) -> None:
@@ -98,9 +101,12 @@ def run(opts: Optional[BenchOpts] = None) -> None:
     ctrl_names = opts.pick(controllers.available(), "controllers")
     seeds = opts.seeds(SEEDS)
     wls = tuple(make_workload(n, T=T, m=M, seed=0) for n in SCENARIOS)
+    # artifact first: its flight-recorder trace covers the warmup too
+    art = Artifact("control_matrix.json", opts.out)
     # one §III-B warmup for the whole matrix (controller-independent)
     targets, warm_us = timed(
-        warmup, SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE)
+        warmup, SimConfig(m=M, policy=POLICY, middleware=MIDDLEWARE),
+        label="control/warmup",
     )
     emit("control/warmup_targets", warm_us,
          f"b_tgt={targets[0]:.3f};p99_tgt={targets[1]:.1f}ms (shared)")
@@ -116,7 +122,6 @@ def run(opts: Optional[BenchOpts] = None) -> None:
         ],
         "cells": {},
     }
-    art = Artifact("control_matrix.json", opts.out)
     for ctrl in ctrl_names:
         # scenarios × seeds batched onto one compiled sweep per
         # controller; summary metrics carry the knob trajectories
@@ -126,7 +131,7 @@ def run(opts: Optional[BenchOpts] = None) -> None:
             workloads=wls, policies=(POLICY,), seeds=seeds,
             metrics="summary", devices=opts.devices,
             targets=targets)
-        res, us = timed(run_sweep, spec)
+        res, us = timed(run_sweep, spec, label=f"control/{ctrl}")
         doc["cells"][ctrl] = {
             name: _cell(res.rows(policy=POLICY, workload=name))
             for name in SCENARIOS

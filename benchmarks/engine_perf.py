@@ -31,6 +31,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts)
 # the "e8_sweep" section must measure exactly the E8 configuration —
@@ -42,6 +43,8 @@ from repro.core import (SimConfig, SweepSpec, hashring, make_workload,
                         run_sweep, workloads)
 from repro.core import policies as policy_lib
 from repro.core import sim as sim_lib
+from repro.obs import trace as obs_trace
+from repro.obs import windows
 
 T_ENGINE = 400          # single-run horizon (compile + steady timing)
 REPEAT = 3
@@ -59,17 +62,24 @@ CONFIGS = (
 SECTIONS = tuple(name for name, _ in CONFIGS) + ("e8_sweep",)
 
 
-def _time_run(fn, *args):
-    """(compile_s, steady_s): first call vs best of REPEAT warm calls."""
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args))
-    compile_s = time.perf_counter() - t0
-    steady = []
-    for _ in range(REPEAT):
+def _time_run(fn, *args, label: str = ""):
+    """(compile_s, steady_s, out): first call vs best of REPEAT warm
+    calls, plus the last result (the windowing contract needs the
+    timelines the timed run produced)."""
+    with obs_trace.span("bench/first_call", cat="bench", label=label):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-        steady.append(time.perf_counter() - t0)
-    return compile_s, min(steady)
+        compile_s = time.perf_counter() - t0
+    steady = []
+    with obs_trace.span(
+        "bench/steady", cat="bench", label=label, repeat=REPEAT
+    ):
+        for _ in range(REPEAT):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            steady.append(time.perf_counter() - t0)
+    return compile_s, min(steady), out
 
 
 def _bench_engine(name: str, overrides: dict) -> dict:
@@ -84,12 +94,19 @@ def _bench_engine(name: str, overrides: dict) -> dict:
         args = (cfg, st, wl.keys, wl.mask, wl.is_write)
         hlo_chars = len(
             sim_lib._run_scan.lower(*args).as_text())
-        compile_s, steady_s = _time_run(sim_lib._run_scan, *args)
+        compile_s, steady_s, (_, outs) = _time_run(
+            sim_lib._run_scan, *args, label=f"engine/{name}/{engine}")
+        q_mean = np.asarray(outs.L, np.float64).mean(axis=1)
+        w = windows.detect(q_mean)
+        wstats = windows.windowed_stats(q_mean, w)
         row[engine] = {
             "hlo_chars": hlo_chars,
             "compile_s": round(compile_s, 3),
             "steady_s": round(steady_s, 4),
             "ticks_per_s": round(T_ENGINE / steady_s),
+            "window": w.to_json(),
+            "stable": {"mean_queue": round(wstats["stable"], 4)},
+            "window_shift": {"mean_queue": round(wstats["shift"], 4)},
         }
         emit(f"engine_perf/{name}/{engine}", steady_s * 1e6,
              f"compile={compile_s:.2f}s "
@@ -153,7 +170,8 @@ def _bench_e8_before(policy: str, mw, wls, seeds) -> dict:
             rows.append(sim_lib._to_result(cfg, outs_b, None))
         return rows
 
-    compile_s, steady_s = _time_run(run)
+    compile_s, steady_s, _ = _time_run(
+        run, label=f"e8_before/{policy}")
     return {"compile_s": compile_s, "steady_s": steady_s}
 
 
@@ -166,8 +184,16 @@ def _bench_e8_after(policy: str, mw, wls, seeds, devices: int) -> dict:
     def run():
         return run_sweep(spec)
 
-    compile_s, steady_s = _time_run(run)
-    return {"compile_s": compile_s, "steady_s": steady_s}
+    compile_s, steady_s, res = _time_run(
+        run, label=f"e8_after/{policy}")
+    # windowing contract on the sweep the perf number came from (first
+    # workload cell: one window per policy keeps the artifact small)
+    rows = res.rows(policy=policy, workload=wls[0].name)
+    return {
+        "compile_s": compile_s,
+        "steady_s": steady_s,
+        **windows.cell_block(rows),
+    }
 
 
 def run(opts: Optional[BenchOpts] = None) -> None:
@@ -218,6 +244,9 @@ def run(opts: Optional[BenchOpts] = None) -> None:
                 before["steady_s"] / after["steady_s"], 2),
             "before_compile_s": round(before["compile_s"], 2),
             "after_compile_s": round(after["compile_s"], 2),
+            "window": after["window"],
+            "stable": after["stable"],
+            "window_shift": after["window_shift"],
         }
         emit(f"engine_perf/e8_sweep/{policy}", after["steady_s"] * 1e6,
              f"{sweep['policies'][policy]['speedup_steady']}x steady "

@@ -40,6 +40,7 @@ from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts,
 from repro.core import (FaultEvent, SimConfig, SweepSpec, make_workload,
                         run_sweep)
 from repro.core import faults as faults_lib
+from repro.obs import windows
 
 T = 900            # 45 s at dt=50 ms: 15 s pre-fault, fault, recovery
 M = 8
@@ -140,18 +141,20 @@ def run(opts: Optional[BenchOpts] = None) -> None:
                 config=cfg, workloads=(wl,), policies=POLICIES,
                 seeds=seeds, metrics="full", devices=opts.devices,
                 do_warmup=False)
-            res, us = timed(run_sweep, spec)
+            res, us = timed(
+                run_sweep, spec, label=f"resilience/{fault_name}/{ctrl}")
             for policy in POLICIES:
                 key = f"{policy}+{ctrl}"
                 rows = res.rows(policy=policy)
                 qs = np.stack([r.queue_timeline for r in rows])  # (S,T,m)
                 mean_q = qs.mean(axis=2)                         # (S,T)
-                cell = {
+                cell = windows.cell_block(rows, dt_ms=cfg.dt_ms)
+                cell.update({
                     "mean_queue": round(float(qs.mean()), 3),
                     "max_queue": round(float(qs.max()), 2),
                     "steady_mean_queue": round(
                         float(mean_q[:, -100:].mean()), 3),
-                }
+                })
                 fc0 = rows[0].final_cache
                 if fc0 is not None:
                     hits = sum(int(r.final_cache.hits) for r in rows)

@@ -29,6 +29,9 @@ from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts,
                                timed)
 from repro.core import (SimConfig, SweepSpec, make_workload, run_sweep,
                         workloads)
+from repro.obs import windows
+
+DT_MS = 50.0  # SimConfig default; used only to annotate window bounds
 
 T = 1200           # 60 s at dt=50 ms — covers a full storm cycle
 M = 8
@@ -48,7 +51,8 @@ POLICIES = tuple(POLICY_STACKS)
 def _row(rows) -> dict:
     """Seed-averaged claims-table cell from per-seed summary rows."""
     qs = np.array([r.latency_quantiles() for r in rows])
-    return {
+    cell = windows.cell_block(rows, dt_ms=DT_MS)
+    cell.update({
         "mean_queue": round(
             float(np.mean([r.mean_queue() for r in rows])), 3),
         "worst_case_queue": round(
@@ -59,7 +63,8 @@ def _row(rows) -> dict:
             float(np.mean([r.dispersion() for r in rows])), 4),
         "p50_ms": round(float(qs[:, 0].mean()), 1),
         "p99_ms": round(float(qs[:, 1].mean()), 1),
-    }
+    })
+    return cell
 
 
 def run(opts: Optional[BenchOpts] = None) -> None:
@@ -88,7 +93,7 @@ def run(opts: Optional[BenchOpts] = None) -> None:
             config=SimConfig(m=M, middleware=POLICY_STACKS[policy]),
             workloads=wls, policies=(policy,), seeds=seeds,
             metrics="summary", devices=opts.devices)
-        res, us = timed(run_sweep, spec)
+        res, us = timed(run_sweep, spec, label=f"scenario_matrix/{policy}")
         for wl_name in names:
             table[policy][wl_name] = _row(
                 res.rows(policy=policy, workload=wl_name))

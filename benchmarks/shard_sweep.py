@@ -142,6 +142,13 @@ def _worker(req: dict) -> dict:
         res = run_sweep(spec)
         run_s = time.perf_counter() - t0
         ticks = len(spec.workloads) * len(seeds) * req["t"]
+        # windowing contract rides the subprocess result line (the
+        # block is plain JSON); first scenario stands for the grid
+        from repro.obs import windows
+
+        cell = windows.cell_block(
+            res.rows(policy="midas", workload=SCENARIOS[0])
+        )
         return {
             "devices": req["devices"],
             "visible_devices": len(jax.devices()),
@@ -153,6 +160,7 @@ def _worker(req: dict) -> dict:
             "key_slots_per_s": round(ticks * R_SLOTS / run_s),
             "rss_mb": round(_rss_mb(), 1),
             "rows": len(res.cells),
+            **cell,
         }
     if req["mode"] == "parity":
         n_dev = req["devices"]

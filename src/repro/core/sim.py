@@ -50,6 +50,7 @@ from repro.core import registry as registry_lib
 from repro.core.controllers.base import Knobs, Signals
 from repro.core.policies.base import RouteContext, RouteStats
 from repro.core.workloads import Workload
+from repro.obs import trace as obs_trace
 
 # Snapshot of the registry at import time; prefer policies.available().
 POLICIES = policy_lib.available()
@@ -256,12 +257,16 @@ class KnobTrace(NamedTuple):
     """Per-tick control-plane scalars emitted as the summary scan's ys:
     O(T) total — knob trajectories survive ``metrics="summary"`` even
     though the O(T·m) queue timelines do not, so E4/E8/E9-style cells
-    can report oscillation, settling, and churn (DESIGN.md §10)."""
+    can report oscillation, settling, and churn (DESIGN.md §10).
+    ``q_mean`` (the across-server mean queue per tick) rides along so
+    the ``repro.obs.windows`` warmup/stable/cooldown detector has a
+    steady-state series in BOTH metrics modes (DESIGN.md §13)."""
 
     d: jnp.ndarray  # (T,) int32
     delta_l: jnp.ndarray  # (T,) float32
     f_max: jnp.ndarray  # (T,) float32
     pressure: jnp.ndarray  # (T,) float32
+    q_mean: jnp.ndarray  # (T,) float32 across-server mean queue
 
 
 class SummaryAcc(NamedTuple):
@@ -348,6 +353,7 @@ class SummaryResult:
     delta_l_timeline: Optional[np.ndarray] = None  # (T,)
     f_max_timeline: Optional[np.ndarray] = None  # (T,)
     pressure: Optional[np.ndarray] = None  # (T,)
+    q_mean_timeline: Optional[np.ndarray] = None  # (T,) mean queue
 
     # ---- paper metrics (SimResult-compatible) --------------------------
     def mean_queue(self) -> float:
@@ -402,6 +408,9 @@ def _to_summary(
         ),
         f_max_timeline=None if trace is None else np.asarray(trace.f_max),
         pressure=None if trace is None else np.asarray(trace.pressure),
+        q_mean_timeline=(
+            None if trace is None else np.asarray(trace.q_mean)
+        ),
     )
 
 
@@ -447,6 +456,9 @@ def summarize(result: SimResult) -> SummaryResult:
         delta_l=np.asarray(result.delta_l_timeline),
         f_max=f_max_tl,
         pressure=np.asarray(result.pressure),
+        # same jnp float32 mean as the in-scan ys — keeps the summary
+        # parity contract bitwise, not merely approximate
+        q_mean=np.asarray(jnp.mean(outs.L, axis=1)),
     )
     return _to_summary(
         result.config, jax.device_get(_reduce_ticks(m, outs)), trace
@@ -922,8 +934,16 @@ def _scan_inputs(
     return base
 
 
+# Trace counter for _run_scan: increments once per (re)trace, so the
+# host-side obs spans can tag whether a call paid compilation — a
+# Python-list mutation at trace time, invisible to the compiled math
+# (the golden-parity contract is untouched).
+_RUN_TRACES = [0]
+
+
 @functools.partial(jax.jit, static_argnums=(0,))
 def _run_scan(cfg: SimConfig, state: SimState, keys, mask, is_write):
+    _RUN_TRACES[0] += 1
     ring = hashring.make_ring(cfg.m, cfg.V)
     fc = faults_lib.compile_faults(cfg, int(keys.shape[0]))
     step = functools.partial(
@@ -982,6 +1002,7 @@ def _sweep_vmapped(
                     delta_l=out.delta_l,
                     f_max=out.f_max,
                     pressure=out.pressure,
+                    q_mean=jnp.mean(out.L),
                 )
                 return (s, _summary_update(acc, out)), ys
 
@@ -1041,7 +1062,9 @@ def warmup(
         cfg, policy="hash", cache_enabled=False, middleware=(), faults=None
     )
     st = init_state(warm_cfg)
-    _, outs = _run_scan(warm_cfg, st, wl.keys, wl.mask, wl.is_write)
+    with obs_trace.span("sim/warmup", cat="warmup", T=T, m=cfg.m):
+        _, outs = _run_scan(warm_cfg, st, wl.keys, wl.mask, wl.is_write)
+        jax.block_until_ready(outs.L)
     L = np.asarray(outs.L)
     # EWMA'd imbalance series, same smoothing as the controller —
     # vectorized closed-form filter (was an O(T) host-side Python loop)
@@ -1097,12 +1120,29 @@ def simulate(
 ) -> SimResult:
     b_tgt, p99_tgt = _targets(cfg, do_warmup)
     state = init_state(cfg, b_tgt, p99_tgt)
-    final, outs = _run_scan(cfg, state, wl.keys, wl.mask, wl.is_write)
-    return _to_result(cfg, outs, _final_cache(cfg, final))
+    traces0 = _RUN_TRACES[0]
+    with obs_trace.span(
+        "sim/run",
+        cat="execute",
+        policy=cfg.policy,
+        controller=cfg.controller,
+        T=int(wl.keys.shape[0]),
+    ) as sp:
+        final, outs = _run_scan(cfg, state, wl.keys, wl.mask, wl.is_write)
+        jax.block_until_ready(outs.L)
+        sp["compiled"] = _RUN_TRACES[0] > traces0
+    with obs_trace.span("sim/host_result", cat="host"):
+        return _to_result(cfg, outs, _final_cache(cfg, final))
 
 
 # per-seed rows for one (policy, workload) combo
 SweepRows = Tuple[Union[SimResult, SummaryResult], ...]
+
+# Module-level once-per-process guard for the simulate_sweep
+# DeprecationWarning: sweeps call the shim in loops, and one nag per
+# process is signal while one per call is noise.  Tests reset it to
+# assert the exactly-once contract.
+_SWEEP_DEPRECATION_WARNED = [False]
 
 
 def simulate_sweep(
@@ -1150,12 +1190,14 @@ def simulate_sweep(
         controller axis, multi-device sharding, and a coordinate-
         addressable :class:`repro.core.sweep.SweepResult`.
     """
-    warnings.warn(
-        "simulate_sweep is deprecated; build a repro.core.sweep."
-        "SweepSpec and call run_sweep (DESIGN.md §12)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
+    if not _SWEEP_DEPRECATION_WARNED[0]:
+        _SWEEP_DEPRECATION_WARNED[0] = True
+        warnings.warn(
+            "simulate_sweep is deprecated; build a repro.core.sweep."
+            "SweepSpec and call run_sweep (DESIGN.md §12)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
     from repro.core import sweep as sweep_lib
 
     single = isinstance(wl, Workload)

@@ -48,6 +48,7 @@ from repro.core import policies as policy_lib
 from repro.core import registry as registry_lib
 from repro.core import sim
 from repro.core.workloads import Workload
+from repro.obs import trace as obs_trace
 
 # one realized row of the grid: full timelines or the streaming summary
 Row = Union[sim.SimResult, sim.SummaryResult]
@@ -364,60 +365,91 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
                 # the bare "hash" policy): one pass per policy, shared
                 # across the controller axis
                 if pname not in targets_by_policy:
-                    targets_by_policy[pname] = sim._targets(
-                        pcfg, spec.do_warmup
-                    )
+                    with obs_trace.span(
+                        "sweep/warmup", cat="warmup", policy=pname
+                    ):
+                        targets_by_policy[pname] = sim._targets(
+                            pcfg, spec.do_warmup
+                        )
                 b_tgt, p99_tgt = targets_by_policy[pname]
-            per_seed = [
-                sim.init_state(
-                    dataclasses.replace(pcfg, seed=s), b_tgt, p99_tgt
+            with obs_trace.span(
+                "sweep/init_states",
+                cat="host",
+                policy=pname,
+                controller=cname,
+                seeds=len(spec.seeds),
+            ):
+                per_seed = [
+                    sim.init_state(
+                        dataclasses.replace(pcfg, seed=s), b_tgt, p99_tgt
+                    )
+                    for s in spec.seeds
+                ]
+                states = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *per_seed
                 )
-                for s in spec.seeds
-            ]
-            states = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *per_seed
-            )
-            if spec.devices > 1:
-                states, pad = _pad_seed_axis(
-                    states, len(spec.seeds), spec.devices
+            traces0 = sim._SWEEP_TRACES[0] + _SHARD_TRACES[0]
+            with obs_trace.span(
+                "sweep/execute",
+                cat="execute",
+                policy=pname,
+                controller=cname,
+                metrics=spec.metrics,
+                devices=spec.devices,
+                workloads=len(wls),
+                seeds=len(spec.seeds),
+            ) as sp:
+                if spec.devices > 1:
+                    states, pad = _pad_seed_axis(
+                        states, len(spec.seeds), spec.devices
+                    )
+                    final, outs = _run_scan_sweep_sharded(
+                        pcfg,
+                        states,
+                        keys,
+                        mask,
+                        is_write,
+                        spec.metrics,
+                        spec.devices,
+                    )
+                else:
+                    pad = 0
+                    final, outs = sim._run_scan_sweep(
+                        pcfg, states, keys, mask, is_write, spec.metrics
+                    )
+                # one transfer for the whole batch, sliced on host
+                outs = jax.device_get(outs)
+                if spec.metrics == "full":
+                    final = jax.device_get(final)
+                sp["compiled"] = (
+                    sim._SWEEP_TRACES[0] + _SHARD_TRACES[0] > traces0
                 )
-                final, outs = _run_scan_sweep_sharded(
-                    pcfg,
-                    states,
-                    keys,
-                    mask,
-                    is_write,
-                    spec.metrics,
-                    spec.devices,
-                )
-            else:
-                pad = 0
-                final, outs = sim._run_scan_sweep(
-                    pcfg, states, keys, mask, is_write, spec.metrics
-                )
-            # one transfer for the whole batch, sliced on host
-            outs = jax.device_get(outs)
-            if spec.metrics == "full":
-                final = jax.device_get(final)
             del pad  # padded rows simply never get sliced below
-            for j, w in enumerate(wls):
-                for i, s in enumerate(spec.seeds):
-                    scfg = dataclasses.replace(pcfg, seed=s)
-                    row = jax.tree_util.tree_map(lambda x: x[j, i], outs)
-                    if spec.metrics == "summary":
-                        # row is the (SummaryAcc, KnobTrace) pair
-                        cells[(pname, cname, w.name, s)] = sim._to_summary(
-                            scfg, *row
-                        )
-                    else:
-                        final_b = jax.tree_util.tree_map(
-                            lambda x: x[j, i], final
-                        )
-                        cells[(pname, cname, w.name, s)] = (
-                            sim._to_result(
-                                scfg,
-                                row,
-                                sim._final_cache(pcfg, final_b),
+            with obs_trace.span(
+                "sweep/host_slice",
+                cat="host",
+                policy=pname,
+                controller=cname,
+                cells=len(wls) * len(spec.seeds),
+            ):
+                for j, w in enumerate(wls):
+                    for i, s in enumerate(spec.seeds):
+                        scfg = dataclasses.replace(pcfg, seed=s)
+                        row = jax.tree_util.tree_map(lambda x: x[j, i], outs)
+                        if spec.metrics == "summary":
+                            # row is the (SummaryAcc, KnobTrace) pair
+                            cells[(pname, cname, w.name, s)] = sim._to_summary(
+                                scfg, *row
                             )
-                        )
+                        else:
+                            final_b = jax.tree_util.tree_map(
+                                lambda x: x[j, i], final
+                            )
+                            cells[(pname, cname, w.name, s)] = (
+                                sim._to_result(
+                                    scfg,
+                                    row,
+                                    sim._final_cache(pcfg, final_b),
+                                )
+                            )
     return SweepResult(spec=spec, cells=cells)

@@ -33,7 +33,9 @@ def ewma(prev: jnp.ndarray, x: jnp.ndarray, alpha: float) -> jnp.ndarray:
     return (1.0 - alpha) * prev + alpha * x
 
 
-def ewma_series(x: np.ndarray, alpha: float, block: int = 512) -> np.ndarray:
+def ewma_series(
+    x: np.ndarray, alpha: float, block: int = 512, init: float = 0.0
+) -> np.ndarray:
     """EWMA-smooth a (T, ...) series along axis 0 (host-side, float64).
 
     Closed form per block: with decay ρ = 1-α and p_t = ρ^(t+1),
@@ -41,7 +43,9 @@ def ewma_series(x: np.ndarray, alpha: float, block: int = 512) -> np.ndarray:
     the per-step recurrence.  Blocks bound the rescaling's dynamic range
     to ρ^(-block); contributions older than a block have decayed by the
     same factor they are scaled by, so relative precision is preserved
-    for any horizon.  Starts from x̂ = 0, like the controller.
+    for any horizon.  ``init`` is x̂ before the first sample — 0 matches
+    the controller; the windowing detector (``repro.obs.windows``)
+    passes ``init=x[0]`` so the filter adds no artificial ramp.
     """
     x = np.asarray(x, np.float64)
     if x.ndim == 0 or x.shape[0] == 0:
@@ -54,7 +58,7 @@ def ewma_series(x: np.ndarray, alpha: float, block: int = 512) -> np.ndarray:
     # alphas like 0.9 would underflow ρ^512)
     block = min(block, max(int(-575.0 / np.log(rho)), 1))
     out = np.empty_like(x)
-    acc = np.zeros(x.shape[1:], np.float64)
+    acc = np.full(x.shape[1:], float(init), np.float64)
     for s in range(0, x.shape[0], block):
         xb = x[s : s + block]
         n = xb.shape[0]

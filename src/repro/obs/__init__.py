@@ -1,0 +1,30 @@
+# Flight-recorder observability plane (DESIGN.md §13).
+#
+# Three pieces, all host-side — nothing here touches jitted math, so
+# golden parity holds bit-for-bit with recording on or off:
+#
+# * ``repro.obs.trace``   — structured spans around the engine's
+#   compile/execute/host-slice phases, emitted as a JSONL event log
+#   plus a Chrome-trace (``trace_event``) export viewable in Perfetto;
+# * ``repro.obs.windows`` — the shared warmup/stable/cooldown windowing
+#   contract (EWMA-slope + variance plateau) every E-series runner uses
+#   so artifact cells carry stable-only statistics next to whole-run
+#   numbers;
+# * ``repro.obs.report``  — the ``repro-report`` CLI
+#   (``python -m repro.obs.report``): per-phase time breakdown,
+#   compile-vs-execute ratios, windowed-vs-raw metric deltas, and a
+#   ``--check`` mode CI runs against every trace/artifact pair.
+from repro.obs import trace, windows  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    RECORDER,
+    Recorder,
+    configure,
+    instant,
+    span,
+)
+from repro.obs.windows import (  # noqa: F401
+    Window,
+    cell_block,
+    detect,
+    q_mean_series,
+)

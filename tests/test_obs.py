@@ -1,0 +1,255 @@
+"""The flight-recorder observability plane (DESIGN.md §13).
+
+Four contracts:
+
+* **Recorder** — spans land as Chrome-``trace_event`` JSONL (write-
+  through sink, torn-final-line tolerance), the Chrome export opens as
+  ``{"traceEvents": [...]}``, and a disabled recorder records nothing.
+* **Windowing** — ``0 <= begin <= end <= T`` for arbitrary series
+  (hypothesis property when available), constant-load traces open at
+  the warmup bound, pure-transient traces censor instead of crashing,
+  and censored windows fall back to whole-run statistics.
+* **Parity** — engine results are bit-for-bit identical with the
+  recorder enabled or disabled (the spans are host-side only), and the
+  summary-mode ``q_mean_timeline`` equals the full-metrics
+  ``queue_timeline.mean(axis=1)`` bitwise.
+* **repro-report** — round-trips artifacts + traces, and ``--check``
+  flags malformed traces and invariant-violating window blocks.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import SimConfig, SweepSpec, make_workload, run_sweep
+from repro.obs import trace as trace_lib
+from repro.obs import windows
+from repro.obs.report import check_paths, main as report_main
+
+T, M = 40, 4
+
+
+def _wl(name="bursty"):
+    return make_workload(name, T=T, m=M, seed=0, N=256)
+
+
+# ---------------------------------------------------------------------------
+# Recorder / trace schema
+# ---------------------------------------------------------------------------
+
+
+def test_span_records_chrome_complete_event(tmp_path):
+    rec = trace_lib.Recorder(enabled=True)
+    rec.configure(path=tmp_path / "t.trace.jsonl", fresh=True)
+    with rec.span("phase/x", cat="execute", policy="midas") as sp:
+        sp["compiled"] = True
+    events = trace_lib.read_trace(tmp_path / "t.trace.jsonl")
+    assert trace_lib.validate_events(events) == []
+    span = events[-1]
+    assert span["ph"] == "X" and span["cat"] == "execute"
+    assert span["args"] == {"policy": "midas", "compiled": True}
+    assert span["dur"] >= 0
+    # the meta event carries the wall-clock epoch for joining artifacts
+    meta = [e for e in events if e["ph"] == "M"]
+    assert meta and "epoch_unix" in meta[0]["args"]
+
+
+def test_span_records_exception_and_reraises():
+    rec = trace_lib.Recorder(enabled=True)
+    with pytest.raises(RuntimeError):
+        with rec.span("boom"):
+            raise RuntimeError("x")
+    assert rec.events[-1]["args"]["error"] == "RuntimeError"
+
+
+def test_disabled_recorder_records_nothing(tmp_path):
+    rec = trace_lib.Recorder(enabled=False)
+    rec.configure(path=tmp_path / "off.trace.jsonl", fresh=True)
+    with rec.span("phase/x"):
+        pass
+    rec.instant("mark")
+    assert rec.events == []
+    assert (tmp_path / "off.trace.jsonl").read_text() == ""
+
+
+def test_write_chrome_is_loadable_trace_doc(tmp_path):
+    rec = trace_lib.Recorder(enabled=True)
+    rec.configure(fresh=True)
+    with rec.span("a"):
+        pass
+    rec.instant("b")
+    out = rec.write_chrome(tmp_path / "t.trace.json")
+    doc = json.loads(out.read_text())
+    assert {e["name"] for e in doc["traceEvents"]} >= {"a", "b"}
+
+
+def test_read_trace_tolerates_torn_final_line_only(tmp_path):
+    good = json.dumps({"name": "a", "cat": "c", "ph": "i", "ts": 1.0,
+                       "pid": 1, "tid": 1})
+    p = tmp_path / "torn.trace.jsonl"
+    p.write_text(good + "\n" + good[: len(good) // 2])
+    assert len(trace_lib.read_trace(p)) == 1  # torn tail dropped
+    p2 = tmp_path / "bad.trace.jsonl"
+    p2.write_text(good[: len(good) // 2] + "\n" + good + "\n")
+    with pytest.raises(ValueError, match="malformed JSONL"):
+        trace_lib.read_trace(p2)
+
+
+def test_validate_events_flags_schema_problems():
+    probs = trace_lib.validate_events(
+        [{"name": "a"}, {"name": "b", "cat": "c", "ph": "Z", "ts": 0.0,
+          "pid": 1, "tid": 1}])
+    assert len(probs) == 2
+
+
+# ---------------------------------------------------------------------------
+# Windowing contract
+# ---------------------------------------------------------------------------
+
+
+def test_constant_series_opens_at_warmup_bound():
+    w = windows.detect(np.full(200, 3.5))
+    assert w.method == "ewma_plateau"
+    assert w.begin <= windows.HOLD  # no transient -> no warmup cut
+    assert w.end == w.T == 200
+
+
+def test_pure_transient_shorter_than_warmup_is_censored():
+    w = windows.detect(np.arange(2 * windows.HOLD - 1, dtype=float))
+    assert w.censored and w.begin == w.end == w.T
+    # censored windows still serialize and fall back to raw stats
+    stats = windows.windowed_stats(np.arange(5.0), w)
+    assert stats["stable"] == stats["raw"] and stats["shift"] == 0.0
+
+
+def test_nonfinite_series_is_censored_not_crashed():
+    w = windows.detect([1.0, np.nan] + [1.0] * 40)
+    assert w.censored
+
+
+def test_ramp_then_plateau_cuts_the_ramp():
+    rng = np.random.RandomState(0)
+    t = np.arange(400, dtype=np.float64)
+    x = np.minimum(t / 100.0, 1.0) * 10.0 + rng.randn(400) * 0.05
+    w = windows.detect(x)
+    assert w.method == "ewma_plateau"
+    assert 90 <= w.begin <= 160  # the ramp ends at t=100
+    raw_vs_stable = windows.windowed_stats(x, w)
+    assert raw_vs_stable["stable"] > raw_vs_stable["raw"]
+
+
+def test_window_invariant_enforced_at_construction():
+    with pytest.raises(ValueError, match="invariant"):
+        windows.Window(begin=5, end=3, T=10, method="ewma_plateau")
+    with pytest.raises(ValueError, match="invariant"):
+        windows.Window(begin=0, end=11, T=10, method="ewma_plateau")
+
+
+def test_cell_block_shape_and_shift_field():
+    spec = SweepSpec(config=SimConfig(m=M, N=256), workloads=_wl(),
+                     seeds=(0, 1), metrics="summary", do_warmup=False)
+    rows = run_sweep(spec).rows()
+    block = windows.cell_block(rows, dt_ms=50.0)
+    assert set(block) == {"window", "stable", "window_shift"}
+    win = block["window"]
+    assert 0 <= win["begin"] <= win["end"] <= win["T"] == T
+    assert win["end_ms"] == win["end"] * 50.0
+    assert isinstance(block["window_shift"]["mean_queue"], float)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: obs on/off, and q_mean across metrics modes
+# ---------------------------------------------------------------------------
+
+
+def _sweep_rows(metrics):
+    spec = SweepSpec(config=SimConfig(m=M, N=256), workloads=_wl(),
+                     seeds=(0,), metrics=metrics, do_warmup=False)
+    return run_sweep(spec).rows()
+
+
+def test_engine_bitwise_identical_with_recorder_on_and_off():
+    was = trace_lib.RECORDER.enabled
+    try:
+        trace_lib.RECORDER.enabled = True
+        (on,) = _sweep_rows("full")
+        trace_lib.RECORDER.enabled = False
+        (off,) = _sweep_rows("full")
+    finally:
+        trace_lib.RECORDER.enabled = was
+    assert np.array_equal(on.queue_timeline, off.queue_timeline)
+    assert np.array_equal(on.lat_pred, off.lat_pred)
+    assert np.array_equal(on.d_timeline, off.d_timeline)
+    assert np.array_equal(on.steered, off.steered)
+
+
+def test_summary_q_mean_matches_full_timeline_bitwise():
+    (full,) = _sweep_rows("full")
+    (summ,) = _sweep_rows("summary")
+    assert summ.q_mean_timeline is not None
+    # both sides reduce the same float32 timeline with jnp.mean
+    want = np.asarray(
+        windows.q_mean_series(full), np.float32)
+    got = np.asarray(summ.q_mean_timeline, np.float32)
+    assert np.array_equal(got, want)
+    # and the shared window detector sees the identical series
+    assert windows.detect(got) == windows.detect(want)
+
+
+# ---------------------------------------------------------------------------
+# repro-report round-trip and --check
+# ---------------------------------------------------------------------------
+
+
+def _emit_pair(tmp_path):
+    rec = trace_lib.RECORDER
+    rec.configure(path=tmp_path / "art.trace.jsonl", fresh=True,
+                  enabled=True)
+    with rec.span("bench/first_call", cat="bench"):
+        pass
+    with rec.span("sim/run", cat="execute") as sp:
+        sp["compiled"] = True
+    rec.write_chrome(tmp_path / "art.trace.json")
+    doc = {
+        "meta": {"jax_version": "0", "device_kind": "cpu"},
+        "cells": {"a": {
+            "window": {"begin": 2, "end": 38, "T": 40,
+                       "method": "ewma_plateau", "censored": False},
+            "stable": {"mean_queue": 1.0},
+            "window_shift": {"mean_queue": -0.1},
+        }},
+    }
+    (tmp_path / "art.json").write_text(json.dumps(doc))
+    return tmp_path
+
+
+def test_report_round_trips_artifact_and_trace(tmp_path, capsys):
+    _emit_pair(tmp_path)
+    assert report_main([str(tmp_path / "art.json")]) == 0
+    out = capsys.readouterr().out
+    assert "cells.a" in out and "ewma_plateau" in out
+    assert "first-call" in out
+
+
+def test_report_check_clean_and_detects_bad_window(tmp_path, capsys):
+    _emit_pair(tmp_path)
+    assert report_main(["--check", str(tmp_path)]) == 0
+    bad = {"window": {"begin": 9, "end": 3, "T": 40,
+                      "method": "ewma_plateau"}}
+    (tmp_path / "bad.json").write_text(json.dumps(bad))
+    assert report_main(["--check", str(tmp_path)]) == 1
+    assert "invariant" in capsys.readouterr().err
+
+
+def test_check_paths_flags_malformed_middle_line(tmp_path):
+    good = json.dumps({"name": "a", "cat": "c", "ph": "i", "ts": 0.0,
+                       "pid": 1, "tid": 1})
+    p = tmp_path / "x.trace.jsonl"
+    p.write_text("{not json\n" + good + "\n")
+    assert any("malformed" in m for m in check_paths([p]))
+
+
+# The hypothesis properties over arbitrary timelines (window invariant,
+# constant-load warmup bound) live in tests/test_properties.py — that
+# module already gates on the optional hypothesis dep, and importorskip
+# would skip THIS whole module, deterministic tests included.

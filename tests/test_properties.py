@@ -251,3 +251,40 @@ def test_wave_scan_parity_any_policy_middleware(policy, mw, n_groups,
     np.testing.assert_array_equal(a.arrivals, b.arrivals)
     np.testing.assert_array_equal(a.steered, b.steered)
     np.testing.assert_array_equal(a.cache_hits, b.cache_hits)
+
+
+# ---------------------------------------------------------------------------
+# Observability: the windowing contract (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    xs=st.lists(
+        st.floats(min_value=-1e6, max_value=1e6,
+                  allow_nan=False, allow_infinity=False),
+        min_size=0, max_size=120,
+    ),
+    hold=st.integers(2, 16),
+)
+@settings(max_examples=60, deadline=None)
+def test_window_invariant_for_arbitrary_series(xs, hold):
+    """0 <= begin <= end <= T for ANY finite timeline, and windowed
+    statistics never produce non-finite parity shifts."""
+    from repro.obs import windows
+
+    w = windows.detect(np.asarray(xs), hold=hold)
+    assert 0 <= w.begin <= w.end <= w.T == len(xs)
+    stats = windows.windowed_stats(np.asarray(xs), w)
+    assert np.isfinite(stats["shift"])
+
+
+@given(level=st.floats(-100.0, 100.0), n=st.integers(20, 200))
+@settings(max_examples=30, deadline=None)
+def test_constant_load_always_opens_within_hold(level, n):
+    """A constant-load trace has no transient: the stable window opens
+    within the hold bound and runs to the horizon."""
+    from repro.obs import windows
+
+    w = windows.detect(np.full(n, level))
+    assert w.method == "ewma_plateau" and w.begin <= windows.HOLD
+    assert w.end == w.T == n

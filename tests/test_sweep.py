@@ -18,6 +18,7 @@ import pytest
 
 from repro.core import (SimConfig, SweepSpec, make_workload, run_sweep,
                         simulate_sweep)
+from repro.core import sim
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -173,6 +174,9 @@ def test_controller_axis_matches_single_controller_runs():
 def test_simulate_sweep_shim_warns_and_matches_run_sweep():
     cfg = SimConfig(m=M)
     wl = _wl()
+    # the warning fires once per process: reset the guard so this test
+    # observes it regardless of execution order
+    sim._SWEEP_DEPRECATION_WARNED[0] = False
     with pytest.warns(DeprecationWarning, match="SweepSpec"):
         legacy = simulate_sweep(cfg, wl, seeds=(0, 1), do_warmup=False,
                                 metrics="summary")
@@ -188,6 +192,7 @@ def test_simulate_sweep_shim_warns_and_matches_run_sweep():
 def test_simulate_sweep_shim_multi_workload_full_metrics():
     cfg = SimConfig(m=M)
     wls = [_wl(), _wl("light")]
+    sim._SWEEP_DEPRECATION_WARNED[0] = False
     with pytest.warns(DeprecationWarning):
         legacy = simulate_sweep(
             cfg, wls, policies=("midas", "round_robin"), seeds=(0,),
@@ -196,6 +201,25 @@ def test_simulate_sweep_shim_multi_workload_full_metrics():
     assert set(legacy["midas"]) == {"bursty", "light"}
     row = legacy["midas"]["bursty"][0]
     assert row.queue_timeline.shape == (T, M)
+
+
+def test_simulate_sweep_deprecation_warns_exactly_once_per_process():
+    """The module-level guard: repeated shim calls nag exactly once."""
+    import warnings
+
+    cfg = SimConfig(m=M)
+    wl = _wl()
+    sim._SWEEP_DEPRECATION_WARNED[0] = False
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for _ in range(3):
+            simulate_sweep(cfg, wl, seeds=(0,), do_warmup=False,
+                           metrics="summary")
+    dep = [w for w in caught
+           if issubclass(w.category, DeprecationWarning)
+           and "SweepSpec" in str(w.message)]
+    assert len(dep) == 1
+    assert sim._SWEEP_DEPRECATION_WARNED[0]
 
 
 # ---------------------------------------------------------------------------
