@@ -1,0 +1,296 @@
+"""E13 — the red-team matrix: adversarial cell × controller × ±guard.
+
+E12 measured single faults against a survivable workload.  E13 is the
+hostile version: every cell is an input DESIGNED to break the control
+plane — the worst synthesized adversarial traffic found by
+``run_hillclimb.py advtraffic`` (committed as
+``tests/data/redteam_worst.npz``, replayed through ``trace_replay``)
+plus three compound fault programs built from ``repro.core.faults``
+combinators (a proxy crash DURING a checkpoint storm, a rolling
+brownout marching across three servers, and a cascade where a gossip
+partition fires at the crash's *detection* time).  Each cell runs every
+controller twice, with and without the oscillation guard
+(``SimConfig.guard``), so the matrix answers both red-team questions:
+how badly does each control law limit-cycle under resonant input, and
+how much of that does the guard's circuit breaker buy back.
+
+Per (cell, controller, ±guard), averaged over seeds:
+
+  * ``oscillation_per_min`` / ``settle_ms`` / ``knob_churn`` — the E4
+    trajectory stats on the d/Δl/f_max timelines (the limit cycle);
+  * the PR 8 ``window`` / ``stable`` / ``window_shift`` block;
+  * ``peak_mean_queue_during_fault`` and ``recovery_ms`` vs the cell's
+    own zero-fault band (fault-program cells only).
+
+The headline contract (tested): on the worst synthesized trace the
+guarded hysteresis controller oscillates strictly less than the
+unguarded one.  Emits ``experiments/sim/redteam_matrix.json``
+incrementally; ``--only`` subsets the adversarial cells (the
+``none`` baseline is always kept: recovery bands are measured
+against it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import (Artifact, BenchOpts, emit, parse_opts, timed)
+from repro.core import (
+    FaultEvent,
+    SimConfig,
+    SweepSpec,
+    make_workload,
+    run_sweep,
+)
+from repro.core import controllers as ctrl_lib
+from repro.core import faults as faults_lib
+from repro.obs import windows
+
+T = 1200           # 60 s at dt=50 ms: room for ~10 adversarial cycles
+M = 8
+N = 1024
+SEEDS = (0, 1)
+POLICY = "midas"
+GOSSIP_MS = 100.0
+HOLD = 20          # ticks the mean queue must hold inside the band
+CONTROLLERS = ("hysteresis", "aimd")
+
+FIXTURE = (
+    Path(__file__).resolve().parents[1]
+    / "tests"
+    / "data"
+    / "redteam_worst.npz"
+)
+
+# The three compound fault programs (repro.core.faults combinators).
+# Timings leave ~20 s of pre-fault baseline and ~20 s of recovery tail.
+PROGRAMS = {
+    "crash_during_storm": faults_lib.overlap(
+        FaultEvent("ckpt_storm_fleet", t0=400, duration=300, magnitude=0.6),
+        FaultEvent("proxy_crash", t0=450, duration=200, target=0),
+    ),
+    "rolling_brownout": faults_lib.rolling(
+        "server_brownout",
+        targets=(1, 2, 3),
+        t0=400,
+        duration=150,
+        stagger=100,
+        magnitude=0.3,
+    ),
+    "cascade_partition": (
+        faults_lib.CascadeEvent(
+            trigger=FaultEvent("proxy_crash", t0=400, duration=250, target=0),
+            effect=FaultEvent(
+                "gossip_partition", t0=0, duration=200, target=-1
+            ),
+            offset=20,
+        ),
+    ),
+}
+
+# every adversarial cell; "none" is the zero-fault recovery baseline
+CELL_NAMES = ("none", "adv_trace") + tuple(PROGRAMS)
+
+
+def _workload(cell: str):
+    if cell == "adv_trace":
+        # the committed worst case from the advtraffic search, replayed
+        # without looping so the grid matches the synthesized one
+        # tick-for-tick (multiset-exact; see workloads.adversary)
+        return make_workload(
+            "trace_replay", T=T, m=M, seed=0, N=N, trace=FIXTURE, loop=False
+        )
+    return make_workload("bursty", T=T, m=M, seed=0, N=N)
+
+
+def _cfg(cell: str, ctrl: str, guard: bool) -> SimConfig:
+    return SimConfig(
+        m=M,
+        N=N,
+        policy=POLICY,
+        controller=ctrl,
+        guard=guard,
+        middleware=("fleet_cache",),
+        gossip_ms=GOSSIP_MS,
+        faults=PROGRAMS.get(cell, ()),
+    )
+
+
+def _cell_spec(cell: str):
+    """JSON-able description of what the cell injects (provenance)."""
+    if cell == "adv_trace":
+        return {"trace": FIXTURE.name}
+    out = []
+    for e in PROGRAMS.get(cell, ()):
+        if isinstance(e, faults_lib.CascadeEvent):
+            d = dataclasses.asdict(e.trigger)
+            d["cascade_effect"] = dataclasses.asdict(e.effect)
+            d["cascade_offset"] = e.offset
+        else:
+            d = dataclasses.asdict(e)
+        out.append(d)
+    return out
+
+
+def _active_window(cfg: SimConfig) -> tuple:
+    """[first, last] active tick of the compiled (cascade-resolved)
+    schedule; (None, None) when the cell injects nothing."""
+    fc = faults_lib.compile_faults(cfg, T)
+    if fc is None or not fc.active.any():
+        return None, None
+    idx = np.flatnonzero(fc.active)
+    return int(idx[0]), int(idx[-1])
+
+
+def _recovery_ms(
+    mean_q: np.ndarray, t_clear: int, band: float, dt_ms: float
+) -> float:
+    """ms from program clearance until the mean queue stays <= band for
+    HOLD consecutive ticks; censored at the remaining horizon."""
+    tail = mean_q[t_clear:]
+    run = 0
+    for i, good in enumerate(tail <= band):
+        run = run + 1 if good else 0
+        if run >= HOLD:
+            return float((i - HOLD + 1) * dt_ms)
+    return float(len(tail) * dt_ms)  # censored: never re-entered
+
+
+def _traj(row, dt_ms: float) -> dict:
+    return ctrl_lib.trajectory_stats(
+        row.d_timeline,
+        row.delta_l_timeline,
+        row.f_max_timeline,
+        row.pressure,
+        dt_ms,
+    )
+
+
+def run(opts: Optional[BenchOpts] = None) -> None:
+    opts = opts or BenchOpts()
+    cells = opts.pick(CELL_NAMES, "cells")
+    if "none" not in cells:
+        # recovery bands are measured against the zero-fault cells
+        cells = ("none",) + cells
+    seeds = opts.seeds(SEEDS)
+    art = Artifact("redteam_matrix.json", opts.out)
+
+    doc = {
+        "T": T,
+        "m": M,
+        "N": N,
+        "seeds": list(seeds),
+        "policy": POLICY,
+        "gossip_ms": GOSSIP_MS,
+        "hold": HOLD,
+        "devices": opts.devices,
+        "controllers": list(CONTROLLERS),
+        "cells_spec": {c: _cell_spec(c) for c in cells},
+        "cells": {},
+    }
+
+    base_q: dict = {}
+    for cell in cells:
+        wl = _workload(cell)
+        doc["cells"][cell] = {}
+        t0, t1 = _active_window(_cfg(cell, CONTROLLERS[0], False))
+        for guard in (False, True):
+            cfg = _cfg(cell, CONTROLLERS[0], guard)
+            spec = SweepSpec(
+                config=cfg,
+                workloads=(wl,),
+                policies=(POLICY,),
+                controllers=CONTROLLERS,
+                seeds=seeds,
+                metrics="summary",
+                devices=opts.devices,
+                do_warmup=True,
+            )
+            label = f"redteam/{cell}/{'guard' if guard else 'raw'}"
+            res, us = timed(run_sweep, spec, label=label)
+            for ctrl in CONTROLLERS:
+                key = f"{ctrl}{'+guard' if guard else ''}"
+                rows = res.rows(policy=POLICY, controller=ctrl)
+                mean_q = np.stack(
+                    [np.asarray(r.q_mean_timeline) for r in rows]
+                )
+                stats = [_traj(r, cfg.dt_ms) for r in rows]
+                mq = [r.mean_queue() for r in rows]
+                mxq = [r.max_queue() for r in rows]
+                wcq = [r.worst_case_queue() for r in rows]
+                osc = [s["oscillation_per_min"] for s in stats]
+                settle = [s["settle_ms"] for s in stats]
+                churn = [s["knob_churn"] for s in stats]
+                cell_doc = windows.cell_block(rows, dt_ms=cfg.dt_ms)
+                cell_doc["mean_queue"] = round(float(np.mean(mq)), 3)
+                cell_doc["max_queue"] = round(float(max(mxq)), 2)
+                cell_doc["worst_case_queue"] = round(float(np.mean(wcq)), 2)
+                cell_doc["oscillation_per_min"] = round(
+                    float(np.mean(osc)), 2
+                )
+                cell_doc["settle_ms"] = round(float(np.mean(settle)), 1)
+                cell_doc["knob_churn"] = round(float(np.mean(churn)), 3)
+                if cell == "none":
+                    mu = float(mean_q.mean())
+                    base_q[key] = {
+                        "mean": mu,
+                        "band": max(1.5 * mu, mu + 0.5),
+                    }
+                elif t0 is not None:
+                    band = base_q[key]["band"]
+                    peak = float(mean_q[:, t0 : t1 + 1].max())
+                    cell_doc["peak_mean_queue_during_fault"] = round(peak, 2)
+                    rec = [
+                        _recovery_ms(mean_q[s], t1 + 1, band, cfg.dt_ms)
+                        for s in range(len(seeds))
+                    ]
+                    cen = max(rec) >= (T - (t1 + 1)) * cfg.dt_ms
+                    cell_doc["recovery_ms"] = round(float(np.mean(rec)), 1)
+                    cell_doc["recovery_censored"] = bool(cen)
+                doc["cells"][cell][key] = cell_doc
+            detail = f"controllers={len(CONTROLLERS)};seeds={len(seeds)}"
+            emit(label, us, detail)
+        # incremental artifact: a timeout still leaves valid JSON
+        art.write(doc)
+
+    # headline: the guard's circuit breaker suppresses the limit cycle
+    # the synthesized worst case induces (the claim E13 exists to check)
+    if "adv_trace" not in doc["cells"]:
+        return
+    raw = doc["cells"]["adv_trace"]["hysteresis"]
+    grd = doc["cells"]["adv_trace"]["hysteresis+guard"]
+    doc["headline"] = {
+        "adv_osc_per_min_unguarded": raw["oscillation_per_min"],
+        "adv_osc_per_min_guarded": grd["oscillation_per_min"],
+        "guard_suppresses_limit_cycle": bool(
+            grd["oscillation_per_min"] < raw["oscillation_per_min"]
+        ),
+        "adv_peak_queue_unguarded": raw["max_queue"],
+        "adv_peak_queue_guarded": grd["max_queue"],
+    }
+    art.write(doc)
+    emit(
+        "redteam/headline_adv_oscillation_per_min",
+        0.0,
+        f"hysteresis={raw['oscillation_per_min']};"
+        f"hysteresis+guard={grd['oscillation_per_min']};"
+        f"guard_wins={doc['headline']['guard_suppresses_limit_cycle']}",
+    )
+
+
+def main(argv=None) -> None:
+    run(
+        parse_opts(
+            argv,
+            prog="benchmarks.redteam",
+            description=__doc__.splitlines()[0],
+            axis="cells",
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ SECTIONS = {
     "engine": "benchmarks.engine_perf",        # E10 (compile + ticks/sec)
     "shard": "benchmarks.shard_sweep",         # E11 (sharded 10^6-key sweep)
     "resilience": "benchmarks.resilience",     # E12 (fault x policy x ctrl)
+    "redteam": "benchmarks.redteam",           # E13 (adversarial x ±guard)
     "serving": "benchmarks.serving",
     "kernels": "benchmarks.kernels_bench",
     "ablations": "benchmarks.ablations",       # §IV-E stability guards

@@ -84,6 +84,13 @@ from repro.core.controllers.base import (
     warmup_targets,
     wrap_ablations,
 )
+from repro.core.controllers.guard import (
+    HOLD_WINDOWS,
+    TRIP_FLIPS,
+    Guarded,
+    GuardInner,
+    wrap_guard,
+)
 
 # Built-in controllers self-register on import.
 from repro.core.controllers import (  # noqa: F401, E402
@@ -109,6 +116,9 @@ __all__ = [
     "EPS",
     "F_CAP",
     "F_MAX_HIGH",
+    "Guarded",
+    "GuardInner",
+    "HOLD_WINDOWS",
     "KNOB_SPECS",
     "KnobSpec",
     "Knobs",
@@ -116,6 +126,7 @@ __all__ = [
     "Signals",
     "T_FAST_MS",
     "T_SLOW_MS",
+    "TRIP_FLIPS",
     "TTL_SCALE_MAX",
     "TTL_SCALE_MIN",
     "W_WINDOW_MS",
@@ -138,4 +149,5 @@ __all__ = [
     "unregister",
     "warmup_targets",
     "wrap_ablations",
+    "wrap_guard",
 ]

@@ -1,0 +1,154 @@
+"""Oscillation guard: a registry-level limit-cycle circuit breaker.
+
+Adversarial traffic tuned to the controllers' own cadences (the
+``adversarial`` workload family) can drive any reactive control law
+into a sustained limit cycle — d flapping between bounds in lockstep
+with the attacker's burst period.  The guard is the defense: a
+decorator in the same shape as :class:`~.base.Ablated` /
+:func:`~.base.wrap_ablations` that *watches the emitted d knob* and
+trips a freeze when it flips too often, trading routing aggressiveness
+for stability instead of thrashing.
+
+State machine (measured as E13's guarded rows):
+
+* **watch** — every fast tick the guard counts flips of the stored
+  ``d`` knob since the last slow tick.  The wrapped controller's
+  dynamics run untouched.
+* **trip** — at each slow tick (T_slow cadence, the loop the paper says
+  must not oscillate) a window with ``>= TRIP_FLIPS`` flips trips the
+  breaker: the guard records the current ``d`` / ``f_max`` as holds and
+  freezes for ``HOLD_WINDOWS`` slow windows.
+* **frozen** — while frozen, the *stored* knobs are overridden each
+  control tick: ``d`` pinned at the hold, the hysteresis band widened
+  to the top of the ``delta_l`` spec (steer only on large imbalance),
+  ``f_max`` pinned.  Overriding stored knobs — not just the emitted
+  view — matters twice: consumers, ``TickOut``, and the E4 oscillation
+  metric all read them, and the wrapped controller's next step departs
+  from the held point, so the freeze really interrupts the cycle.
+* **release** — the freeze counts down one per slow window; a calm
+  window (flip count under the trip) lets it expire, a hostile one
+  re-trips it.
+
+``wrap_guard(ctrl, False)`` returns ``ctrl`` unchanged — the default
+``SimConfig(guard=False)`` path is the identically-untouched engine
+(golden contract).  Composition order in the engine is
+``wrap_guard(wrap_ablations(ctrl, ablate), guard)``: the guard sees the
+same masked signals the ablated controller does.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.controllers import base
+from repro.core.controllers.base import (
+    ControlState,
+    Controller,
+    Knobs,
+    Signals,
+)
+
+# d flips within one T_slow window that trip the breaker.  The paper's
+# hysteresis counters allow at most one escalation per K_UP and one
+# release per K_DOWN fast ticks; a well-behaved run flips a handful of
+# times per window, a resonant limit cycle tens of times.
+TRIP_FLIPS = 8
+# slow windows one trip freezes (re-tripped while the attack persists)
+HOLD_WINDOWS = 2
+
+
+class GuardInner(NamedTuple):
+    """Guard-owned carry wrapped around the inner controller's pytree."""
+
+    wrapped: Any             # the decorated controller's own inner
+    flips: jnp.ndarray       # () int32 d flips since the last slow tick
+    last_d: jnp.ndarray      # () int32 stored d at the last control tick
+    frozen: jnp.ndarray      # () int32 freeze windows remaining
+    hold_d: jnp.ndarray      # () int32 d pinned while frozen
+    hold_f: jnp.ndarray      # () float32 f_max pinned while frozen
+
+
+class Guarded(Controller):
+    """Decorator freezing d / widening the band on detected thrash."""
+
+    def __init__(self, inner: Controller):
+        self.inner = inner
+        self.name = f"{inner.name}+guard"
+
+    def init_inner(self, cfg) -> GuardInner:
+        return GuardInner(
+            wrapped=self.inner.init_inner(cfg),
+            flips=jnp.zeros((), jnp.int32),
+            last_d=jnp.asarray(base.D_INIT, jnp.int32),
+            frozen=jnp.zeros((), jnp.int32),
+            hold_d=jnp.asarray(base.D_INIT, jnp.int32),
+            hold_f=jnp.asarray(base.F_CAP, jnp.float32),
+        )
+
+    def init(self, cfg, targets: Tuple[float, float]) -> ControlState:
+        state = self.inner.init(cfg, targets)
+        return state._replace(
+            inner=self.init_inner(cfg)._replace(wrapped=state.inner)
+        )
+
+    def _freeze(self, knobs: Knobs, gi: GuardInner) -> Knobs:
+        frz = gi.frozen > 0
+        return knobs._replace(
+            d=jnp.where(frz, gi.hold_d, knobs.d).astype(jnp.int32),
+            delta_l=jnp.where(
+                frz,
+                jnp.asarray(base.DELTA_L_MAX, jnp.float32),
+                knobs.delta_l,
+            ),
+            f_max=jnp.where(frz, gi.hold_f, knobs.f_max),
+        )
+
+    def fast(self, state: ControlState, sig: Signals):
+        gi = state.inner
+        istate, _ = self.inner.fast(state._replace(inner=gi.wrapped), sig)
+        knobs = self._freeze(istate.knobs, gi)
+        flips = gi.flips + (knobs.d != gi.last_d).astype(jnp.int32)
+        state = istate._replace(
+            knobs=knobs,
+            inner=gi._replace(
+                wrapped=istate.inner, flips=flips, last_d=knobs.d
+            ),
+        )
+        return state, self.view(state)
+
+    def slow(self, state: ControlState, sig: Signals):
+        gi = state.inner
+        istate, _ = self.inner.slow(state._replace(inner=gi.wrapped), sig)
+        trip = gi.flips >= TRIP_FLIPS
+        newly = trip & (gi.frozen <= 0)
+        gi = gi._replace(
+            wrapped=istate.inner,
+            flips=jnp.zeros((), jnp.int32),
+            frozen=jnp.where(
+                trip,
+                jnp.asarray(HOLD_WINDOWS, jnp.int32),
+                jnp.maximum(gi.frozen - 1, 0),
+            ).astype(jnp.int32),
+            hold_d=jnp.where(
+                newly, istate.knobs.d, gi.hold_d
+            ).astype(jnp.int32),
+            hold_f=jnp.where(
+                newly, istate.knobs.f_max, gi.hold_f
+            ).astype(jnp.float32),
+        )
+        knobs = self._freeze(istate.knobs, gi)
+        state = istate._replace(knobs=knobs, inner=gi._replace(last_d=knobs.d))
+        return state, self.view(state)
+
+    def view(self, state: ControlState) -> Knobs:
+        # stored knobs already carry the freeze; delegate so ablation
+        # masks compose (the guard wraps the Ablated decorator)
+        return self.inner.view(state._replace(inner=state.inner.wrapped))
+
+
+def wrap_guard(ctrl: Controller, enabled: bool) -> Controller:
+    """``ctrl`` unchanged when disabled (the golden default), else the
+    :class:`Guarded` oscillation breaker around it."""
+    return Guarded(ctrl) if enabled else ctrl

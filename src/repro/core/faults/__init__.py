@@ -31,3 +31,11 @@ from repro.core.faults.base import (  # noqa: F401
     validate_events,
 )
 from repro.core.faults.events import storm_from_pool  # noqa: F401
+from repro.core.faults.programs import (  # noqa: F401
+    CascadeEvent,
+    detection_tick,
+    overlap,
+    resolve,
+    rolling,
+    sequence,
+)

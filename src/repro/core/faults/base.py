@@ -140,29 +140,51 @@ def get(kind: str) -> FaultSpec:
 
 
 def normalize(faults) -> Tuple[FaultEvent, ...]:
-    """Canonical event tuple: names become default-parameter events."""
+    """Canonical event tuple: names become default-parameter events.
+
+    Cascade entries (:class:`programs.CascadeEvent`) pass through — they
+    stay unresolved until the compiler knows ``dt_ms`` and the horizon
+    (detection time is a wall-clock property, not a config one).
+    """
     if not faults:
         return ()
+    from repro.core.faults import programs  # lazy: programs imports base
+
     out = []
     for f in faults:
         if isinstance(f, str):
             f = FaultEvent(kind=f)
-        elif not isinstance(f, FaultEvent):
+        elif not isinstance(f, (FaultEvent, programs.CascadeEvent)):
             raise ValueError(
-                f"SimConfig.faults entries must be fault names or "
-                f"FaultEvent, got {f!r}"
+                f"SimConfig.faults entries must be fault names, "
+                f"FaultEvent, or CascadeEvent, got {f!r}"
             )
         out.append(f)
     return tuple(out)
 
 
+def _validate_one(ev: FaultEvent, m: int, P: int) -> None:
+    get_class(ev.kind)  # raises with alternatives on unknown kind
+    if ev.t0 < 0:
+        raise ValueError(f"fault t0 must be >= 0, got {ev!r}")
+    get(ev.kind).validate(ev, m, P)
+
+
 def validate_events(faults, m: int, P: int) -> None:
     """Eager list-alternatives validation (SimConfig.__post_init__)."""
+    from repro.core.faults import programs  # lazy: programs imports base
+
     for ev in normalize(faults):
-        get_class(ev.kind)  # raises with alternatives on unknown kind
-        if ev.t0 < 0:
-            raise ValueError(f"fault t0 must be >= 0, got {ev!r}")
-        get(ev.kind).validate(ev, m, P)
+        if isinstance(ev, programs.CascadeEvent):
+            if ev.offset < 0:
+                raise ValueError(f"cascade offset must be >= 0, got {ev!r}")
+            _validate_one(ev.trigger, m, P)
+            # the effect's t0 is a placeholder resolve() overwrites, so
+            # only its kind-specific parameters are checked here
+            get_class(ev.effect.kind)
+            get(ev.effect.kind).validate(ev.effect, m, P)
+        else:
+            _validate_one(ev, m, P)
 
 
 def parse_fault(spec: str) -> FaultEvent:
@@ -285,7 +307,12 @@ class FaultTickInfo(NamedTuple):
 
 @functools.lru_cache(maxsize=None)
 def _compile_cached(cfg, T: int) -> CompiledFaults:
-    events = normalize(cfg.faults)
+    from repro.core.faults import programs  # lazy: programs imports base
+
+    # cascade entries resolve HERE: detection time needs dt_ms + horizon
+    events = programs.resolve(
+        normalize(cfg.faults), dt_ms=cfg.dt_ms, T=T, m=cfg.m, P=cfg.P
+    )
     sched = Schedule(T, cfg.m, cfg.P)
     for ev in events:
         get(ev.kind).apply(ev, sched)

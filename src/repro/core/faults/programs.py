@@ -1,0 +1,186 @@
+"""Compound fault programs: overlap, sequence, and cascade triggers.
+
+PR 6's fault registry injects *single* events; real outages compound —
+a proxy crashes DURING a checkpoint storm, brownouts roll across the
+server fleet one disk at a time, a partition follows a crash because
+the gossip fabric reacts to the membership flap.  This module composes
+:class:`~repro.core.faults.base.FaultEvent` values into *programs* that
+compile into the exact same host-side :class:`Schedule` / ``FaultXs``
+machinery, so compound failures ride the scan xs with zero new engine
+surface and the zero-cost-when-off golden contract intact.
+
+Three composition forms:
+
+* :func:`overlap` — events whose windows all intersect (the compound
+  stress is the *simultaneity*); validated eagerly so a typo'd window
+  fails at construction, not silently as two disjoint single faults.
+* :func:`sequence` — events re-timed to fire back-to-back with a
+  ``stagger`` (rolling per-server brownouts); a zero-length sequence is
+  ``()``, the identically-untouched zero-fault engine.
+* :class:`CascadeEvent` — event B fires at event A's *detection* time
+  plus an offset.  Detection time depends on ``dt_ms`` (the heartbeat
+  timeout is a wall-clock constant), so cascades resolve inside the
+  fault compiler (``base._compile_cached``), where the horizon and the
+  config are both known — :func:`resolve` is the host-side expansion.
+
+Because every registered spec's ``apply`` writes monotonically into the
+shared schedule (membership only clears, service scales multiply,
+partitions only set, storm intensity maxes), a program's compiled
+schedule equals the element-wise composition of its single-event
+schedules — the property ``tests/test_core_faults.py`` pins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.faults.base import (
+    FaultEvent,
+    Schedule,
+    detect_available,
+    detect_ticks,
+    get,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeEvent:
+    """Event ``effect`` fires at ``trigger``'s detection time + offset.
+
+    Hashable (rides ``SimConfig.faults`` next to plain events).  The
+    ``effect``'s own ``t0`` is a placeholder — :func:`resolve` replaces
+    it with the trigger's detection tick plus ``offset`` (in ticks).
+    The trigger itself is applied too: a cascade is "A happens, and B
+    follows once the system *notices* A".
+    """
+
+    trigger: FaultEvent
+    effect: FaultEvent
+    offset: int = 0
+
+
+def _nominal_window(ev: FaultEvent) -> Tuple[int, float]:
+    """[t0, t1) before horizon clipping; open-ended when duration<=0."""
+    t0 = max(int(ev.t0), 0)
+    t1 = float("inf") if ev.duration <= 0 else t0 + int(ev.duration)
+    return t0, t1
+
+
+def overlap(*events: FaultEvent) -> Tuple[FaultEvent, ...]:
+    """Events that must be simultaneously active at some tick.
+
+    Validates that every pair of windows intersects — the point of an
+    overlap program is the compound stress, and two disjoint windows
+    silently degenerating into independent single faults is the bug
+    this check exists to catch.
+    """
+    evs = tuple(events)
+    for i, a in enumerate(evs):
+        for b in evs[i + 1 :]:
+            a0, a1 = _nominal_window(a)
+            b0, b1 = _nominal_window(b)
+            if max(a0, b0) >= min(a1, b1):
+                raise ValueError(
+                    f"overlap: windows of {a!r} and {b!r} do not "
+                    f"intersect; use sequence() for disjoint events"
+                )
+    return evs
+
+
+def sequence(
+    *events: FaultEvent, t0: int = None, stagger: int = None
+) -> Tuple[FaultEvent, ...]:
+    """Events re-timed to roll one after another.
+
+    With ``t0``/``stagger`` given, event ``i`` starts at
+    ``t0 + i * stagger`` (its duration is kept); otherwise the events'
+    own timings are preserved.  ``sequence()`` is ``()`` — a zero-length
+    program is the zero-fault engine (golden parity, tested).
+    """
+    evs = tuple(events)
+    if not evs:
+        return ()
+    if stagger is not None and stagger < 0:
+        raise ValueError(f"sequence: stagger must be >= 0, got {stagger}")
+    if t0 is None and stagger is None:
+        return evs
+    start = evs[0].t0 if t0 is None else int(t0)
+    step = stagger if stagger is not None else 0
+    return tuple(
+        dataclasses.replace(ev, t0=start + i * step)
+        for i, ev in enumerate(evs)
+    )
+
+
+def rolling(
+    kind: str,
+    *,
+    targets: Tuple[int, ...],
+    t0: int,
+    duration: int,
+    stagger: int,
+    magnitude: float = 0.5,
+) -> Tuple[FaultEvent, ...]:
+    """Convenience: the same fault rolling across ``targets`` — e.g.
+    per-server brownouts marching down the fleet one disk at a time."""
+    return sequence(
+        *(
+            FaultEvent(
+                kind, t0=0, duration=duration, target=t, magnitude=magnitude
+            )
+            for t in targets
+        ),
+        t0=t0,
+        stagger=stagger,
+    )
+
+
+def detection_tick(
+    ev: FaultEvent, *, dt_ms: float, T: int, m: int, P: int
+) -> int:
+    """First tick the fault layer *notices* ``ev`` (host-side).
+
+    Compiles the event alone and finds the first tick where detected
+    membership drops (membership faults surface only after the
+    heartbeat timeout — for a crash at ``t0`` that is
+    ``t0 + detect_ticks(dt_ms)``).  Faults that never change detected
+    membership (brownouts, partitions, storms) are "detected" at their
+    first active tick; an event that never fires inside the horizon
+    returns ``T``.
+    """
+    sched = Schedule(T, m, P)
+    get(ev.kind).apply(ev, sched)
+    detected = detect_available(sched.member, detect_ticks(dt_ms))
+    lost = np.flatnonzero((~detected).any(axis=1))
+    if lost.size:
+        return int(lost[0])
+    active = np.flatnonzero(sched.active)
+    return int(active[0]) if active.size else T
+
+
+def resolve(
+    events, *, dt_ms: float, T: int, m: int, P: int
+) -> Tuple[FaultEvent, ...]:
+    """Expand cascade entries into plain events (fault-compiler hook).
+
+    Each :class:`CascadeEvent` becomes its trigger plus its effect
+    re-timed to ``detection_tick(trigger) + offset``; plain events pass
+    through untouched.  The resolved effect's window is clipped by the
+    horizon like any other event's (a trigger never detected inside the
+    horizon pushes the effect past ``T``, so it never fires).
+    """
+    out = []
+    for ev in events:
+        if isinstance(ev, CascadeEvent):
+            t_fire = (
+                detection_tick(ev.trigger, dt_ms=dt_ms, T=T, m=m, P=P)
+                + int(ev.offset)
+            )
+            out.append(ev.trigger)
+            out.append(dataclasses.replace(ev.effect, t0=t_fire))
+        else:
+            out.append(ev)
+    return tuple(out)

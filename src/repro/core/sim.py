@@ -87,6 +87,10 @@ class SimConfig:
     controller: str = "hysteresis"
     consensus: str = "mean"  # mean | median | max (fleet view reducer)
     ablate: str = ""  # comma-joined subset of controllers.ABLATIONS
+    # oscillation guard (controllers.guard): wrap the controller in the
+    # limit-cycle circuit breaker.  False (default) is the identically-
+    # untouched engine (golden contract).
+    guard: bool = False
     # fault injection (repro.core.faults): tuple of registered fault
     # names and/or FaultEvent instances, compiled host-side into
     # time-indexed schedules riding the scan xs.  None and () are both
@@ -122,6 +126,10 @@ class SimConfig:
             telemetry.CONSENSUS_REDUCERS,
         )
         ctrl_lib.parse_ablations(self.ablate)  # raises on unknown tokens
+        if not isinstance(self.guard, bool):
+            raise ValueError(
+                f"SimConfig.guard must be a bool, got {self.guard!r}"
+            )
         registry_lib.validate_choice(
             self.cache_mode, "cache_mode", cache_lib.MODES
         )
@@ -476,8 +484,10 @@ def _middlewares(cfg: SimConfig) -> Tuple[mw_lib.Middleware, ...]:
 
 def _controller(cfg: SimConfig) -> ctrl_lib.Controller:
     """The configured controller, with the §IV-E ablation decorators
-    (``cfg.ablate``) wrapped around its emitted knob view."""
-    return ctrl_lib.wrap_ablations(ctrl_lib.get(cfg.controller), cfg.ablate)
+    (``cfg.ablate``) wrapped around its emitted knob view and the
+    oscillation guard (``cfg.guard``) as the outermost decorator."""
+    ctrl = ctrl_lib.wrap_ablations(ctrl_lib.get(cfg.controller), cfg.ablate)
+    return ctrl_lib.wrap_guard(ctrl, cfg.guard)
 
 
 def _wave_split(cfg: SimConfig, x):

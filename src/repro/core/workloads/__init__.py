@@ -10,6 +10,7 @@ names raise a ``ValueError`` listing every alternative.  The modules:
 ``combinators``  mix / concat / scale_rate / shift_hotset on realized grids
 ``scenarios``    job_startup, rename_storm, flash_crowd, multi_tenant
 ``trace``        trace replay from recorded (t_ms, key, is_write) ``.npz``
+``adversary``    parametric controller-adversarial burst trains (red team)
 
 See ``base``'s docstring for a complete third-party registration (~10
 lines) and DESIGN.md §7 for the architecture.
@@ -37,11 +38,19 @@ from repro.core.workloads.combinators import (
 )
 
 # Built-in generators and scenarios self-register on import.
+from repro.core.workloads.adversary import (
+    AdversaryParams,
+    random_params,
+    perturb,
+    save_trace,
+    to_events,
+)
 from repro.core.workloads.fig2 import WORKLOADS
 from repro.core.workloads.scenarios import SCENARIOS
 from repro.core.workloads.trace import load_trace, rebucket
 
 __all__ = [
+    "AdversaryParams",
     "SCENARIOS",
     "WORKLOADS",
     "Workload",
@@ -55,11 +64,15 @@ __all__ = [
     "load_trace",
     "make_workload",
     "mix",
+    "perturb",
+    "random_params",
     "rebucket",
     "register",
     "sample_keys",
+    "save_trace",
     "scale_rate",
     "shift_hotset",
+    "to_events",
     "unregister",
     "zipf_cdf",
 ]

@@ -363,6 +363,112 @@ def test_unknown_ablation_still_rejected():
         ctrl_lib.parse_ablations("no_cache")
 
 
+# ---------------------------------------------------------------------------
+# Compound fault programs: overlap, sequence, cascade (PR 9)
+# ---------------------------------------------------------------------------
+
+
+def _compiled(events, T=160, **kw):
+    return faults.compile_faults(_cfg(faults=tuple(events), **kw), T)
+
+
+def test_overlap_requires_intersecting_windows():
+    a = FaultEvent("proxy_crash", t0=20, duration=30, target=0)
+    b = FaultEvent("ckpt_storm_fleet", t0=40, duration=40, magnitude=0.5)
+    assert faults.overlap(a, b) == (a, b)
+    c = FaultEvent("server_brownout", t0=100, duration=20, target=1,
+                   magnitude=0.5)
+    with pytest.raises(ValueError, match="sequence"):
+        faults.overlap(a, c)
+
+
+def test_program_schedule_is_elementwise_composition():
+    """A compound program's compiled schedule equals the element-wise
+    composition of its single-event schedules: membership ANDs, service
+    scales multiply, partitions OR, storm intensities max, active ORs —
+    the monotonic-apply property programs.py documents."""
+    events = faults.overlap(
+        FaultEvent("ckpt_storm_fleet", t0=30, duration=60, magnitude=0.5),
+        FaultEvent("proxy_crash", t0=40, duration=40, target=0),
+        FaultEvent("server_brownout", t0=35, duration=50, target=2,
+                   magnitude=0.3),
+        FaultEvent("gossip_partition", t0=30, duration=30, target=0),
+    )
+    prog = _compiled(events, P=4)
+    singles = [_compiled((e,), P=4) for e in events]
+    np.testing.assert_array_equal(
+        prog.member, np.logical_and.reduce([s.member for s in singles]))
+    np.testing.assert_allclose(
+        prog.service_scale,
+        np.prod([s.service_scale for s in singles], axis=0), rtol=1e-6)
+    np.testing.assert_array_equal(
+        prog.partition,
+        np.logical_or.reduce([s.partition for s in singles]))
+    np.testing.assert_allclose(
+        prog.storm, np.max([s.storm for s in singles], axis=0))
+    np.testing.assert_array_equal(
+        prog.active, np.logical_or.reduce([s.active for s in singles]))
+
+
+def test_sequence_retimes_and_composes():
+    events = faults.rolling(
+        "server_brownout", targets=(1, 2, 3), t0=20, duration=30,
+        stagger=25, magnitude=0.3)
+    assert [e.t0 for e in events] == [20, 45, 70]
+    assert [e.target for e in events] == [1, 2, 3]
+    prog = _compiled(events)
+    singles = [_compiled((e,)) for e in events]
+    np.testing.assert_allclose(
+        prog.service_scale,
+        np.prod([s.service_scale for s in singles], axis=0), rtol=1e-6)
+    assert prog.has_brownout
+    with pytest.raises(ValueError, match="stagger"):
+        faults.sequence(events[0], t0=0, stagger=-1)
+
+
+def test_cascade_fires_at_detection_time():
+    """The cascade effect's resolved t0 is the trigger's *detection*
+    tick (crash + heartbeat timeout) plus the offset — never earlier."""
+    trig = FaultEvent("proxy_crash", t0=40, duration=60, target=0)
+    casc = faults.CascadeEvent(
+        trigger=trig,
+        effect=FaultEvent("gossip_partition", t0=0, duration=30,
+                          target=0),
+        offset=5)
+    cfg = _cfg(P=4, faults=(casc,))
+    assert cfg.faults == (casc,)  # rides SimConfig next to plain events
+    det = faults.detection_tick(trig, dt_ms=cfg.dt_ms, T=160, m=8, P=4)
+    assert det == 40 + faults.detect_ticks(cfg.dt_ms)
+    resolved = faults.resolve(
+        (casc,), dt_ms=cfg.dt_ms, T=160, m=8, P=4)
+    assert resolved[0] == trig
+    assert resolved[1].t0 == det + 5
+    assert resolved[1].t0 >= det
+    fc = faults.compile_faults(cfg, 160)
+    assert fc.partition[det + 5:det + 35, 0].all()
+    assert not fc.partition[:det + 5].any()
+
+
+def test_cascade_benign_trigger_detected_at_first_active_tick():
+    trig = FaultEvent("server_brownout", t0=25, duration=40, target=1,
+                      magnitude=0.3)
+    assert faults.detection_tick(
+        trig, dt_ms=50.0, T=160, m=8, P=1) == 25
+
+
+def test_zero_length_program_reproduces_golden():
+    """``sequence()`` is ``()`` — and both reproduce the golden engine
+    bit-for-bit (zero-cost-when-off extends to empty programs)."""
+    g = np.load(GOLDEN)
+    assert faults.sequence() == ()
+    cfg = _cfg(middleware=("cache",), faults=faults.sequence())
+    r = simulate(cfg, WL, do_warmup=False)
+    np.testing.assert_array_equal(r.queue_timeline,
+                                  g["midas_cache/queue_timeline"])
+    np.testing.assert_array_equal(r.d_timeline,
+                                  g["midas_cache/d_timeline"])
+
+
 def test_storm_from_pool_calibration():
     class _Pool:
         def backlogs(self):
