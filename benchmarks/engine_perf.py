@@ -6,6 +6,14 @@ Two measurements back DESIGN.md §9 and the README perf quick-look:
   ticks/sec of the wave-scan engine vs the unrolled reference across
   policy × middleware × n_groups × P × fleet — the O(1)-vs-O(G) trace
   contract as a number.
+* ``backends``: the per-hardware-target axis (DESIGN.md §15) — the
+  wave-scan engine with ``route_impl="ref"`` (pure-jnp policies) vs
+  ``route_impl="pallas"`` (the ``midas_route.route_select`` kernel),
+  tagged with the platform (cpu/gpu/tpu) and whether the kernel ran
+  through the Pallas interpreter (off-TPU: a correctness-costed proxy,
+  not a speed claim).  Ref-vs-pallas ticks/sec per engine config.
+* ``kernels``: the ``benchmarks.kernels_bench`` micro-benchmark rows,
+  embedded so the kernel and engine numbers live in one artifact.
 * ``e8_sweep``: the E8 scenario-matrix configuration (full workload
   registry × 8 seeds per policy stack) run by the pre-PR engine — flat
   vmap over ``jnp.repeat``-duplicated grids, Python-unrolled waves, a
@@ -43,6 +51,7 @@ from repro.core import (SimConfig, SweepSpec, hashring, make_workload,
                         run_sweep, workloads)
 from repro.core import policies as policy_lib
 from repro.core import sim as sim_lib
+from repro.kernels import common as kernels_common
 from repro.obs import trace as obs_trace
 from repro.obs import windows
 
@@ -59,7 +68,11 @@ CONFIGS = (
     ("midas_fleet_p8", dict(policy="midas", middleware=("fleet_cache",),
                             fleet_routing=True, P=8, gossip_ms=100.0)),
 )
-SECTIONS = tuple(name for name, _ in CONFIGS) + ("e8_sweep",)
+# configs measured on the backend (route_impl) axis: ≥ 2 per the E10
+# acceptance contract — one pure power-of-d, one full midas stack
+BACKEND_CONFIGS = ("pod_g8", "midas_cache_g8")
+SECTIONS = tuple(name for name, _ in CONFIGS) + (
+    "backends", "kernels", "e8_sweep")
 
 
 def _time_run(fn, *args, label: str = ""):
@@ -116,6 +129,52 @@ def _bench_engine(name: str, overrides: dict) -> dict:
     return row
 
 
+def _bench_backends() -> list:
+    """route_impl="ref" vs "pallas" on the scan engine, per platform.
+
+    Off-TPU the kernel path runs through the Pallas interpreter — the
+    row says so (``interpret: true``), making it a correctness-costed
+    proxy rather than a speed claim; on TPU the same code is the real
+    Mosaic kernel and this axis becomes the hardware scorecard."""
+    wl = make_workload("bursty", T=T_ENGINE, m=M, seed=SEED)
+    cfg_by_name = dict(CONFIGS)
+    rows = []
+    for name in BACKEND_CONFIGS:
+        overrides = cfg_by_name[name]
+        row: dict = {
+            "name": name,
+            "platform": jax.default_backend(),
+            "interpret": kernels_common.interpret_mode(),
+            "impls": {},
+        }
+        for impl in ("ref", "pallas"):
+            cfg = SimConfig(m=M, route_impl=impl, **overrides)
+            st = sim_lib.init_state(cfg)
+            args = (cfg, st, wl.keys, wl.mask, wl.is_write)
+            compile_s, steady_s, (_, outs) = _time_run(
+                sim_lib._run_scan, *args,
+                label=f"backends/{name}/{impl}")
+            q_mean = np.asarray(outs.L, np.float64).mean(axis=1)
+            w = windows.detect(q_mean)
+            wstats = windows.windowed_stats(q_mean, w)
+            row["impls"][impl] = {
+                "compile_s": round(compile_s, 3),
+                "steady_s": round(steady_s, 4),
+                "ticks_per_s": round(T_ENGINE / steady_s),
+                "window": w.to_json(),
+                "stable": {"mean_queue": round(wstats["stable"], 4)},
+            }
+            emit(f"engine_perf/backends/{name}/{impl}", steady_s * 1e6,
+                 f"platform={row['platform']} "
+                 f"interpret={row['interpret']} "
+                 f"ticks/s={T_ENGINE / steady_s:,.0f}")
+        row["pallas_over_ref"] = round(
+            row["impls"]["ref"]["steady_s"]
+            / row["impls"]["pallas"]["steady_s"], 2)
+        rows.append(row)
+    return rows
+
+
 # --------------------------------------------------------------------------
 # The pre-PR sweep engine, reconstructed for the "before" number
 # --------------------------------------------------------------------------
@@ -130,9 +189,11 @@ def _legacy_sweep(cfg: SimConfig, states, tick0, keys, mask, is_write):
     runs both branches as a ``select``, exactly as the pre-PR engine
     compiled."""
     ring = hashring.make_ring(cfg.m, cfg.V)
+    # fc=None: the legacy engine predates the fault registry — without
+    # pinning it the partial would bind the scan carry as fc and crash
     step = functools.partial(
         sim_lib._tick, cfg, ring, policy_lib.get(cfg.policy),
-        sim_lib._middlewares(cfg), sim_lib._controller(cfg))
+        sim_lib._middlewares(cfg), sim_lib._controller(cfg), None)
 
     def one(st, t0, k, mk, w):
         def body(carry, xs):
@@ -219,6 +280,16 @@ def run(opts: Optional[BenchOpts] = None) -> None:
             continue
         doc["engine"].append(_bench_engine(name, overrides))
         art.write(doc)  # incremental: a timeout still leaves an artifact
+
+    # ---- backend (route_impl) axis + kernel micro-bench rows ------------
+    if "backends" in sections:
+        doc["backends"] = _bench_backends()
+        art.write(doc)
+    if "kernels" in sections:
+        from benchmarks import kernels_bench
+
+        doc["kernels"] = kernels_bench.collect()
+        art.write(doc)
 
     # ---- E8 sweep config, before (pre-PR engine) vs after ---------------
     if "e8_sweep" not in sections:

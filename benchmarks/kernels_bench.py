@@ -1,17 +1,31 @@
 """Kernel micro-benchmarks (CPU jnp paths; Pallas timings are TPU-only —
-the interpret-mode run here is a correctness-costed proxy, noted as such)."""
+the interpret-mode runs here are correctness-costed proxies, noted as
+such).  ``collect()`` returns the rows so E10 (benchmarks.engine_perf)
+can embed the kernel numbers in ``BENCH_engine.json`` next to the
+engine backend axis."""
 from __future__ import annotations
+
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timed
+from repro.kernels import common as kernels_common
 from repro.kernels.flash_attention import ref as fa_ref
-from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.kernels.midas_route import kernel as mr_kernel
 from repro.kernels.midas_route import ref as mr_ref
+from repro.kernels.ssm_scan import ops as ssm_ops
 
 
-def run() -> None:
+def collect() -> List[dict]:
+    rows: List[dict] = []
+
+    def add(name: str, us: float, note: str) -> None:
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "note": note})
+        emit(name, us, note)
+
     key = jax.random.PRNGKey(0)
     B, S, H, KV, D = 1, 1024, 8, 2, 64
     q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
@@ -20,7 +34,7 @@ def run() -> None:
     mha = jax.jit(lambda q, k, v: fa_ref.mha(q, k, v))
     _, us = timed(lambda: jax.block_until_ready(mha(q, k, v)), repeat=3)
     flops = 4 * B * S * S * H * D
-    emit("kernel/attention_ref_cpu", us, f"gflops={flops / us / 1e3:.1f}")
+    add("kernel/attention_ref_cpu", us, f"gflops={flops / us / 1e3:.1f}")
 
     Bt, S2, DI, ST = 2, 1024, 256, 16
     x = jax.random.normal(key, (Bt, S2, DI))
@@ -34,13 +48,52 @@ def run() -> None:
                                                       impl=impl))
         _, us = timed(lambda: jax.block_until_ready(
             f(x, dt, A, Bm, Cm, Dm)[0]), repeat=3)
-        emit(f"kernel/ssm_{impl}", us, f"S={S2};DI={DI}")
+        add(f"kernel/ssm_{impl}", us, f"S={S2};DI={DI}")
 
+    # ---- midas_route: MoE dispatch, both variants, ref vs kernel --------
     T, E, kk = 4096, 128, 8
     logits = jax.random.normal(key, (T, E))
     load = jnp.abs(jax.random.normal(key, (E,))) * 3
-    f = jax.jit(lambda l, ld: mr_ref.midas_dispatch(l, ld, kk, 4,
-                                                    f_max=1.0))
-    _, us = timed(lambda: jax.block_until_ready(f(logits, load)[0]),
-                  repeat=3)
-    emit("kernel/midas_route_ref", us, f"T={T};E={E};k={kk}")
+    interp = kernels_common.interpret_mode()
+    proxy = ";interpret-proxy" if interp else ""
+    for fmax, tag in ((1.0, "margin"), (0.25, "fmax_capped")):
+        f = jax.jit(lambda l, ld, fm=fmax: mr_ref.midas_dispatch(
+            l, ld, kk, 4, f_max=fm))
+        _, us = timed(lambda: jax.block_until_ready(f(logits, load)[0]),
+                      repeat=3)
+        add(f"kernel/midas_route_ref_{tag}", us, f"T={T};E={E};k={kk}")
+        g = jax.jit(lambda l, ld, fm=fmax: mr_kernel.midas_dispatch(
+            l, ld, kk, 4, f_max=fm, interpret=interp))
+        _, us = timed(lambda: jax.block_until_ready(g(logits, load)[0]),
+                      repeat=3)
+        add(f"kernel/midas_route_pallas_{tag}", us,
+            f"T={T};E={E};k={kk}{proxy}")
+
+    # ---- route_select: the engine wave-routing core ---------------------
+    R, m, d_max = 4096, 64, 4
+    ks = jax.random.split(key, 3)
+    feas = jax.random.randint(ks[0], (R, d_max), 0, m, jnp.int32)
+    lview = jnp.abs(jax.random.normal(ks[1], (m,))) * 3.0
+    sampled = jnp.ones((R, d_max), jnp.int32)
+    tie = jax.random.uniform(ks[2], (R, d_max)) * 1e-3
+
+    def _jnp_route(feas, lview, sampled, tie):
+        loadv = jnp.where(sampled != 0, lview[feas], jnp.inf)
+        best = jnp.argmin(loadv + tie, axis=1)
+        return jnp.take_along_axis(feas, best[:, None], axis=1)[:, 0]
+
+    f = jax.jit(_jnp_route)
+    _, us = timed(lambda: jax.block_until_ready(
+        f(feas, lview, sampled, tie)), repeat=3)
+    add("kernel/route_select_ref", us, f"R={R};m={m};d={d_max}")
+    scal = jnp.zeros((1, 4), jnp.float32)
+    g = jax.jit(lambda *a: mr_kernel.route_select(
+        *a, mode="power_of_d", interpret=interp))
+    _, us = timed(lambda: jax.block_until_ready(
+        g(feas, lview, lview, sampled, tie, scal)[0]), repeat=3)
+    add("kernel/route_select_pallas", us, f"R={R};m={m};d={d_max}{proxy}")
+    return rows
+
+
+def run() -> None:
+    collect()

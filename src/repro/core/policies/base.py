@@ -60,6 +60,11 @@ class RouteContext(NamedTuple):
     rng: jnp.ndarray  # per-wave PRNG key
     m: int  # static: number of servers
     fixed_d: int  # static: d for non-adaptive power-of-d
+    # static: resolved routing implementation for this trace — "ref"
+    # (pure-jnp policy expressions, the golden path) or "pallas" (the
+    # midas_route.route_select kernel; bit-parity contract, DESIGN.md
+    # §15).  Policies without a kernel branch simply ignore it.
+    route_impl: str = "ref"
 
     @property
     def primary(self) -> jnp.ndarray:

@@ -20,6 +20,7 @@ from repro.core.policies.base import (
     register,
     steering_dv,
 )
+from repro.kernels.midas_route import ops as route_ops
 
 C_LOAD = 1.25  # CHBL capacity factor: cap = c * (mean load + 1)
 
@@ -29,15 +30,33 @@ def route_bounded_load(
     L_view: jnp.ndarray,
     mask: jnp.ndarray,
     c: float = C_LOAD,
+    impl: str = "ref",
 ) -> jnp.ndarray:
-    """First feasible successor under the load cap; primary when it fits."""
+    """First feasible successor under the load cap; primary when it fits.
+
+    The cap is a mean over the full (m,) view, so it is computed here
+    (outside any token tile) and handed to the kernel as a scalar — the
+    same value both impls compare against, keeping parity bitwise.
+    """
     cap = c * (jnp.mean(L_view) + 1.0)
-    Lf = L_view[feas]  # (R, d_max)
-    under = Lf <= cap
-    first_under = jnp.argmax(under, axis=1)  # first True slot
-    least_loaded = jnp.argmin(Lf, axis=1)  # fallback: all over cap
-    slot = jnp.where(jnp.any(under, axis=1), first_under, least_loaded)
-    assign = jnp.take_along_axis(feas, slot[:, None], axis=1)[:, 0]
+    if impl == "pallas":
+        z = jnp.zeros((), jnp.float32)
+        assign, _ = route_ops.route_waves(
+            feas,
+            L_view,
+            L_view,
+            jnp.zeros(feas.shape, jnp.int32),
+            jnp.zeros(feas.shape, jnp.float32),
+            jnp.stack([z, z, jnp.asarray(cap, jnp.float32), z]),
+            mode="chbl",
+        )
+    else:
+        Lf = L_view[feas]  # (R, d_max)
+        under = Lf <= cap
+        first_under = jnp.argmax(under, axis=1)  # first True slot
+        least_loaded = jnp.argmin(Lf, axis=1)  # fallback: all over cap
+        slot = jnp.where(jnp.any(under, axis=1), first_under, least_loaded)
+        assign = jnp.take_along_axis(feas, slot[:, None], axis=1)[:, 0]
     return jnp.where(mask, assign, -1)
 
 
@@ -46,7 +65,9 @@ class BoundedLoadHash(Policy):
     """Consistent hashing with bounded loads (cap = 1.25 * (mean + 1))."""
 
     def route(self, state, ctx):
-        assign = route_bounded_load(ctx.feas, ctx.L_view, ctx.mask)
+        assign = route_bounded_load(
+            ctx.feas, ctx.L_view, ctx.mask, impl=ctx.route_impl
+        )
         moved = ctx.mask & (assign != ctx.primary)
         z = jnp.zeros((), jnp.float32)
         return state, assign, RouteStats(

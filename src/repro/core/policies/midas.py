@@ -24,6 +24,7 @@ from repro.core.policies.base import (
     sample_candidates,
     steering_dv,
 )
+from repro.kernels.midas_route import ops as route_ops
 
 
 class MidasState(NamedTuple):
@@ -64,24 +65,48 @@ def route_midas(
     now_ms,
     pin_c_ms: float,
     w_ticks: int,
+    impl: str = "ref",
 ) -> Tuple[MidasState, jnp.ndarray, MidasTickStats]:
-    """Full MIDAS routing for one request batch (Alg. 1 lines 36–47)."""
+    """Full MIDAS routing for one request batch (Alg. 1 lines 36–47).
+
+    The margin-eligibility + tie-broken argmin core runs either as the
+    jnp expression below or, with ``impl="pallas"``, as the
+    ``route_select`` kernel — fed the SAME host-drawn sampling mask and
+    tie scores, so the two are bitwise identical.  Pins, the leaky
+    bucket, and the window histories are sequential scalar state and
+    stay jnp either way.
+    """
     primary = feas[:, 0]
     sampled = sample_candidates(rng, feas, d)
     sampled = sampled.at[:, 0].set(False)  # candidates exclude primary
-
-    Lp = L_view[primary][:, None]
-    p50p = p50_view[primary][:, None]
-    ok = (
-        sampled
-        & (L_view[feas] <= Lp - delta_l)
-        & (p50_view[feas] <= p50p - delta_t)
-    )  # eligibility per candidate
-    load = jnp.where(ok, L_view[feas], jnp.inf)
     tie = jax.random.uniform(jax.random.fold_in(rng, 2), feas.shape) * 1e-3
-    best_slot = jnp.argmin(load + tie, axis=1)
-    best = jnp.take_along_axis(feas, best_slot[:, None], axis=1)[:, 0]
-    has_candidate = jnp.any(ok, axis=1) & mask
+
+    if impl == "pallas":
+        z = jnp.zeros((), jnp.float32)
+        scalars = jnp.stack(
+            [
+                jnp.asarray(delta_l, jnp.float32),
+                jnp.asarray(delta_t, jnp.float32),
+                z,
+                z,
+            ]
+        )
+        best, ok_any = route_ops.route_waves(
+            feas, L_view, p50_view, sampled, tie, scalars, mode="midas"
+        )
+        has_candidate = ok_any & mask
+    else:
+        Lp = L_view[primary][:, None]
+        p50p = p50_view[primary][:, None]
+        ok = (
+            sampled
+            & (L_view[feas] <= Lp - delta_l)
+            & (p50_view[feas] <= p50p - delta_t)
+        )  # eligibility per candidate
+        load = jnp.where(ok, L_view[feas], jnp.inf)
+        best_slot = jnp.argmin(load + tie, axis=1)
+        best = jnp.take_along_axis(feas, best_slot[:, None], axis=1)[:, 0]
+        has_candidate = jnp.any(ok, axis=1) & mask
 
     # honor active pins: pinned keys go to their pinned server, no steering
     pinned = (
@@ -158,6 +183,7 @@ class Midas(Policy):
             ctx.now_ms,
             k.pin_ms,
             state.steer_hist.shape[0],
+            impl=ctx.route_impl,
         )
         return state, assign, RouteStats(
             steered=stats.steered,

@@ -12,6 +12,7 @@ from repro.core.policies.base import (
     sample_candidates,
     steering_dv,
 )
+from repro.kernels.midas_route import ops as route_ops
 
 
 def route_power_of_d(
@@ -20,14 +21,26 @@ def route_power_of_d(
     L_view: jnp.ndarray,
     mask: jnp.ndarray,
     d,
+    impl: str = "ref",
 ) -> jnp.ndarray:
-    """Pure JSQ(d) within the feasible set (paper §VI eval policy)."""
+    """Pure JSQ(d) within the feasible set (paper §VI eval policy).
+
+    The sampling mask and tie-break draws are made here for BOTH impls,
+    so the Pallas branch consumes the exact same randomness as the jnp
+    expression — bit-for-bit parity, not distributional equivalence.
+    """
     sampled = sample_candidates(rng, feas, d)
-    load = jnp.where(sampled, L_view[feas], jnp.inf)
     # random tie-break
     tie = jax.random.uniform(jax.random.fold_in(rng, 1), feas.shape) * 1e-3
-    best = jnp.argmin(load + tie, axis=1)
-    assign = jnp.take_along_axis(feas, best[:, None], axis=1)[:, 0]
+    if impl == "pallas":
+        assign, _ = route_ops.route_waves(
+            feas, L_view, L_view, sampled, tie,
+            jnp.zeros((4,), jnp.float32), mode="power_of_d",
+        )
+    else:
+        load = jnp.where(sampled, L_view[feas], jnp.inf)
+        best = jnp.argmin(load + tie, axis=1)
+        assign = jnp.take_along_axis(feas, best[:, None], axis=1)[:, 0]
     return jnp.where(mask, assign, -1)
 
 
@@ -37,7 +50,12 @@ class PowerOfD(Policy):
 
     def route(self, state, ctx):
         assign = route_power_of_d(
-            ctx.rng, ctx.feas, ctx.L_view, ctx.mask, ctx.fixed_d
+            ctx.rng,
+            ctx.feas,
+            ctx.L_view,
+            ctx.mask,
+            ctx.fixed_d,
+            impl=ctx.route_impl,
         )
         z = jnp.zeros((), jnp.float32)
         return state, assign, RouteStats(

@@ -50,6 +50,7 @@ from repro.core import registry as registry_lib
 from repro.core.controllers.base import Knobs, Signals
 from repro.core.policies.base import RouteContext, RouteStats
 from repro.core.workloads import Workload
+from repro.kernels import common as kernels_common
 from repro.obs import trace as obs_trace
 
 # Snapshot of the registry at import time; prefer policies.available().
@@ -100,6 +101,12 @@ class SimConfig:
     # pre-scan semantics, O(G) trace size) — parity tests and the E10
     # "before" baseline; production always uses the wave scan
     unroll_waves: bool = False
+    # wave-routing implementation (DESIGN.md §15): "auto" resolves per
+    # backend (Pallas iff TPU, REPRO_KERNEL_IMPL override), "ref" pins
+    # the pure-jnp policy expressions (the golden-parity path on CPU),
+    # "pallas" forces the midas_route.route_select kernel (interpret
+    # mode off-TPU) — bit-for-bit with "ref" by contract.
+    route_impl: str = "auto"
     seed: int = 0
 
     def __post_init__(self):
@@ -132,6 +139,9 @@ class SimConfig:
             )
         registry_lib.validate_choice(
             self.cache_mode, "cache_mode", cache_lib.MODES
+        )
+        registry_lib.validate_choice(
+            self.route_impl, "route_impl", kernels_common.ROUTE_IMPLS
         )
         if self.gossip_ms < 0:
             raise ValueError(
@@ -549,6 +559,7 @@ def _route_waves_scan(
     """
     G = keysg.shape[0]
     rngs = jax.vmap(lambda g: jax.random.fold_in(r_route, g))(jnp.arange(G))
+    impl = kernels_common.resolve_route_impl(cfg.route_impl)
 
     def wave(carry, xs):
         _WAVE_TRACES[0] += 1
@@ -570,6 +581,7 @@ def _route_waves_scan(
             rng=rng,
             m=cfg.m,
             fixed_d=cfg.fixed_d,
+            route_impl=impl,
         )
         ps, assign, st = policy.route(ps, ctx)
         counts = _wave_counts(cfg.m, mk, assign)
@@ -613,6 +625,7 @@ def _route_waves_unrolled(
     ps = state.policy
     arrivals = jnp.zeros((cfg.m,), jnp.float32)
     stats = RouteStats.zeros()
+    impl = kernels_common.resolve_route_impl(cfg.route_impl)
     member_aware = fc is not None and fc.has_remap
     for g in range(G):
         if cfg.fleet_routing:
@@ -637,6 +650,7 @@ def _route_waves_unrolled(
             rng=jax.random.fold_in(r_route, g),
             m=cfg.m,
             fixed_d=cfg.fixed_d,
+            route_impl=impl,
         )
         ps, assign, st = policy.route(ps, ctx)
         arrivals = arrivals + _wave_counts(cfg.m, maskg[g], assign)

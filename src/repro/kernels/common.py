@@ -5,6 +5,7 @@ validated on CPU in interpret mode by the test suite.  Model code goes
 through ops.py wrappers, which pick the implementation per platform so the
 whole framework runs end-to-end on CPU unchanged.
 """
+
 from __future__ import annotations
 
 import os
@@ -21,3 +22,15 @@ def default_impl() -> str:
 
 def interpret_mode() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# choices for SimConfig.route_impl — "auto" defers to default_impl()
+# (REPRO_KERNEL_IMPL override, else Pallas iff a TPU backend is present)
+ROUTE_IMPLS = ("auto", "ref", "pallas")
+
+
+def resolve_route_impl(name: str) -> str:
+    """Resolve a SimConfig.route_impl choice to a concrete "ref"/"pallas"."""
+    if name == "auto":
+        return default_impl()
+    return name

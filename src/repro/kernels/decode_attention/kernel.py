@@ -7,6 +7,7 @@ are processed together as a (G, D) tile — G·D is MXU-aligned for all
 assigned archs.  The position bound arrives via scalar prefetch (SMEM) so
 block masking needs no HBM traffic.
 """
+
 from __future__ import annotations
 
 import functools
@@ -16,11 +17,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -2.0 ** 30
+NEG_INF = -2.0**30
 
 
-def _body(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-          scale: float, window: int, softcap: float, bk: int, G: int):
+def _body(
+    pos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    window: int,
+    softcap: float,
+    bk: int,
+    G: int,
+):
     ik = pl.program_id(2)
     nk = pl.num_programs(2)
     b = pl.program_id(0)
@@ -32,12 +47,17 @@ def _body(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     pos = pos_ref[b]
-    q = q_ref[0, 0, :, :].astype(jnp.float32)           # (G, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bk, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bk, D)
+    q = q_ref[0, 0, :, :].astype(jnp.float32)  # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    s = jax.lax.dot_general(
+        q,
+        k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * scale
     if softcap > 0.0:
         s = softcap * jnp.tanh(s / softcap)
     kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
@@ -51,9 +71,13 @@ def _body(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     alpha = jnp.exp(m_prev - m_cur)
     p = jnp.exp(s - m_cur[:, None])
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                          preferred_element_type=jnp.float32))
+    pv = jax.lax.dot_general(
+        p,
+        v,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
     m_ref[...] = m_cur
 
     @pl.when(ik == nk - 1)
@@ -62,11 +86,21 @@ def _body(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_k",
-                                             "interpret"))
-def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
-                     softcap: float = 0.0, block_k: int = 1024,
-                     interpret: bool = False):
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_k", "interpret"),
+)
+def decode_attention(
+    q,
+    k_cache,
+    v_cache,
+    pos,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_k: int = 1024,
+    interpret: bool = False,
+):
     """q: (B, H, D); caches: (B, S, KV, D); pos: (B,) -> (B, H, D)."""
     B, H, D = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
@@ -74,10 +108,16 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
     bk = min(block_k, S)
     assert S % bk == 0, (S, bk)
     qg = q.reshape(B, KV, G, D)
-    scale = 1.0 / (D ** 0.5)
+    scale = 1.0 / (D**0.5)
 
-    kernel = functools.partial(_body, scale=scale, window=window,
-                               softcap=softcap, bk=bk, G=G)
+    kernel = functools.partial(
+        _body,
+        scale=scale,
+        window=window,
+        softcap=softcap,
+        bk=bk,
+        G=G,
+    )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, KV, S // bk),
@@ -86,8 +126,10 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
             pl.BlockSpec((1, bk, 1, D), lambda b, h, ik, pos: (b, ik, h, 0)),
             pl.BlockSpec((1, bk, 1, D), lambda b, h, ik, pos: (b, ik, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D),
-                               lambda b, h, ik, pos: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec(
+            (1, 1, G, D),
+            lambda b, h, ik, pos: (b, h, 0, 0),
+        ),
         scratch_shapes=[
             pltpu.VMEM((G, D), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),

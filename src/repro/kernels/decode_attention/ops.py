@@ -1,4 +1,5 @@
 """Jit'd public wrapper for single-token KV-cache attention."""
+
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,15 +8,34 @@ from repro.kernels import common
 from repro.kernels.decode_attention import ref
 
 
-def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
-                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
-                     window: int = 0, softcap: float = 0.0,
-                     impl: str | None = None) -> jnp.ndarray:
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    impl: str | None = None,
+) -> jnp.ndarray:
     impl = impl or common.default_impl()
     if impl == "ref":
-        return ref.decode_attention(q, k_cache, v_cache, pos, window=window,
-                                    softcap=softcap)
+        return ref.decode_attention(
+            q,
+            k_cache,
+            v_cache,
+            pos,
+            window=window,
+            softcap=softcap,
+        )
     from repro.kernels.decode_attention import kernel
-    return kernel.decode_attention(q, k_cache, v_cache, pos, window=window,
-                                   softcap=softcap,
-                                   interpret=common.interpret_mode())
+
+    return kernel.decode_attention(
+        q,
+        k_cache,
+        v_cache,
+        pos,
+        window=window,
+        softcap=softcap,
+        interpret=common.interpret_mode(),
+    )

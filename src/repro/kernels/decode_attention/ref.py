@@ -1,24 +1,34 @@
 """Pure-jnp oracle for single-token KV-cache attention (GQA, windowed)."""
+
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -2.0 ** 30
+NEG_INF = -2.0**30
 
 
-def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
-                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
-                     window: int = 0, softcap: float = 0.0) -> jnp.ndarray:
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
     """q: (B, H, D); caches: (B, S, KV, D); pos: (B,) index of the newest
     token (attends to cache[0..pos] inclusive)."""
     B, H, D = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, D)
-    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
-                        k_cache.astype(jnp.float32)) / jnp.sqrt(D).astype(
-        jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs",
+        qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    )
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
     if softcap > 0.0:
         logits = softcap * jnp.tanh(logits / softcap)
     si = jnp.arange(S)[None, :]

@@ -14,6 +14,7 @@ MXU alignment: bq/bk default 512 and are clamped to multiples of 128 when
 the sequence allows; head_dim is zero-padded to a lane multiple by the
 caller if needed (all assigned archs have D in {64, 128, 256}).
 """
+
 from __future__ import annotations
 
 import functools
@@ -23,12 +24,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -2.0 ** 30
+NEG_INF = -2.0**30
 
 
-def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-          scale: float, causal: bool, window: int, softcap: float,
-          bq: int, bk: int):
+def _body(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    acc_ref,
+    m_ref,
+    l_ref,
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+    bq: int,
+    bk: int,
+):
     ik = pl.program_id(3)
     nk = pl.num_programs(3)
 
@@ -38,12 +52,17 @@ def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, D)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, D)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, D)
+    q = q_ref[0, :, 0, :].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
+    s = jax.lax.dot_general(
+        q,
+        k,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * scale
     if softcap > 0.0:
         s = softcap * jnp.tanh(s / softcap)
 
@@ -62,9 +81,13 @@ def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     alpha = jnp.exp(m_prev - m_cur)
     p = jnp.exp(s - m_cur[:, None])
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-    acc_ref[...] = (acc_ref[...] * alpha[:, None]
-                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                          preferred_element_type=jnp.float32))
+    pv = jax.lax.dot_general(
+        p,
+        v,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
     m_ref[...] = m_cur
 
     @pl.when(ik == nk - 1)
@@ -73,12 +96,29 @@ def _body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
-                                             "block_q", "block_k",
-                                             "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    softcap: float = 0.0, block_q: int = 512,
-                    block_k: int = 512, interpret: bool = False):
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal",
+        "window",
+        "softcap",
+        "block_q",
+        "block_k",
+        "interpret",
+    ),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+):
     """q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D)."""
     B, S, H, D = q.shape
     KV = k.shape[2]
@@ -87,22 +127,35 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     bk = min(block_k, S)
     assert S % bq == 0 and S % bk == 0, (S, bq, bk)
     grid = (B, H, S // bq, S // bk)
-    scale = 1.0 / (D ** 0.5)
+    scale = 1.0 / (D**0.5)
 
-    kernel = functools.partial(_body, scale=scale, causal=causal,
-                               window=window, softcap=softcap, bq=bq, bk=bk)
+    kernel = functools.partial(
+        _body,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        bq=bq,
+        bk=bk,
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
-            pl.BlockSpec((1, bk, 1, D),
-                         lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
-            pl.BlockSpec((1, bk, 1, D),
-                         lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+            pl.BlockSpec(
+                (1, bk, 1, D),
+                lambda b, h, iq, ik, G=G: (b, ik, h // G, 0),
+            ),
+            pl.BlockSpec(
+                (1, bk, 1, D),
+                lambda b, h, iq, ik, G=G: (b, ik, h // G, 0),
+            ),
         ],
-        out_specs=pl.BlockSpec((1, bq, 1, D),
-                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_specs=pl.BlockSpec(
+            (1, bq, 1, D),
+            lambda b, h, iq, ik: (b, iq, h, 0),
+        ),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, D), jnp.float32),

@@ -1,4 +1,5 @@
 """Jit'd public wrapper for fused attention."""
+
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,18 +8,37 @@ from repro.kernels import common
 from repro.kernels.flash_attention import ref
 
 
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True, window: int = 0,
-                    softcap: float = 0.0, impl: str | None = None
-                    ) -> jnp.ndarray:
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    impl: str | None = None,
+) -> jnp.ndarray:
     """Fused attention.  q: (B,S,H,D); k,v: (B,S,KV,D).  On TPU this lowers
     to the Pallas flash kernel; elsewhere the jnp reference is used (the
     kernel itself is validated in interpret mode by tests)."""
     impl = impl or common.default_impl()
     if impl == "ref":
-        return ref.mha(q, k, v, causal=causal, window=window,
-                       softcap=softcap)
+        return ref.mha(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            softcap=softcap,
+        )
     from repro.kernels.flash_attention import kernel
-    return kernel.flash_attention(q, k, v, causal=causal, window=window,
-                                  softcap=softcap,
-                                  interpret=common.interpret_mode())
+
+    return kernel.flash_attention(
+        q,
+        k,
+        v,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        interpret=common.interpret_mode(),
+    )

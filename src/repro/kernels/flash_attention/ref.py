@@ -1,24 +1,34 @@
 """Pure-jnp oracle for fused attention (causal / sliding-window / softcap,
 GQA).  Numerics: fp32 logits + softmax, output cast back to input dtype."""
+
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-NEG_INF = -2.0 ** 30
+NEG_INF = -2.0**30
 
 
-def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-        causal: bool = True, window: int = 0,
-        softcap: float = 0.0) -> jnp.ndarray:
+def mha(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
     """q: (B, S, H, D); k, v: (B, S, KV, D) with H % KV == 0."""
     B, S, H, D = q.shape
     KV = k.shape[2]
     G = H // KV
     qg = q.reshape(B, S, KV, G, D)
-    logits = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
-                        k.astype(jnp.float32)) / jnp.sqrt(D).astype(
-        jnp.float32)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst",
+        qg.astype(jnp.float32),
+        k.astype(jnp.float32),
+    )
+    logits = logits / jnp.sqrt(D).astype(jnp.float32)
     if softcap > 0.0:
         logits = softcap * jnp.tanh(logits / softcap)
     si = jnp.arange(S)[:, None]

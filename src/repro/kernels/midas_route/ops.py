@@ -1,5 +1,8 @@
-"""Public wrapper for MIDAS MoE dispatch."""
+"""Public wrappers for MIDAS routing: MoE dispatch + engine wave routing."""
+
 from __future__ import annotations
+
+import warnings
 
 import jax.numpy as jnp
 
@@ -9,18 +12,110 @@ from repro.kernels.midas_route import ref
 topk_dispatch = ref.topk_dispatch
 expert_load = ref.expert_load
 
+_DECLINED_WARNED = False
 
-def midas_dispatch(gate_logits: jnp.ndarray, load: jnp.ndarray, k: int,
-                   d: int, *, delta_l: float = 2.0, gate_slack: float = 1.0,
-                   f_max: float = 0.25, impl: str | None = None):
+
+def _warn_declined(reason: str) -> None:
+    """One-time warning when impl="pallas" was requested but declined, so a
+    benchmark run can't quietly measure the reference path."""
+    global _DECLINED_WARNED
+    if _DECLINED_WARNED:
+        return
+    _DECLINED_WARNED = True
+    msg = f"midas_dispatch: impl='pallas' requested but declined ({reason})"
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+    try:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.instant("kernel.pallas_declined", reason=reason)
+    except Exception:
+        pass
+
+
+def midas_dispatch(
+    gate_logits: jnp.ndarray,
+    load: jnp.ndarray,
+    k: int,
+    d: int,
+    *,
+    delta_l: float = 2.0,
+    gate_slack: float = 1.0,
+    f_max: float = 1.0,
+    impl: str | None = None,
+):
+    """MoE expert dispatch; default ``f_max=1.0`` matches ``ref`` and
+    ``kernel`` (one shared default across all three layers).
+
+    The Pallas kernel now covers BOTH variants — margin-governed
+    (``f_max >= 1``, single pass) and f_max-capped (``f_max < 1``,
+    two-pass grid with the cross-tile quantile between passes) — so an
+    ``impl="pallas"`` request is only declined when the kernel has no
+    work to do (``d_eff <= 0`` collapses to plain top-k), and that
+    decline is surfaced once via ``warnings.warn`` + an obs trace event.
+    """
     impl = impl or common.default_impl()
-    # the Pallas kernel implements the margin-governed variant; global
-    # quantile caps (f_max < 1) need a cross-tile reduction and stay on the
-    # reference path (see kernel.py docstring)
-    if impl == "ref" or f_max < 1.0:
-        return ref.midas_dispatch(gate_logits, load, k, d, delta_l=delta_l,
-                                  gate_slack=gate_slack, f_max=f_max)
+    if impl == "ref":
+        return ref.midas_dispatch(
+            gate_logits,
+            load,
+            k,
+            d,
+            delta_l=delta_l,
+            gate_slack=gate_slack,
+            f_max=f_max,
+        )
+    E = gate_logits.shape[-1]
+    if min(d, E - k) <= 0:
+        _warn_declined(f"d_eff <= 0 for E={E}, k={k}, d={d}; plain top-k")
+        return ref.midas_dispatch(
+            gate_logits,
+            load,
+            k,
+            d,
+            delta_l=delta_l,
+            gate_slack=gate_slack,
+            f_max=f_max,
+        )
     from repro.kernels.midas_route import kernel
-    return kernel.midas_dispatch(gate_logits, load, k, d, delta_l=delta_l,
-                                 gate_slack=gate_slack, f_max=f_max,
-                                 interpret=common.interpret_mode())
+
+    return kernel.midas_dispatch(
+        gate_logits,
+        load,
+        k,
+        d,
+        delta_l=delta_l,
+        gate_slack=gate_slack,
+        f_max=f_max,
+        interpret=common.interpret_mode(),
+    )
+
+
+def route_waves(feas, load, p50, sampled, tie, scalars, *, mode: str):
+    """Batched feasible-set routing for the engine's wave step.
+
+    Accepts any number of leading batch axes on ``feas``/``sampled``/
+    ``tie`` (waves × requests); they are flattened into one request axis
+    for the kernel grid and restored on return.  Policies call this only
+    on their ``route_impl="pallas"`` branch (the ref branch IS the
+    existing jnp expression), so interpret mode simply follows the
+    backend.  See :func:`repro.kernels.midas_route.kernel.route_select`
+    for argument semantics.
+    """
+    from repro.kernels.midas_route import kernel
+
+    lead = feas.shape[:-1]
+    R = 1
+    for s in lead:
+        R *= s
+    d_max = feas.shape[-1]
+    assign, ok_any = kernel.route_select(
+        feas.reshape(R, d_max),
+        load,
+        p50,
+        sampled.reshape(R, d_max),
+        tie.reshape(R, d_max),
+        jnp.asarray(scalars, jnp.float32).reshape(1, 4),
+        mode=mode,
+        interpret=common.interpret_mode(),
+    )
+    return assign.reshape(lead), ok_any.reshape(lead)

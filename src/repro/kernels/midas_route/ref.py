@@ -19,6 +19,7 @@ Mapping (paper -> MoE):
   * f_max leaky bucket -> at most f_max of tokens steered per slot,
                           benefit-ranked
 """
+
 from __future__ import annotations
 
 from typing import Tuple
@@ -27,8 +28,10 @@ import jax
 import jax.numpy as jnp
 
 
-def topk_dispatch(gate_logits: jnp.ndarray, k: int
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def topk_dispatch(
+    gate_logits: jnp.ndarray,
+    k: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Vanilla top-k routing: experts (T, k), weights = softmax over the
     chosen logits."""
     vals, experts = jax.lax.top_k(gate_logits, k)
@@ -36,15 +39,96 @@ def topk_dispatch(gate_logits: jnp.ndarray, k: int
     return experts.astype(jnp.int32), weights
 
 
-def midas_dispatch(gate_logits: jnp.ndarray, load: jnp.ndarray, k: int,
-                   d: int, *, delta_l: float = 2.0, gate_slack: float = 1.0,
-                   f_max: float = 0.25
-                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def steer_from_candidates(
+    cand: jnp.ndarray,
+    vals: jnp.ndarray,
+    load: jnp.ndarray,
+    k: int,
+    *,
+    delta_l: float = 2.0,
+    gate_slack: float = 1.0,
+    f_max: float = 1.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Margin + f_max-capped steering over precomputed top-(k+d) candidates.
+
+    ``cand``/``vals`` are the (T, k+d) gate-ranked candidate ids/logits
+    (slots 0..k-1 primary, k.. the d steering alternates).  Shared by the
+    pure-jnp reference (candidates from ``jax.lax.top_k``) and the Pallas
+    f_max-capped path (candidates from the tiled kernel pass) — sharing
+    the function is what makes their parity bitwise, not approximate.
+    The global f_max quantile is the cross-tile reduction: it ranks the
+    per-token steering benefit over the WHOLE batch, so it runs between
+    the two kernel passes rather than inside a token tile.
+    """
+    d_eff = cand.shape[1] - k
+    loadf = load.astype(jnp.float32)
+
+    chosen = []
+    chosen_vals = []
+    steered_flags = []
+    alt_used = jnp.zeros((cand.shape[0], d_eff), bool)
+    alt_ids = cand[:, k:]  # (T, d)
+    alt_vals = vals[:, k:]
+    for i in range(k):
+        prim = cand[:, i]
+        prim_val = vals[:, i]
+        ok = (
+            ~alt_used
+            & (loadf[alt_ids] <= loadf[prim][:, None] - delta_l)
+            & (alt_vals >= prim_val[:, None] - gate_slack)
+        )
+        alt_load = jnp.where(ok, loadf[alt_ids], jnp.inf)
+        best = jnp.argmin(alt_load, axis=-1)  # (T,)
+        has = jnp.any(ok, axis=-1)
+        benefit = jnp.where(
+            has,
+            loadf[prim] - jnp.min(alt_load, axis=-1),
+            -jnp.inf,
+        )
+        # f_max cap per slot: steer only the most-beneficial fraction
+        if f_max >= 1.0:
+            steer = has & (benefit >= delta_l)
+        elif f_max <= 0.0:
+            steer = jnp.zeros_like(has)
+        else:
+            finite = jnp.where(jnp.isfinite(benefit), benefit, -1e9)
+            q = jnp.quantile(finite, 1.0 - f_max)
+            steer = has & (benefit > jnp.maximum(q, delta_l - 1e-9))
+        alt_best_id = jnp.take_along_axis(alt_ids, best[:, None], axis=1)
+        alt_best_val = jnp.take_along_axis(alt_vals, best[:, None], axis=1)
+        e_i = jnp.where(steer, alt_best_id[:, 0], prim)
+        v_i = jnp.where(steer, alt_best_val[:, 0], prim_val)
+        sel = jnp.arange(d_eff)[None] == best[:, None]
+        alt_used = alt_used | (steer[:, None] & sel)
+        chosen.append(e_i)
+        chosen_vals.append(v_i)
+        steered_flags.append(steer)
+
+    experts = jnp.stack(chosen, axis=1)
+    cv = jnp.stack(chosen_vals, 1).astype(jnp.float32)
+    weights = jax.nn.softmax(cv, axis=-1)
+    steered = jnp.stack(steered_flags, axis=1)
+    return experts, weights, steered
+
+
+def midas_dispatch(
+    gate_logits: jnp.ndarray,
+    load: jnp.ndarray,
+    k: int,
+    d: int,
+    *,
+    delta_l: float = 2.0,
+    gate_slack: float = 1.0,
+    f_max: float = 1.0,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Power-of-d steering over the top-(k+d) gate candidates.
 
     gate_logits: (T, E) fp32; load: (E,) EWMA token share per expert,
     normalized so a balanced system has load == 1 for every expert.
     Returns (experts (T,k) int32, weights (T,k) f32, steered (T,k) bool).
+    The default ``f_max=1.0`` is the margin-governed variant — the same
+    default as the Pallas kernel and the ops wrapper (one shared default,
+    so which path served a call never silently changes the math).
     """
     T, E = gate_logits.shape
     d_eff = min(d, E - k)
@@ -52,55 +136,16 @@ def midas_dispatch(gate_logits: jnp.ndarray, load: jnp.ndarray, k: int,
         e, w = topk_dispatch(gate_logits, k)
         return e, w, jnp.zeros_like(e, dtype=bool)
 
-    vals, cand = jax.lax.top_k(gate_logits, k + d_eff)   # (T, k+d)
-    cand = cand.astype(jnp.int32)
-    loadf = load.astype(jnp.float32)
-
-    chosen = []
-    chosen_vals = []
-    steered_flags = []
-    alt_used = jnp.zeros((T, d_eff), bool)
-    alt_ids = cand[:, k:]                                # (T, d)
-    alt_vals = vals[:, k:]
-    for i in range(k):
-        prim = cand[:, i]
-        prim_val = vals[:, i]
-        ok = (~alt_used
-              & (loadf[alt_ids] <= loadf[prim][:, None] - delta_l)
-              & (alt_vals >= prim_val[:, None] - gate_slack))
-        alt_load = jnp.where(ok, loadf[alt_ids], jnp.inf)
-        best = jnp.argmin(alt_load, axis=-1)             # (T,)
-        has = jnp.any(ok, axis=-1)
-        benefit = jnp.where(
-            has, loadf[prim] - jnp.min(alt_load, axis=-1), -jnp.inf)
-        # f_max cap per slot: steer only the most-beneficial fraction
-        if f_max >= 1.0:
-            steer = has & (benefit >= delta_l)
-        elif f_max <= 0.0:
-            steer = jnp.zeros_like(has)
-        else:
-            q = jnp.quantile(jnp.where(jnp.isfinite(benefit), benefit,
-                                       -1e9), 1.0 - f_max)
-            steer = has & (benefit > jnp.maximum(q, delta_l - 1e-9))
-        e_i = jnp.where(steer,
-                        jnp.take_along_axis(alt_ids, best[:, None],
-                                            axis=1)[:, 0],
-                        prim)
-        v_i = jnp.where(steer,
-                        jnp.take_along_axis(alt_vals, best[:, None],
-                                            axis=1)[:, 0],
-                        prim_val)
-        alt_used = alt_used | (steer[:, None]
-                               & (jnp.arange(d_eff)[None] == best[:, None]))
-        chosen.append(e_i)
-        chosen_vals.append(v_i)
-        steered_flags.append(steer)
-
-    experts = jnp.stack(chosen, axis=1)
-    weights = jax.nn.softmax(jnp.stack(chosen_vals, 1).astype(jnp.float32),
-                             axis=-1)
-    steered = jnp.stack(steered_flags, axis=1)
-    return experts, weights, steered
+    vals, cand = jax.lax.top_k(gate_logits, k + d_eff)  # (T, k+d)
+    return steer_from_candidates(
+        cand.astype(jnp.int32),
+        vals,
+        load,
+        k,
+        delta_l=delta_l,
+        gate_slack=gate_slack,
+        f_max=f_max,
+    )
 
 
 def expert_load(experts: jnp.ndarray, E: int) -> jnp.ndarray:

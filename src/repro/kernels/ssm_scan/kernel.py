@@ -10,6 +10,7 @@ orchestrated by ops.selective_scan's outer ``lax.scan``.
 
 All elementwise math is fp32 (matching the oracle); inputs may be bf16.
 """
+
 from __future__ import annotations
 
 import functools
@@ -20,22 +21,33 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _body(h0_ref, x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, hout_ref,
-          h_ref, *, Q: int):
-    h_ref[...] = h0_ref[0].astype(jnp.float32)          # (tile, ST)
-    A = A_ref[...].astype(jnp.float32)                   # (tile, ST)
+def _body(
+    h0_ref,
+    x_ref,
+    dt_ref,
+    A_ref,
+    B_ref,
+    C_ref,
+    y_ref,
+    hout_ref,
+    h_ref,
+    *,
+    Q: int,
+):
+    h_ref[...] = h0_ref[0].astype(jnp.float32)  # (tile, ST)
+    A = A_ref[...].astype(jnp.float32)  # (tile, ST)
 
     def step(t, _):
-        x_t = x_ref[0, t, :].astype(jnp.float32)         # (tile,)
-        dt_t = dt_ref[0, t, :].astype(jnp.float32)       # (tile,)
-        b_t = B_ref[0, t, :].astype(jnp.float32)         # (ST,)
-        c_t = C_ref[0, t, :].astype(jnp.float32)         # (ST,)
-        da = jnp.exp(dt_t[:, None] * A)                  # (tile, ST)
+        x_t = x_ref[0, t, :].astype(jnp.float32)  # (tile,)
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)  # (tile,)
+        b_t = B_ref[0, t, :].astype(jnp.float32)  # (ST,)
+        c_t = C_ref[0, t, :].astype(jnp.float32)  # (ST,)
+        da = jnp.exp(dt_t[:, None] * A)  # (tile, ST)
         db = dt_t[:, None] * b_t[None, :]
         h = da * h_ref[...] + db * x_t[:, None]
         h_ref[...] = h
-        y_ref[0, t, :] = jnp.sum(h * c_t[None, :], axis=1).astype(
-            y_ref.dtype)
+        yt = jnp.sum(h * c_t[None, :], axis=1)
+        y_ref[0, t, :] = yt.astype(y_ref.dtype)
         return 0
 
     jax.lax.fori_loop(0, Q, step, 0)
@@ -43,8 +55,17 @@ def _body(h0_ref, x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, hout_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def chunk_scan(h0, x, dt, A, B, C, *, tile: int = 512,
-               interpret: bool = False):
+def chunk_scan(
+    h0,
+    x,
+    dt,
+    A,
+    B,
+    C,
+    *,
+    tile: int = 512,
+    interpret: bool = False,
+):
     """One chunk of the selective scan.
 
     h0: (Bt, DI, ST) carry; x, dt: (Bt, Q, DI); A: (DI, ST);
@@ -62,16 +83,16 @@ def chunk_scan(h0, x, dt, A, B, C, *, tile: int = 512,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, tl, ST), lambda b, i: (b, i, 0)),   # h0
-            pl.BlockSpec((1, Q, tl), lambda b, i: (b, 0, i)),    # x
-            pl.BlockSpec((1, Q, tl), lambda b, i: (b, 0, i)),    # dt
-            pl.BlockSpec((tl, ST), lambda b, i: (i, 0)),         # A
-            pl.BlockSpec((1, Q, ST), lambda b, i: (b, 0, 0)),    # B
-            pl.BlockSpec((1, Q, ST), lambda b, i: (b, 0, 0)),    # C
+            pl.BlockSpec((1, tl, ST), lambda b, i: (b, i, 0)),  # h0
+            pl.BlockSpec((1, Q, tl), lambda b, i: (b, 0, i)),  # x
+            pl.BlockSpec((1, Q, tl), lambda b, i: (b, 0, i)),  # dt
+            pl.BlockSpec((tl, ST), lambda b, i: (i, 0)),  # A
+            pl.BlockSpec((1, Q, ST), lambda b, i: (b, 0, 0)),  # B
+            pl.BlockSpec((1, Q, ST), lambda b, i: (b, 0, 0)),  # C
         ],
         out_specs=[
-            pl.BlockSpec((1, Q, tl), lambda b, i: (b, 0, i)),    # y
-            pl.BlockSpec((1, tl, ST), lambda b, i: (b, i, 0)),   # h_out
+            pl.BlockSpec((1, Q, tl), lambda b, i: (b, 0, i)),  # y
+            pl.BlockSpec((1, tl, ST), lambda b, i: (b, i, 0)),  # h_out
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Bt, Q, DI), jnp.float32),

@@ -11,8 +11,8 @@ states, HBM only sees x/dt/B/C tiles and the y output.
 On TPU the inner chunk computation is the Pallas kernel; elsewhere it runs
 as the same algorithm in pure jnp.
 """
-from __future__ import annotations
 
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +25,8 @@ def _chunk_scan(h0, x, dt, A, B, C):
     """Solve the recurrence for one chunk via associative scan.
     x, dt: (Bt, Q, DI); B, C: (Bt, Q, ST); h0: (Bt, DI, ST) carry.
     Returns (y: (Bt, Q, DI) WITHOUT the D·x skip, h_last)."""
-    da = jnp.exp(dt[..., None] * A[None, None])          # (Bt,Q,DI,ST)
-    db = dt[..., None] * B[:, :, None, :]                # (Bt,Q,DI,ST)
+    da = jnp.exp(dt[..., None] * A[None, None])  # (Bt,Q,DI,ST)
+    db = dt[..., None] * B[:, :, None, :]  # (Bt,Q,DI,ST)
     bx = db * x[..., None]
 
     def combine(a, b):
@@ -36,7 +36,7 @@ def _chunk_scan(h0, x, dt, A, B, C):
 
     decays, states = jax.lax.associative_scan(combine, (da, bx), axis=1)
     # fold in the carry: h_t = decays_t * h0 + states_t
-    h_all = decays * h0[:, None] + states                # (Bt,Q,DI,ST)
+    h_all = decays * h0[:, None] + states  # (Bt,Q,DI,ST)
     y = jnp.einsum("bqds,bqs->bqd", h_all, C)
     return y, h_all[:, -1]
 
@@ -54,7 +54,7 @@ def _parallel_scan(x, dt, A, B, C, h0, chunk: int):
     Bs = B.reshape(Bt, n, chunk, -1)
     Cs = C.reshape(Bt, n, chunk, -1)
 
-    da = jnp.exp(dts[..., None] * A[None, None, None])   # (Bt,n,Q,DI,ST)
+    da = jnp.exp(dts[..., None] * A[None, None, None])  # (Bt,n,Q,DI,ST)
     bx = (dts[..., None] * Bs[:, :, :, None, :]) * xs[..., None]
 
     def combine(a, b):
@@ -63,25 +63,34 @@ def _parallel_scan(x, dt, A, B, C, h0, chunk: int):
 
     decays, states = jax.lax.associative_scan(combine, (da, bx), axis=2)
     # chunk summaries -> prefix over chunks (sequential dependency removed)
-    Pc = decays[:, :, -1]                                # (Bt,n,DI,ST)
+    Pc = decays[:, :, -1]  # (Bt,n,DI,ST)
     Sc = states[:, :, -1]
     Pp, Sp = jax.lax.associative_scan(combine, (Pc, Sc), axis=1)
     # initial state entering chunk c: h0 folded through prefix c-1
     Pprev = jnp.concatenate([jnp.ones_like(Pp[:, :1]), Pp[:, :-1]], axis=1)
     Sprev = jnp.concatenate([jnp.zeros_like(Sp[:, :1]), Sp[:, :-1]], axis=1)
-    h_in = Pprev * h0[:, None, :, :] + Sprev             # (Bt,n,DI,ST)
-    h_all = decays * h_in[:, :, None] + states           # (Bt,n,Q,DI,ST)
+    h_in = Pprev * h0[:, None, :, :] + Sprev  # (Bt,n,DI,ST)
+    h_all = decays * h_in[:, :, None] + states  # (Bt,n,Q,DI,ST)
     y = jnp.einsum("bnqds,bnqs->bnqd", h_all, Cs)
     h_final = Pp[:, -1] * h0 + Sp[:, -1]
     return y.reshape(Bt, S, DI), h_final
 
 
-def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
-                   B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
-                   h0: jnp.ndarray | None = None, *, chunk: int = 128,
-                   impl: str | None = None):
+def selective_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    h0: jnp.ndarray | None = None,
+    *,
+    chunk: int = 128,
+    impl: str | None = None,
+):
     """Chunked selective scan; same contract as ref.selective_scan."""
     import os
+
     impl = impl or common.default_impl()
     if os.environ.get("REPRO_SSM_PARALLEL"):
         impl = "parallel"
@@ -101,8 +110,15 @@ def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     Af = A.astype(jnp.float32)
 
     if impl == "parallel":
-        y, h_final = _parallel_scan(xf, dtf, Af, Bf, Cf,
-                                    h0.astype(jnp.float32), chunk)
+        y, h_final = _parallel_scan(
+            xf,
+            dtf,
+            Af,
+            Bf,
+            Cf,
+            h0.astype(jnp.float32),
+            chunk,
+        )
         y = y[:, :S]
         y = y + D.astype(jnp.float32)[None, None] * x.astype(jnp.float32)
         return y.astype(x.dtype), h_final
@@ -110,23 +126,35 @@ def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     def to_chunks(a):
         return jnp.moveaxis(a.reshape(Bt, n, chunk, -1), 1, 0)
 
+    def body_jnp(h, inp):
+        xc, dc, bc, cc = inp
+        y, h2 = _chunk_scan(h, xc, dc, Af, bc, cc)
+        return h2, y
+
+    body = body_jnp
     if impl == "pallas":
         from repro.kernels.ssm_scan import kernel
 
-        def body(h, inp):
+        def body_pallas(h, inp):
             xc, dc, bc, cc = inp
-            y, h2 = kernel.chunk_scan(h, xc, dc, Af, bc, cc,
-                                      interpret=common.interpret_mode())
-            return h2, y
-    else:
-        def body(h, inp):
-            xc, dc, bc, cc = inp
-            y, h2 = _chunk_scan(h, xc, dc, Af, bc, cc)
+            y, h2 = kernel.chunk_scan(
+                h,
+                xc,
+                dc,
+                Af,
+                bc,
+                cc,
+                interpret=common.interpret_mode(),
+            )
             return h2, y
 
+        body = body_pallas
+
     h_final, ys = jax.lax.scan(
-        body, h0.astype(jnp.float32),
-        (to_chunks(xf), to_chunks(dtf), to_chunks(Bf), to_chunks(Cf)))
+        body,
+        h0.astype(jnp.float32),
+        (to_chunks(xf), to_chunks(dtf), to_chunks(Bf), to_chunks(Cf)),
+    )
     y = jnp.moveaxis(ys, 0, 1).reshape(Bt, n * chunk, DI)[:, :S]
     y = y + D.astype(jnp.float32)[None, None] * x.astype(jnp.float32)
     return y.astype(x.dtype), h_final

@@ -4,15 +4,22 @@
     h_t = exp(Δ_t ⊙ A) · h_{t-1} + Δ_t ⊙ B_t · x_t
     y_t = C_t · h_t + D ⊙ x_t
 """
+
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
-                   B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
-                   h0: jnp.ndarray | None = None):
+def selective_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    h0: jnp.ndarray | None = None,
+):
     """x, dt: (Bt, S, DI); A: (DI, ST); B, C: (Bt, S, ST); D: (DI,).
     Returns (y: (Bt, S, DI), h_final: (Bt, DI, ST))."""
     Bt, S, DI = x.shape
@@ -27,15 +34,19 @@ def selective_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
         h0 = jnp.zeros((Bt, DI, ST), jnp.float32)
 
     def step(h, inp):
-        x_t, dt_t, b_t, c_t = inp                     # (Bt,DI),(Bt,DI),(Bt,ST)
-        da = jnp.exp(dt_t[..., None] * Af[None])      # (Bt, DI, ST)
-        db = dt_t[..., None] * b_t[:, None, :]        # (Bt, DI, ST)
+        x_t, dt_t, b_t, c_t = inp  # (Bt,DI),(Bt,DI),(Bt,ST),(Bt,ST)
+        da = jnp.exp(dt_t[..., None] * Af[None])  # (Bt, DI, ST)
+        db = dt_t[..., None] * b_t[:, None, :]  # (Bt, DI, ST)
         h = da * h + db * x_t[..., None]
         y_t = jnp.einsum("bds,bs->bd", h, c_t) + Df[None] * x_t
         return h, y_t
 
-    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
-          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
     h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
 
@@ -44,10 +55,11 @@ def selective_step(x_t, dt_t, A, B_t, C_t, D, h):
     """One decode step.  x_t, dt_t: (Bt, DI); B_t, C_t: (Bt, ST);
     h: (Bt, DI, ST).  Returns (y_t: (Bt, DI), h_new)."""
     Af = A.astype(jnp.float32)
-    da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * Af[None])
-    db = dt_t.astype(jnp.float32)[..., None] * B_t.astype(
-        jnp.float32)[:, None, :]
-    h = da * h + db * x_t.astype(jnp.float32)[..., None]
-    y = (jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
-         + D.astype(jnp.float32)[None] * x_t.astype(jnp.float32))
+    dtf = dt_t.astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * Af[None])
+    db = dtf[..., None] * B_t.astype(jnp.float32)[:, None, :]
+    h = da * h + db * xf[..., None]
+    y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+    y = y + D.astype(jnp.float32)[None] * xf
     return y.astype(x_t.dtype), h

@@ -56,6 +56,42 @@ def test_scan_matches_unrolled_bitwise(n_groups, policy, mw):
     _assert_results_equal(*_pair(cfg))
 
 
+@pytest.mark.parametrize("policy,mw", [
+    ("power_of_d", ()),
+    ("midas", ("cache",)),
+    ("chbl", ()),
+])
+def test_route_impl_pallas_matches_ref_bitwise(policy, mw):
+    """The route_select kernel path (interpret mode on CPU) is bit-for-
+    bit the jnp policy path — the DESIGN.md §15 parity contract on the
+    E8 smoke policies."""
+    cfg = SimConfig(m=8, N=512, policy=policy, middleware=mw,
+                    route_impl="ref")
+    pal = dataclasses.replace(cfg, route_impl="pallas")
+    _assert_results_equal(simulate(cfg, WL, do_warmup=False),
+                          simulate(pal, WL, do_warmup=False))
+
+
+def test_route_impl_validated_eagerly():
+    with pytest.raises(ValueError, match="unknown route_impl"):
+        SimConfig(route_impl="cuda")
+
+
+def test_route_impl_auto_resolves_ref_on_cpu(monkeypatch):
+    """auto == default_impl(): ref on CPU (golden files stay pinned),
+    overridable via REPRO_KERNEL_IMPL."""
+    from repro.kernels import common as kernels_common
+
+    monkeypatch.delenv("REPRO_KERNEL_IMPL", raising=False)
+    assert kernels_common.resolve_route_impl("auto") == \
+        kernels_common.default_impl()
+    if jax.default_backend() != "tpu":
+        assert kernels_common.resolve_route_impl("auto") == "ref"
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
+    assert kernels_common.resolve_route_impl("auto") == "pallas"
+    assert kernels_common.resolve_route_impl("ref") == "ref"
+
+
 @pytest.mark.parametrize("P", [2, 8])
 def test_fleet_routing_scan_matches_unrolled_bitwise(P):
     cfg = SimConfig(m=8, N=512, P=P, policy="midas",

@@ -246,3 +246,185 @@ def test_midas_route_respects_fmax_zero():
     e_van, _ = mr_ref.topk_dispatch(logits, 2)
     assert not bool(s0.any())
     np.testing.assert_array_equal(np.asarray(e0), np.asarray(e_van))
+
+
+def _mr_inputs(T, E, seed=6):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    logits = jax.random.normal(keys[0], (T, E)) * 2.0
+    load = jnp.abs(jax.random.normal(keys[1], (E,))) * 3.0
+    return logits, load
+
+
+MR_FMAX_CASES = [
+    # (T, E, k, d, f_max, tile) — capped variant + edge tiles/padding
+    (256, 16, 4, 2, 0.5, 8),        # tiny tile
+    (256, 16, 4, 2, 0.5, 256),      # one-tile grid
+    (250, 16, 4, 2, 0.25, 128),     # T % tile != 0 (padding path)
+    (37, 8, 2, 2, 0.5, 8),          # padding + tiny tile
+    (512, 128, 8, 4, 0.25, 256),
+    (250, 16, 4, 2, 1.0, 128),      # padding on the margin-only kernel
+]
+
+
+@pytest.mark.parametrize("T,E,k,d,f_max,tile", MR_FMAX_CASES)
+def test_midas_route_fmax_capped_matches_ref(T, E, k, d, f_max, tile):
+    """The f_max-capped two-pass kernel (and the ragged-T padding) must
+    be bit-for-bit against the pure-jnp reference."""
+    logits, load = _mr_inputs(T, E)
+    e_ref, w_ref, s_ref = mr_ref.midas_dispatch(
+        logits, load, k, d, delta_l=2.0, gate_slack=1.0, f_max=f_max)
+    e_k, w_k, s_k = mr_kernel.midas_dispatch(
+        logits, load, k, d, delta_l=2.0, gate_slack=1.0, f_max=f_max,
+        tile=tile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_ref))
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_ref))
+
+
+def test_midas_route_kernel_deff_zero_falls_back():
+    """d_eff <= 0 (k + d spans all experts) collapses to plain top-k on
+    every path — kernel, ref, and the ops wrapper agree."""
+    logits, load = _mr_inputs(128, 4)
+    e_van, w_van = mr_ref.topk_dispatch(logits, 4)
+    for fn in (mr_kernel.midas_dispatch, mr_ref.midas_dispatch):
+        e, w, s = fn(logits, load, 4, 2)
+        np.testing.assert_array_equal(np.asarray(e), np.asarray(e_van))
+        np.testing.assert_allclose(np.asarray(w), np.asarray(w_van),
+                                   rtol=1e-6, atol=1e-6)
+        assert not bool(np.asarray(s).any())
+
+
+def test_midas_route_ops_env_forces_both_directions(monkeypatch):
+    """REPRO_KERNEL_IMPL must force the ops wrapper onto either path —
+    including pallas with f_max < 1, which used to silently decline."""
+    from repro.kernels.midas_route import kernel as kernel_mod
+    from repro.kernels.midas_route import ops as mr_ops
+
+    logits, load = _mr_inputs(64, 8)
+    calls = []
+    real = kernel_mod.midas_dispatch
+
+    def spy(*a, **kw):
+        calls.append(kw)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(kernel_mod, "midas_dispatch", spy)
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "pallas")
+    e_p, w_p, s_p = mr_ops.midas_dispatch(logits, load, 2, 2, f_max=0.5)
+    assert len(calls) == 1  # pallas path taken despite f_max < 1
+
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+    e_r, w_r, s_r = mr_ops.midas_dispatch(logits, load, 2, 2, f_max=0.5)
+    assert len(calls) == 1  # ref forced: kernel not touched again
+    np.testing.assert_array_equal(np.asarray(e_p), np.asarray(e_r))
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+    np.testing.assert_allclose(np.asarray(w_p), np.asarray(w_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_midas_route_ops_warns_once_when_pallas_declined(monkeypatch):
+    """impl='pallas' with no kernel work (d_eff <= 0) is surfaced by a
+    one-time RuntimeWarning, not silently rerouted."""
+    import warnings as warnings_mod
+
+    from repro.kernels.midas_route import ops as mr_ops
+
+    logits, load = _mr_inputs(64, 4)
+    monkeypatch.setattr(mr_ops, "_DECLINED_WARNED", False)
+    with warnings_mod.catch_warnings(record=True) as w:
+        warnings_mod.simplefilter("always")
+        mr_ops.midas_dispatch(logits, load, 4, 2, impl="pallas")
+        mr_ops.midas_dispatch(logits, load, 4, 2, impl="pallas")
+    declined = [x for x in w if "declined" in str(x.message)]
+    assert len(declined) == 1
+
+
+# ---------------------------------------------------------------------------
+# route_select: the engine's wave-routing kernel vs the jnp policies
+# ---------------------------------------------------------------------------
+
+RS_CASES = [
+    # (R, m, d_max, tile) — includes R % tile != 0 (padding)
+    (256, 8, 4, 128),
+    (100, 8, 4, 128),
+    (64, 32, 8, 8),
+    (7, 4, 2, 256),
+]
+
+
+def _rs_inputs(R, m, d_max, seed=11):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    feas = jax.random.randint(keys[0], (R, d_max), 0, m, jnp.int32)
+    load = jnp.abs(jax.random.normal(keys[1], (m,))) * 3.0
+    p50 = jnp.abs(jax.random.normal(keys[2], (m,))) * 50.0
+    rng = keys[3]
+    return feas, load, p50, rng
+
+
+@pytest.mark.parametrize("R,m,d_max,tile", RS_CASES)
+def test_route_select_power_of_d_matches_jnp(R, m, d_max, tile):
+    from repro.core.policies.base import sample_candidates
+
+    feas, load, _, rng = _rs_inputs(R, m, d_max)
+    sampled = sample_candidates(rng, feas, 2)
+    tie = jax.random.uniform(jax.random.fold_in(rng, 1), feas.shape) * 1e-3
+    loadv = jnp.where(sampled, load[feas], jnp.inf)
+    best = jnp.argmin(loadv + tie, axis=1)
+    want = jnp.take_along_axis(feas, best[:, None], axis=1)[:, 0]
+    got, _ = mr_kernel.route_select(
+        feas, load, load, sampled.astype(jnp.int32), tie,
+        jnp.zeros((1, 4), jnp.float32), mode="power_of_d", tile=tile,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("R,m,d_max,tile", RS_CASES)
+def test_route_select_midas_matches_jnp(R, m, d_max, tile):
+    from repro.core.policies.base import sample_candidates
+
+    feas, load, p50, rng = _rs_inputs(R, m, d_max)
+    delta_l, delta_t = 0.5, 10.0
+    sampled = sample_candidates(rng, feas, 3).at[:, 0].set(False)
+    tie = jax.random.uniform(jax.random.fold_in(rng, 2), feas.shape) * 1e-3
+    Lp = load[feas[:, 0]][:, None]
+    p50p = p50[feas[:, 0]][:, None]
+    ok = (sampled & (load[feas] <= Lp - delta_l)
+          & (p50[feas] <= p50p - delta_t))
+    loadv = jnp.where(ok, load[feas], jnp.inf)
+    slot = jnp.argmin(loadv + tie, axis=1)
+    want = jnp.take_along_axis(feas, slot[:, None], axis=1)[:, 0]
+    want_any = jnp.any(ok, axis=1)
+    scal = jnp.asarray([[delta_l, delta_t, 0.0, 0.0]], jnp.float32)
+    got, got_any = mr_kernel.route_select(
+        feas, load, p50, sampled.astype(jnp.int32), tie, scal,
+        mode="midas", tile=tile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_any), np.asarray(want_any))
+
+
+@pytest.mark.parametrize("R,m,d_max,tile", RS_CASES)
+def test_route_select_chbl_matches_jnp(R, m, d_max, tile):
+    feas, load, _, _ = _rs_inputs(R, m, d_max)
+    cap = 1.25 * (jnp.mean(load) + 1.0)
+    Lf = load[feas]
+    under = Lf <= cap
+    slot = jnp.where(jnp.any(under, axis=1), jnp.argmax(under, axis=1),
+                     jnp.argmin(Lf, axis=1))
+    want = jnp.take_along_axis(feas, slot[:, None], axis=1)[:, 0]
+    scal = jnp.stack([jnp.zeros(()), jnp.zeros(()), cap,
+                      jnp.zeros(())]).reshape(1, 4)
+    got, _ = mr_kernel.route_select(
+        feas, load, load, jnp.zeros(feas.shape, jnp.int32),
+        jnp.zeros(feas.shape, jnp.float32), scal, mode="chbl", tile=tile,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_route_select_rejects_unknown_mode():
+    feas, load, _, _ = _rs_inputs(8, 4, 2)
+    with pytest.raises(ValueError, match="unknown route mode"):
+        mr_kernel.route_select(
+            feas, load, load, jnp.zeros(feas.shape, jnp.int32),
+            jnp.zeros(feas.shape, jnp.float32),
+            jnp.zeros((1, 4), jnp.float32), mode="nope", interpret=True)
